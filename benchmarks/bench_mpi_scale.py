@@ -1,0 +1,54 @@
+"""§6.3: distributed ensemble scaling (the 1-billion-ODE MPI demo).
+
+Two parts:
+  * measured: shard_map ensemble solve on the local mesh (1 device here) with
+    increasing N — per-trajectory cost must stay flat (weak scaling within a
+    shard; there are ZERO collectives in the solve, so cross-shard scaling is
+    communication-free by construction).
+  * compiled: reads the dry-run record of the 2^30-trajectory cell on the
+    512-chip mesh and reports its per-device roofline terms (the deployment
+    claim; produced by launch/dryrun.py --ode).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.de_problems import lorenz_ensemble
+from repro.core.api import solve_ensemble
+from repro.launch.mesh import make_local_mesh
+
+from .common import HEADER, bench, row
+
+
+def main() -> None:
+    print(HEADER)
+    mesh = make_local_mesh()
+    for N in (1024, 4096, 16384):
+        ep = lorenz_ensemble(N, dtype=jnp.float32)
+
+        def run():
+            return solve_ensemble(ep, mesh=mesh, shard_axes=("data",),
+                                  ensemble="kernel", adaptive=False,
+                                  dt0=1e-3, t0=0.0, tf=1.0,
+                                  save_every=1000, lane_tile=1024).u_final
+
+        t = bench(jax.jit(run))
+        print(row(f"mpi/local/N={N}", t, f"{N / t:.0f} traj_per_s"))
+
+    for rec_name in ("ode_single", "ode_multi"):
+        path = os.path.join("results", f"{rec_name}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("ok"):
+                print(row(f"mpi/dryrun/{rec_name}", 0.0,
+                          f"devices={rec['n_devices']} "
+                          f"collective_bytes={rec['collective_bytes']}"))
+
+
+if __name__ == "__main__":
+    main()

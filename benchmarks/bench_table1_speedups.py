@@ -1,0 +1,48 @@
+"""Table 1: mean slowdown of each strategy relative to the kernel ensemble,
+fixed vs adaptive time-stepping (kernel = 1.0x by construction).
+
+The paper's Table 1 (GPU): kernel 1.0x, array 48.2x (adaptive) / 377.6x
+(fixed), CPU 22.2x / 110.3x. Our analogue adds the honest eager-dispatch
+array mode (the PyTorch-style per-op launch overhead the paper measures).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.de_problems import lorenz_ensemble
+from repro.core.ensemble import solve_ensemble_local
+
+from .common import HEADER, bench, row
+
+N = 2048
+
+
+def main() -> None:
+    print(HEADER)
+    saveat = jnp.linspace(0.0, 1.0, 5, dtype=jnp.float32)
+    for adaptive in (False, True):
+        tag = "adaptive" if adaptive else "fixed"
+        ep = lorenz_ensemble(N, dtype=jnp.float32)
+
+        def run(ensemble, **kw):
+            return solve_ensemble_local(
+                ep, ensemble=ensemble, t0=0.0, tf=1.0, dt0=1e-3,
+                saveat=saveat if adaptive else None, adaptive=adaptive,
+                rtol=1e-6, atol=1e-6, save_every=250, **kw).u_final
+
+        t_ker = bench(jax.jit(partial(run, "kernel", lane_tile=1024)))
+        t_arr = bench(jax.jit(partial(run, "array")))
+        # eager array: python-driven per-op dispatch (not jittable by design)
+        t_eag = bench(partial(run, "array_eager"), repeats=1)
+        print(row(f"table1/{tag}/kernel", t_ker, "1.0x"))
+        print(row(f"table1/{tag}/array", t_arr, f"{t_arr / t_ker:.1f}x"))
+        print(row(f"table1/{tag}/array_eager", t_eag,
+                  f"{t_eag / t_ker:.1f}x"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""§6.7: dataset interpolation inside the RHS (texture-memory analogue).
+
+Wind-drag bouncing-ball RHS with a 1-D lookup table: gather path vs one-hot
+MXU path vs a no-table control, integrated by the fused kernel ensemble.
+The paper reports 2x vs CPU-interpolation; our structural analogue reports
+the overhead of in-RHS interpolation per mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EnsembleProblem, ODEProblem
+from repro.core.ensemble import solve_ensemble_local
+from repro.core.interp import UniformTable1D, interp1d
+
+from .common import HEADER, bench, row
+
+N = 1024
+
+
+def make_prob(mode):
+    wind = UniformTable1D(0.1 * jnp.sin(0.25 * jnp.arange(64,
+                                                          dtype=jnp.float32)),
+                          0.0, 0.25)
+
+    def rhs(u, p, t):
+        if mode == "none":
+            drag = 0.0
+        else:
+            drag = interp1d(wind, u[0], mode)
+        return jnp.stack([u[1], -9.8 - drag * u[1]])
+
+    return ODEProblem(rhs, jnp.asarray([10.0, 0.0], jnp.float32),
+                      jnp.zeros(1, jnp.float32), (0.0, 1.0),
+                      name=f"drag_{mode}")
+
+
+def main() -> None:
+    print(HEADER)
+    base = None
+    for mode in ("none", "gather", "onehot"):
+        prob = make_prob(mode)
+        ep = EnsembleProblem(prob, N)
+
+        def run():
+            return solve_ensemble_local(ep, ensemble="kernel",
+                                        adaptive=False, dt0=1e-3, t0=0.0,
+                                        tf=1.0, save_every=1000).u_final
+
+        t = bench(jax.jit(run))
+        if mode == "none":
+            base = t
+        print(row(f"texture/{mode}", t, f"{t / base:.2f}x_vs_no_table"))
+
+
+if __name__ == "__main__":
+    main()

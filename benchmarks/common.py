@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: best-of-k wall timing of jitted callables.
+
+Methodology (paper §6.1 analogue): report the BEST of `repeats` timed calls
+after one warmup (compile) call — matching BenchmarkTools.jl's minimum-time
+convention the paper uses. All timings are single-core CPU; they measure the
+*algorithmic structure* claims (array vs kernel), not TPU deployment (that is
+§Roofline's job).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def bench(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Returns best wall-clock seconds per call (post-warmup)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+HEADER = "name,us_per_call,derived"

@@ -1,0 +1,69 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig4,...]``
+Prints ``name,us_per_call,derived`` CSV rows per module, then the roofline
+summary table from the dry-run records (if present).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import traceback
+
+MODULES = [
+    ("fig4", "benchmarks.bench_fig4_crossover"),
+    ("table1", "benchmarks.bench_table1_speedups"),
+    ("fig56", "benchmarks.bench_fig56_vs_vmap"),
+    ("fig7", "benchmarks.bench_fig7_backends"),
+    ("fig9", "benchmarks.bench_fig9_gbm"),
+    ("fig11", "benchmarks.bench_fig11_crn"),
+    ("texture", "benchmarks.bench_texture_interp"),
+    ("mpi", "benchmarks.bench_mpi_scale"),
+]
+
+
+def print_roofline_summary():
+    for tag, results_dir in (("baseline", "results"),
+                             ("optimized", "results_optimized")):
+        path = os.path.join(results_dir, "roofline_all.json")
+        if not os.path.exists(path):
+            print(f"# (no {path} — run repro.launch.roofline)")
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        print(f"\n# ---- roofline summary [{tag}] "
+              "(single-pod; see EXPERIMENTS.md) ----")
+        print("arch,shape,bottleneck,t_compute_s,t_memory_s,t_collective_s,"
+              "useful_ratio,roofline_fraction")
+        for r in rows:
+            if "error" in r:
+                print(f"{r['arch']},{r['shape']},ERROR,,,,,")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['bottleneck']},"
+                  f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+                  f"{r['t_collective_s']:.4g},{r['useful_ratio']:.3f},"
+                  f"{r['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    import importlib
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        print(f"\n# ==== {modname} ====")
+        try:
+            importlib.import_module(modname).main()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"# {modname} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    print_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Event handling (paper §6.6 / Fig. 8): an ensemble of bouncing balls with
+per-trajectory coefficients of restitution, solved in the fused lanes path
+with per-lane event detection + interpolated root-finding.
+
+    PYTHONPATH=src python examples/bouncing_ball.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AdaptiveOptions, get_tableau, solve_adaptive
+from repro.configs.de_problems import (bouncing_ball_event,
+                                       bouncing_ball_problem)
+
+B = 8
+# restitution sweep; kept >= 0.75 so the Zeno accumulation point (total
+# bounce time t1*(1+2e/(1-e))) stays beyond tf — classical bouncing-ball
+# caveat, same as the paper's demo regime
+es = jnp.linspace(0.75, 0.95, B, dtype=jnp.float64)
+ps = jnp.stack([jnp.full((B,), 9.8), es])               # (2, B)
+u0 = jnp.stack([jnp.full((B,), 10.0), jnp.zeros(B)])    # x=10, v=0
+
+prob = bouncing_ball_problem()
+ev = bouncing_ball_event()
+saveat = jnp.linspace(0.0, 8.0, 81)
+res, evlog = solve_adaptive(prob.f, get_tableau("tsit5"), u0, ps, 0.0, 8.0,
+                            1e-3, saveat=saveat,
+                            opts=AdaptiveOptions(rtol=1e-9, atol=1e-9,
+                                                 max_iters=200_000),
+                            event=ev, lanes=True)
+
+t1 = float(np.sqrt(2 * 10 / 9.8))
+print(f"first impact (analytic): t = {t1:.4f}s  — all lanes share it")
+print(f"events per lane: {np.asarray(evlog['event_count'])}")
+print("\n  t      " + "  ".join(f"e={float(e):.2f}" for e in es))
+xs = np.asarray(res.us)[:, 0, :]   # (S, B) heights
+for i in range(0, len(saveat), 8):
+    bar = "  ".join(f"{xs[i, j]:6.2f}" for j in range(B))
+    print(f"{float(saveat[i]):5.2f}  {bar}")
+print("\nHigher restitution => more bounces survive (paper Fig. 8 dynamics);"
+      "\nheights never go negative — events clamp at the surface.")
+assert float(xs.min()) > -1e-3

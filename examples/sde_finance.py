@@ -1,0 +1,45 @@
+"""SDE ensembles (paper §6.8): Black-Scholes asset paths (GBM) via the
+kernel-fused Euler-Maruyama and weak-order-2 Platen solvers; Monte-Carlo
+option pricing against the closed form.
+
+    PYTHONPATH=src python examples/sde_finance.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnsembleProblem
+from repro.core.sde import solve_sde_ensemble
+from repro.configs.de_problems import gbm_problem
+
+R, V, X0, T = 0.05, 0.4, 1.0, 1.0
+N, n_steps = 50_000, 250
+
+prob = gbm_problem(r=R, v=V, dtype=jnp.float32)
+prob = type(prob)(prob.f, prob.g, jnp.full((3,), X0, jnp.float32),
+                  jnp.asarray([R, V], jnp.float32), (0.0, T),
+                  noise="diagonal", name="gbm")
+ens = EnsembleProblem(prob, N)
+res = solve_sde_ensemble(ens, jax.random.PRNGKey(0), T / n_steps, n_steps,
+                         method="platen_w2", ensemble="kernel",
+                         save_every=n_steps)
+X = np.asarray(res.u_final)[:, 0].astype(np.float64)
+
+mean_exact = X0 * np.exp(R * T)
+print(f"E[X_T]   MC = {X.mean():.5f}   analytic = {mean_exact:.5f}   "
+      f"rel err = {abs(X.mean() - mean_exact) / mean_exact:.2e}")
+
+# European call, strike K: Black-Scholes closed form vs MC
+K = 1.1
+from math import erf, exp, log, sqrt
+def Phi(x):
+    return 0.5 * (1 + erf(x / sqrt(2)))
+d1 = (log(X0 / K) + (R + V * V / 2) * T) / (V * sqrt(T))
+d2 = d1 - V * sqrt(T)
+bs = X0 * Phi(d1) - K * exp(-R * T) * Phi(d2)
+mc = float(np.mean(np.maximum(X - K, 0.0)) * np.exp(-R * T))
+se = float(np.std(np.maximum(X - K, 0.0)) / np.sqrt(N))
+print(f"call(K={K}) MC = {mc:.5f} ± {se:.5f}   Black-Scholes = {bs:.5f}")
+assert abs(mc - bs) < 4 * se + 2e-3
+print(f"{N:,} paths × {n_steps} steps, single fused computation — the"
+      " paper's §6.8 workflow.")

@@ -1,0 +1,164 @@
+"""The paper's benchmark differential-equation models (Appendix A).
+
+All RHS functions are written in component style (index u[0], ..., combine with
+jnp.stack) so the SAME definition runs per-trajectory, array-ensembled, lane-
+vectorized, and inside the Pallas kernel — the "automated translation" property.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.problem import EnsembleProblem, ODEProblem, SDEProblem
+from repro.core.solvers import Event
+
+
+# ---------------------------------------------------------------------------
+# A.1.1 Lorenz attractor — the headline ODE benchmark (Figs. 4-7)
+# ---------------------------------------------------------------------------
+
+def lorenz_rhs(u, p, t):
+    sigma, rho, beta = p[0], p[1], p[2]
+    x, y, z = u[0], u[1], u[2]
+    return jnp.stack([
+        sigma * (y - x),
+        rho * x - y - x * z,
+        x * y - beta * z,
+    ])
+
+
+def lorenz_problem(dtype=jnp.float32) -> ODEProblem:
+    u0 = jnp.asarray([1.0, 0.0, 0.0], dtype)
+    p = jnp.asarray([10.0, 21.0, 8.0 / 3.0], dtype)
+    return ODEProblem(lorenz_rhs, u0, p, (0.0, 1.0), name="lorenz")
+
+
+def lorenz_ensemble(n_trajectories: int, dtype=jnp.float32,
+                    rho_range=(0.0, 21.0)) -> EnsembleProblem:
+    """The paper's sweep: rho uniform over (0, 21), sigma=10, beta=8/3 fixed."""
+    prob = lorenz_problem(dtype)
+    rho = jnp.linspace(rho_range[0], rho_range[1], n_trajectories, dtype=dtype)
+    ps = jnp.stack([jnp.full_like(rho, 10.0), rho,
+                    jnp.full_like(rho, 8.0 / 3.0)], axis=1)
+    return EnsembleProblem(prob, n_trajectories, ps=ps)
+
+
+# ---------------------------------------------------------------------------
+# A.1.2 Bouncing ball — the event-handling demo (Fig. 8)
+# ---------------------------------------------------------------------------
+
+def bouncing_ball_rhs(u, p, t):
+    # u = [x, v]; p = [g, e]
+    return jnp.stack([u[1], -p[0] * jnp.ones_like(u[1])])
+
+
+def bouncing_ball_event() -> Event:
+    def condition(u, p, t):
+        return u[0]
+
+    def affect(u, p, t):
+        # flip velocity by the coefficient of restitution e = p[1]
+        return jnp.stack([jnp.zeros_like(u[0]), -p[1] * u[1]])
+
+    return Event(condition=condition, affect=affect, terminal=False,
+                 direction=-1)
+
+
+def bouncing_ball_problem(e=0.9, x0=10.0, dtype=jnp.float64) -> ODEProblem:
+    u0 = jnp.asarray([x0, 0.0], dtype)
+    p = jnp.asarray([9.8, e], dtype)
+    return ODEProblem(bouncing_ball_rhs, u0, p, (0.0, 15.0),
+                      name="bouncing_ball")
+
+
+# ---------------------------------------------------------------------------
+# Simple analytic test problems (used by convergence/order tests)
+# ---------------------------------------------------------------------------
+
+def linear_decay_rhs(u, p, t):
+    return -p[0] * u
+
+
+def linear_decay_problem(lam=1.0, dtype=jnp.float64) -> ODEProblem:
+    return ODEProblem(linear_decay_rhs,
+                      jnp.asarray([1.0], dtype), jnp.asarray([lam], dtype),
+                      (0.0, 2.0), name="linear_decay")
+
+
+def sho_rhs(u, p, t):
+    # harmonic oscillator, omega = p[0]
+    return jnp.stack([u[1], -(p[0] ** 2) * u[0]])
+
+
+def sho_problem(omega=2.0, dtype=jnp.float64) -> ODEProblem:
+    return ODEProblem(sho_rhs, jnp.asarray([1.0, 0.0], dtype),
+                      jnp.asarray([omega], dtype), (0.0, 3.0), name="sho")
+
+
+# ---------------------------------------------------------------------------
+# A.2.1 Linear SDE (geometric Brownian motion) — asset-price model (Fig. 9)
+# ---------------------------------------------------------------------------
+
+def gbm_drift(u, p, t):
+    return p[0] * u
+
+
+def gbm_diffusion(u, p, t):
+    return p[1] * u
+
+
+def gbm_problem(r=1.5, v=0.01, dtype=jnp.float32) -> SDEProblem:
+    u0 = jnp.asarray([0.1, 0.1, 0.1], dtype)
+    p = jnp.asarray([r, v], dtype)
+    return SDEProblem(gbm_drift, gbm_diffusion, u0, p, (0.0, 1.0),
+                      noise="diagonal", name="gbm")
+
+
+# ---------------------------------------------------------------------------
+# A.2.2 Chemical-reaction-network sigma-factor stress-response model (Fig. 10/11)
+# 4 states, 8 Wiener processes (general noise), 6 parameters.
+# ---------------------------------------------------------------------------
+
+def crn_drift(u, p, t):
+    S, D, tau, v0, n, eta = p[0], p[1], p[2], p[3], p[4], p[5]
+    sig, A1, A2, A3 = u[0], u[1], u[2], u[3]
+    hill = (S * sig) ** n / ((S * sig) ** n + (D * A3) ** n + 1.0)
+    return jnp.stack([
+        v0 + hill - sig,
+        (sig - A1) / tau,
+        (A1 - A2) / tau,
+        (A2 - A3) / tau,
+    ])
+
+
+def crn_diffusion(u, p, t):
+    """(4, 8) noise matrix (or (4, 8, B) lane-batched): CLE birth/death terms."""
+    S, D, tau, v0, n, eta = p[0], p[1], p[2], p[3], p[4], p[5]
+    sig, A1, A2, A3 = u[0], u[1], u[2], u[3]
+    pos = lambda x: jnp.sqrt(jnp.maximum(x, 0.0))
+    hill = (S * sig) ** n / ((S * sig) ** n + (D * A3) ** n + 1.0)
+    z = jnp.zeros_like(sig)
+    rows = [
+        [eta * pos(v0 + hill), -eta * pos(sig), z, z, z, z, z, z],
+        [z, z, eta * pos(sig / tau), -eta * pos(A1 / tau), z, z, z, z],
+        [z, z, z, z, eta * pos(A1 / tau), -eta * pos(A2 / tau), z, z],
+        [z, z, z, z, z, z, eta * pos(A2 / tau), -eta * pos(A3 / tau)],
+    ]
+    return jnp.stack([jnp.stack(r) for r in rows])
+
+
+def crn_problem(S=10.0, D=10.0, tau=10.0, v0=0.1, n=3.0, eta=0.01,
+                tspan=(0.0, 1000.0), dtype=jnp.float32) -> SDEProblem:
+    p = jnp.asarray([S, D, tau, v0, n, eta], dtype)
+    u0 = jnp.full((4,), v0, dtype)
+    return SDEProblem(crn_drift, crn_diffusion, u0, p, tspan,
+                      noise="general", n_noise=8, name="crn")
+
+
+DE_PROBLEMS = {
+    "lorenz": lorenz_problem,
+    "bouncing_ball": bouncing_ball_problem,
+    "linear_decay": linear_decay_problem,
+    "sho": sho_problem,
+    "gbm": gbm_problem,
+    "crn": crn_problem,
+}

@@ -1,0 +1,18 @@
+# The paper's primary contribution — massively-parallel ensemble ODE/SDE
+# solving with two strategies (array lock-step vs fused whole-integration
+# kernel), adaptive embedded RK with dense output, events, SDE steppers,
+# sensitivity analysis and a distributed front door (api.solve_ensemble).
+from .problem import EnsembleProblem, ODEProblem, SDEProblem
+from .tableaus import TABLEAUS, get_tableau
+from .controller import PIController, hairer_norm, initial_dt
+from .solvers import (AdaptiveOptions, Event, SolveResult, interp_step,
+                      rk_step, solve_adaptive, solve_fixed, solve_one)
+from .ensemble import EnsembleResult, solve_ensemble_local
+
+__all__ = [
+    "EnsembleProblem", "ODEProblem", "SDEProblem",
+    "TABLEAUS", "get_tableau", "PIController", "hairer_norm", "initial_dt",
+    "AdaptiveOptions", "Event", "SolveResult", "interp_step", "rk_step",
+    "solve_adaptive", "solve_fixed", "solve_one",
+    "EnsembleResult", "solve_ensemble_local",
+]

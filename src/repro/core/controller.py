@@ -1,0 +1,85 @@
+"""Adaptive step-size control: Hairer scaled error norm + PI controller (paper §3.1).
+
+All functions are shape-polymorphic: scalar control state for per-trajectory
+solving, `(B,)` vectors for the per-lane fused-kernel path, and scalar control
+over an `(N, n)` super-state for the lock-step EnsembleGPUArray semantics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class PIController(NamedTuple):
+    """Proportional-integral step controller (Hairer PI; paper eq. 4 + PI update).
+
+    dt_new = dt * clip(safety * err^(-beta1) * err_prev^(beta2), qmin, qmax)
+    Defaults follow the OrdinaryDiffEq convention beta1 = 7/(10k), beta2 = 2/(5k)
+    with k = embedded_order + 1 (scaled-error exponent).
+    """
+
+    beta1: float
+    beta2: float
+    safety: float = 0.9
+    qmin: float = 0.2
+    qmax: float = 10.0
+    dtmin: float = 1e-12
+    dtmax: float = jnp.inf
+
+    @staticmethod
+    def for_order(embedded_order: int, **kw) -> "PIController":
+        k = float(embedded_order + 1)
+        return PIController(beta1=0.7 / k, beta2=0.4 / k, **kw)
+
+
+def hairer_norm(err, u_old, u_new, atol, rtol, axes=None):
+    """RMS of componentwise error scaled by atol + rtol*max(|u_old|,|u_new|).
+
+    axes: reduction axes. None => reduce everything (scalar norm: per-trajectory
+    and EnsembleArray lock-step semantics). For the lanes path pass axes=0 to
+    reduce only the state-component axis, keeping one norm per lane.
+    err <= 1  <=>  accept.
+    """
+    scale = atol + jnp.maximum(jnp.abs(u_old), jnp.abs(u_new)) * rtol
+    r = err / scale
+    return jnp.sqrt(jnp.mean(r * r, axis=axes))
+
+
+def pi_propose(ctrl: PIController, dt, enorm, enorm_prev, accept):
+    """One controller update. Returns (dt_next, enorm_prev_next).
+
+    On accept: PI formula with history term.
+    On reject: pure P shrink (history term dropped, growth capped at 1).
+    All args broadcast; `accept` may be a per-lane boolean mask.
+    """
+    e = jnp.maximum(enorm, 1e-10)  # guard err==0 (exact step) -> max growth
+    ep = jnp.maximum(enorm_prev, 1e-10)
+    fac_pi = ctrl.safety * e ** (-ctrl.beta1) * ep ** ctrl.beta2
+    fac_acc = jnp.clip(fac_pi, ctrl.qmin, ctrl.qmax)
+    fac_rej = jnp.clip(ctrl.safety * e ** (-ctrl.beta1), ctrl.qmin, 1.0)
+    fac = jnp.where(accept, fac_acc, fac_rej)
+    dt_next = jnp.clip(dt * fac, ctrl.dtmin, ctrl.dtmax)
+    enorm_prev_next = jnp.where(accept, e, enorm_prev)
+    return dt_next, enorm_prev_next
+
+
+def initial_dt(f, u0, p, t0, tf, order, atol, rtol):
+    """Hairer's automatic initial step size (Solving ODEs I, II.4), simplified.
+
+    Cheap two-evaluation heuristic; the controller recovers quickly from a
+    conservative guess, so we favour robustness.
+    """
+    sc = atol + jnp.abs(u0) * rtol
+    f0 = f(u0, p, t0)
+    d0 = jnp.sqrt(jnp.mean((u0 / sc) ** 2))
+    d1 = jnp.sqrt(jnp.mean((f0 / sc) ** 2))
+    h0 = jnp.where((d0 < 1e-5) | (d1 < 1e-5), 1e-6, 0.01 * d0 / d1)
+    u1 = u0 + h0 * f0
+    f1 = f(u1, p, t0 + h0)
+    d2 = jnp.sqrt(jnp.mean(((f1 - f0) / sc) ** 2)) / h0
+    dmax = jnp.maximum(d1, d2)
+    h1 = jnp.where(dmax <= 1e-15,
+                   jnp.maximum(1e-6, h0 * 1e-3),
+                   (0.01 / dmax) ** (1.0 / order))
+    return jnp.minimum(100.0 * h0, jnp.minimum(h1, tf - t0))

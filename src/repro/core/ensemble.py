@@ -1,0 +1,280 @@
+"""Ensemble execution strategies (paper §5) on a single device.
+
+Strategies (``ensemble=``):
+
+  "array"       EnsembleGPUArray semantics (§5.1): the whole ensemble is ONE
+                state matrix stepped in lock-step with a single global dt chosen
+                by an ensemble-wide error norm. One slow trajectory stalls all N.
+  "array_eager" As above but stepped from Python with un-jitted array ops —
+                faithfully reproduces the per-op dispatch overhead of the
+                array-abstraction frameworks the paper benchmarks (PyTorch
+                eager; each jnp op is a separate dispatch, i.e. "kernel launch").
+  "vmap"        The JAX/Diffrax baseline the paper compares against:
+                ``vmap(solve_one)`` — per-trajectory dt, but vmap-of-while lowers
+                to masked lock-step iteration over the WHOLE batch: every
+                trajectory pays max-steps-of-any.
+  "kernel"      The paper's contribution (§5.2) adapted to TPU: trajectories are
+                vector lanes; the full integration loop is fused into one
+                computation per lane-tile; tiles retire independently.
+                backend="xla"    — fused lax.while_loop per tile (lax.map over
+                                   tiles); measured-benchmark path on CPU.
+                backend="pallas" — the Pallas TPU kernel (kernels/tsit5) with
+                                   VMEM-resident state; the deployment path.
+
+Distribution over a mesh (the paper's MPI composition, §6.3) lives in
+`repro.core.api.solve_ensemble` via shard_map over the trajectory axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .controller import PIController
+from .problem import EnsembleProblem, ODEProblem
+from .solvers import (AdaptiveOptions, Event, SolveResult, rk_step,
+                      solve_adaptive, solve_fixed, solve_one)
+from .tableaus import Tableau, get_tableau
+
+Array = Any
+
+
+class EnsembleResult(NamedTuple):
+    # NamedTuple (a pytree): results flow through jit/shard_map boundaries
+    ts: Array        # (S,)
+    us: Array        # (N, S, n)
+    u_final: Array   # (N, n)
+    t_final: Array   # (N,)
+    naccept: Array   # per-trajectory or broadcast scalar
+    nreject: Array
+    nf: Array        # total RHS evaluations (work proxy; paper's overhead story)
+    status: Array
+
+
+def _as_tab(alg) -> Tableau:
+    return alg if isinstance(alg, Tableau) else get_tableau(alg)
+
+
+def _pad_to(x, n_target, axis=0):
+    pad = n_target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, mode="edge")
+
+
+# ----------------------------------------------------------------------------
+# strategy: vmap (the JAX-baseline the paper beats 20-100x)
+# ----------------------------------------------------------------------------
+
+def solve_vmap(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
+               rtol, atol, adaptive, max_iters, event=None) -> EnsembleResult:
+    def one(u0, p):
+        return solve_one(prob.f, tab, u0, p, t0, tf, dt0, saveat=saveat,
+                         rtol=rtol, atol=atol, adaptive=adaptive,
+                         max_iters=max_iters, event=event)
+
+    res = jax.vmap(one)(u0s, ps)
+    if event is not None:
+        res, _ = res
+    return EnsembleResult(ts=saveat, us=res.us, u_final=res.u_final,
+                          t_final=res.t_final, naccept=res.naccept,
+                          nreject=res.nreject, nf=jnp.sum(res.nf),
+                          status=jnp.max(res.status))
+
+
+# ----------------------------------------------------------------------------
+# strategy: array (EnsembleGPUArray semantics: lock-step global dt)
+# ----------------------------------------------------------------------------
+
+def solve_array(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
+                rtol, atol, adaptive, max_iters, event=None) -> EnsembleResult:
+    # stack to (n, N): component-style f broadcasts over the trailing lane axis,
+    # scalar-control mode gives ONE dt + ensemble-wide norm == §5.1 semantics.
+    U0 = u0s.T
+    P = ps.T
+    opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
+                           adaptive=adaptive)
+    res = solve_adaptive(prob.f, tab, U0, P, t0, tf, dt0, saveat=saveat,
+                         opts=opts, event=event, lanes=False)
+    if event is not None:
+        res, _ = res
+    N = u0s.shape[0]
+    return EnsembleResult(
+        ts=saveat, us=jnp.moveaxis(res.us, -1, 0),       # (S,n,N)->(N,S,n)
+        u_final=res.u_final.T, t_final=jnp.broadcast_to(res.t_final, (N,)),
+        naccept=res.naccept, nreject=res.nreject,
+        nf=res.nf * N,  # every global step evaluates f for all N columns
+        status=res.status)
+
+
+def solve_array_eager(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
+                      rtol, atol, adaptive, max_steps=100_000) -> EnsembleResult:
+    """Python-driven lock-step loop with per-op dispatch (no jit around the
+    step). This is the honest analogue of the eager array-abstraction overhead
+    the paper attributes 10-100x to: every jnp op below is a separate dispatch
+    ("kernel launch"), every step a host-device synchronization."""
+    ctrl = PIController.for_order(tab.embedded_order)
+    U = u0s.T
+    P = ps.T
+    t = float(t0)
+    dt = float(dt0)
+    enorm_prev = 1.0
+    saveat_np = np.asarray(saveat)
+    S = len(saveat_np)
+    us = np.zeros((S,) + U.shape, dtype=np.asarray(U).dtype)
+    sidx = 0
+    naccept = nreject = 0
+    U_prev = U
+    while t < float(tf) - 1e-12 and (naccept + nreject) < max_steps:
+        dt_step = min(dt, float(tf) - t)
+        k1 = prob.f(U, P, t)
+        U_new, err, ks = rk_step(prob.f, tab, U, P, t, dt_step, k1)
+        if adaptive:
+            scale = atol + np.maximum(np.abs(U), np.abs(U_new)) * rtol
+            enorm = float(jnp.sqrt(jnp.mean((err / scale) ** 2)))
+            accept = enorm <= 1.0
+            e = max(enorm, 1e-10)
+            if accept:
+                fac = float(np.clip(ctrl.safety * e ** (-ctrl.beta1)
+                                    * max(enorm_prev, 1e-10) ** ctrl.beta2,
+                                    ctrl.qmin, ctrl.qmax))
+                enorm_prev = e
+            else:
+                fac = float(np.clip(ctrl.safety * e ** (-ctrl.beta1),
+                                    ctrl.qmin, 1.0))
+            dt = dt_step * fac
+        else:
+            accept = True
+        if accept:
+            t_new = t + dt_step
+            while sidx < S and saveat_np[sidx] <= t_new + 1e-12:
+                theta = np.clip((saveat_np[sidx] - t) / dt_step, 0.0, 1.0)
+                from .solvers import interp_step
+                us[sidx] = np.asarray(
+                    interp_step(prob.f, tab, U, U_new, ks, P, t, dt_step,
+                                jnp.asarray(theta, U.dtype)))
+                sidx += 1
+            U = U_new
+            t = t_new
+            naccept += 1
+        else:
+            nreject += 1
+    N = u0s.shape[0]
+    return EnsembleResult(
+        ts=saveat, us=jnp.moveaxis(jnp.asarray(us), -1, 0),
+        u_final=U.T, t_final=jnp.full((N,), t),
+        naccept=jnp.asarray(naccept), nreject=jnp.asarray(nreject),
+        nf=jnp.asarray((naccept + nreject) * tab.stages * N),
+        status=jnp.asarray(0 if t >= float(tf) - 1e-9 else 1))
+
+
+# ----------------------------------------------------------------------------
+# strategy: kernel (paper §5.2) — fused whole-integration per lane-tile
+# ----------------------------------------------------------------------------
+
+def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
+                     rtol, atol, adaptive, max_iters, lane_tile=256,
+                     event=None) -> EnsembleResult:
+    """Fused-integration lanes path expressed in pure XLA.
+
+    Trajectories are packed into (n, B) tiles; each tile runs ONE while_loop to
+    completion (per-lane dt/accept masks), and tiles are processed by lax.map —
+    the exact control structure of the Pallas kernel, so this backend doubles
+    as its oracle and as the measured-CPU-benchmark path.
+    """
+    N, n = u0s.shape
+    B = min(lane_tile, N)
+    T = -(-N // B)
+    u0p = _pad_to(u0s, T * B).reshape(T, B, n)
+    psp = _pad_to(ps, T * B).reshape(T, B, ps.shape[1])
+    opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
+                           adaptive=adaptive)
+
+    def tile(args):
+        u0t, pt = args  # (B,n), (B,m)
+        res = solve_adaptive(prob.f, tab, u0t.T, pt.T, t0, tf, dt0,
+                             saveat=saveat, opts=opts, event=event, lanes=True)
+        if event is not None:
+            res, _ = res
+        return res
+
+    res = jax.lax.map(tile, (u0p, psp))
+    # res.us: (T, S, n, B) -> (N, S, n)
+    us = jnp.moveaxis(res.us, -1, 1).reshape(T * B, res.us.shape[1], n)[:N]
+    u_final = jnp.moveaxis(res.u_final, -1, 1).reshape(T * B, n)[:N]
+    return EnsembleResult(
+        ts=saveat, us=us, u_final=u_final,
+        t_final=res.t_final.reshape(-1)[:N],
+        naccept=res.naccept.reshape(-1)[:N],
+        nreject=res.nreject.reshape(-1)[:N],
+        nf=jnp.sum(res.nf.reshape(-1)[:N]),
+        status=jnp.max(res.status))
+
+
+def solve_kernel_fixed(prob: ODEProblem, u0s, ps, tab, t0, dt, n_steps,
+                       save_every, lane_tile=1024) -> EnsembleResult:
+    """Fixed-dt fused path: scan-of-steps over (n, N) lanes — single fused
+    computation, O(1) state traffic per step (the paper's fixed-dt kernel)."""
+    N, n = u0s.shape
+    res = solve_fixed(prob.f, tab, u0s.T, ps.T, t0, dt, n_steps, save_every)
+    ts = res.ts
+    return EnsembleResult(
+        ts=ts, us=jnp.moveaxis(res.us, -1, 0),
+        u_final=res.u_final.T,
+        t_final=jnp.broadcast_to(res.t_final, (N,)),
+        naccept=jnp.broadcast_to(res.naccept, (N,)),
+        nreject=jnp.zeros((N,), jnp.int32),
+        nf=res.nf * N, status=res.status)
+
+
+# ----------------------------------------------------------------------------
+# front door
+# ----------------------------------------------------------------------------
+
+def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
+                         ensemble: str = "kernel", backend: str = "xla",
+                         t0=None, tf=None, dt0=1e-2, saveat=None,
+                         rtol=1e-6, atol=1e-6, adaptive=True,
+                         n_steps=None, save_every=1, lane_tile=256,
+                         max_iters=100_000, event=None) -> EnsembleResult:
+    """Single-device ensemble solve. See module docstring for strategies."""
+    prob = eprob.prob
+    tab = _as_tab(alg)
+    u0s, ps = eprob.materialize()
+    t0 = prob.tspan[0] if t0 is None else t0
+    tf = prob.tspan[1] if tf is None else tf
+    if saveat is None:
+        saveat = jnp.asarray([tf], u0s.dtype)
+    saveat = jnp.asarray(saveat, u0s.dtype)
+
+    if not adaptive and n_steps is None:
+        n_steps = int(round((tf - t0) / dt0))
+
+    if ensemble == "vmap":
+        return solve_vmap(prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol,
+                          adaptive, max_iters, event)
+    if ensemble == "array":
+        return solve_array(prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol,
+                           adaptive, max_iters, event)
+    if ensemble == "array_eager":
+        return solve_array_eager(prob, u0s, ps, tab, t0, tf, dt0, saveat,
+                                 rtol, atol, adaptive)
+    if ensemble == "kernel":
+        if backend == "pallas":
+            from repro.kernels.tsit5 import ops as tsit5_ops
+            return tsit5_ops.solve_ensemble_pallas(
+                prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol, adaptive,
+                lane_tile=lane_tile, max_iters=max_iters)
+        if not adaptive:
+            return solve_kernel_fixed(prob, u0s, ps, tab, t0, dt0, n_steps,
+                                      save_every, lane_tile)
+        return solve_kernel_xla(prob, u0s, ps, tab, t0, tf, dt0, saveat,
+                                rtol, atol, adaptive, max_iters, lane_tile,
+                                event)
+    raise ValueError(f"unknown ensemble strategy {ensemble!r}")

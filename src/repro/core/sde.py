@@ -1,0 +1,205 @@
+"""SDE steppers (paper §3.2, §5.2.2, §6.8): fixed-dt, kernel-shaped.
+
+Methods (matching the paper's GPU kernel set):
+  em         — GPUEM: Euler-Maruyama, Ito; diagonal AND general (n×m) noise.
+  platen_w2  — GPUSIEA role: explicit weak-order-2 Platen scheme
+               (Kloeden & Platen §14.2), diagonal noise only — the weak-order-2
+               stochastic generalization of the midpoint/improved-Euler family.
+  heun_strat — Stratonovich Heun (extra, beyond paper).
+
+Noise is counter-based: dW for step k is drawn from fold_in(key, k), so the
+stepper needs no noise storage (the paper's per-thread PRNG state), trajectories
+are independent across lanes, and any step's noise can be replayed (used by the
+pathwise tests and by the pallas/XLA cross-validation).
+
+All steppers are shape-polymorphic like the ODE engine: u (n,) scalar-mode or
+(n, B) lanes-mode; the SAME definition runs vmapped, lane-fused, and inside the
+Pallas EM kernel (kernels/em).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .problem import EnsembleProblem, SDEProblem
+from .solvers import SolveResult
+
+Array = Any
+
+
+def _sqrt_dt(dt, dtype):
+    return jnp.sqrt(jnp.asarray(dt, dtype))
+
+
+def apply_noise(g_val, dW, noise: str):
+    """g(u)·dW with g_val (n,[B]) diagonal or (n,m,[B]) general; dW (m,[B])."""
+    if noise == "diagonal":
+        return g_val * dW
+    # general: contract the noise axis (axis 1 of g_val)
+    return jnp.einsum("nm...,m...->n...", g_val, dW)
+
+
+def em_step(f, g, u, p, t, dt, dW, noise="diagonal"):
+    """X' = X + f dt + g dW  (Ito; strong 0.5 / weak 1)."""
+    return u + f(u, p, t) * dt + apply_noise(g(u, p, t), dW, noise)
+
+
+def heun_strat_step(f, g, u, p, t, dt, dW, noise="diagonal"):
+    """Stratonovich Heun (strong 0.5 / weak 1 in Stratonovich sense)."""
+    du1 = f(u, p, t) * dt + apply_noise(g(u, p, t), dW, noise)
+    ub = u + du1
+    du2 = f(ub, p, t + dt) * dt + apply_noise(g(ub, p, t + dt), dW, noise)
+    return u + 0.5 * (du1 + du2)
+
+
+def platen_w2_step(f, g, u, p, t, dt, dW, noise="diagonal"):
+    """Explicit weak-order-2 Platen scheme, diagonal noise (Kloeden & Platen
+    (15.1.1)/(14.2.4) family). Supporting values:
+        ubar = u + a dt + b dW ;  u± = u + a dt ± b sqrt(dt)
+        u'   = u + dt/2 (a(ubar)+a(u))
+                 + dW/4 (b(u+)+b(u-)+2 b(u))
+                 + (dW^2-dt)/(4 sqrt(dt)) (b(u+)-b(u-))
+    """
+    if noise != "diagonal":
+        raise ValueError("platen_w2 supports diagonal noise only (as the "
+                         "paper's GPUSIEA)")
+    a0 = f(u, p, t)
+    b0 = g(u, p, t)
+    sdt = _sqrt_dt(dt, u.dtype)
+    drift = u + a0 * dt
+    ubar = drift + b0 * dW
+    up = drift + b0 * sdt
+    um = drift - b0 * sdt
+    t1 = t + dt
+    a1 = f(ubar, p, t1)
+    bp = g(up, p, t1)
+    bm = g(um, p, t1)
+    return (u + 0.5 * dt * (a1 + a0)
+            + 0.25 * dW * (bp + bm + 2.0 * b0)
+            + 0.25 * (dW * dW - dt) / sdt * (bp - bm))
+
+
+def milstein_step(f, g, u, p, t, dt, dW, noise="diagonal"):
+    """Milstein (diagonal noise): strong order 1.0 — beyond the paper's kernel
+    set (GPUEM is strong 0.5). The derivative term comes from forward-mode AD
+    on the user's diffusion (automated translation again: no hand Jacobians).
+        X' = X + a dt + b dW + 1/2 ((∂b/∂x)·b) (dW² - dt)
+    Exact for componentwise diffusions g_i(u_i) (GBM, CLE birth/death terms);
+    cross-component ∂g_i/∂u_j would need Lévy-area terms (not included).
+    """
+    if noise != "diagonal":
+        raise ValueError("milstein currently supports diagonal noise")
+    a0 = f(u, p, t)
+    b0, db = jax.jvp(lambda uu: g(uu, p, t), (u,), (g(u, p, t),))
+    # db = (∂b/∂u)·b elementwise along the diagonal-noise structure
+    return u + a0 * dt + b0 * dW + 0.5 * db * (dW * dW - dt)
+
+
+SDE_STEPPERS = {
+    "em": em_step,
+    "heun_strat": heun_strat_step,
+    "platen_w2": platen_w2_step,
+    "siea": platen_w2_step,  # paper-facing alias
+    "milstein": milstein_step,
+}
+
+
+def counter_normals(key, step, shape, dtype):
+    """Counter-based N(0,1) draw for a given step index (replayable)."""
+    return jax.random.normal(jax.random.fold_in(key, step), shape, dtype)
+
+
+def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
+                    method: str = "em", save_every: int = 1,
+                    noise_table: Optional[Array] = None) -> SolveResult:
+    """Fixed-dt SDE integration as scan(fori(step)); kernel-shaped state flow.
+
+    u0: (n,) or (n, B) lanes. Noise per step: (m,) / (m, B).
+    noise_table: optional (n_steps, m[, B]) pre-drawn N(0,1) (pathwise tests).
+    """
+    assert n_steps % save_every == 0
+    S = n_steps // save_every
+    stepper = SDE_STEPPERS[method]
+    dtype = u0.dtype
+    dt = jnp.asarray(dt, dtype)
+    sdt = _sqrt_dt(dt, dtype)
+    m = prob.noise_dim()
+    nshape = (m,) + u0.shape[1:]
+
+    def one(k, uk):
+        u, t = uk
+        if noise_table is not None:
+            z = noise_table[k].astype(dtype)
+        else:
+            z = counter_normals(key, k, nshape, dtype)
+        u = stepper(prob.f, prob.g, u, p, t, dt, z * sdt, prob.noise)
+        return (u, t + dt)
+
+    def inner(carry, s):
+        u, t = carry
+        k0 = s * save_every
+
+        def body(i, uk):
+            return one(k0 + i, uk)
+
+        u, t = jax.lax.fori_loop(0, save_every, body, (u, t))
+        return (u, t), u
+
+    (u_f, t_f), us = jax.lax.scan(inner, (u0, jnp.asarray(t0, dtype)),
+                                  jnp.arange(S))
+    ts = jnp.asarray(t0, dtype) + dt * save_every * jnp.arange(1, S + 1,
+                                                               dtype=dtype)
+    return SolveResult(ts=ts, us=us, t_final=t_f, u_final=u_f,
+                       naccept=jnp.asarray(n_steps), nreject=jnp.asarray(0),
+                       status=jnp.asarray(0),
+                       nf=jnp.asarray(n_steps * (2 if method != "em" else 1)))
+
+
+def solve_sde_ensemble(eprob: EnsembleProblem, key, dt, n_steps=None,
+                       method="em", ensemble="kernel", backend="xla",
+                       save_every=1, t0=None, tf=None,
+                       lane_tile=1024) -> "EnsembleSDEResult":
+    """Ensemble SDE front door. Strategies mirror the ODE ones; SDE kernels are
+    fixed-dt (as in the paper §5.2.2)."""
+    prob: SDEProblem = eprob.prob
+    u0s, ps = eprob.materialize()
+    N, n = u0s.shape
+    t0 = prob.tspan[0] if t0 is None else t0
+    tf = prob.tspan[1] if tf is None else tf
+    if n_steps is None:
+        n_steps = int(round((tf - t0) / dt))
+
+    if ensemble == "kernel" and backend == "pallas":
+        from repro.kernels.em import ops as em_ops
+        return em_ops.solve_sde_ensemble_pallas(
+            prob, u0s, ps, key, t0, dt, n_steps, method=method,
+            save_every=save_every, lane_tile=lane_tile)
+
+    if ensemble == "kernel":
+        # lanes layout (n, N): one fused scan; per-lane noise drawn inside.
+        res = sde_solve_fixed(prob, u0s.T, ps.T, t0, dt, n_steps, key,
+                              method=method, save_every=save_every)
+        us = jnp.moveaxis(res.us, -1, 0)
+        return EnsembleSDEResult(ts=res.ts, us=us, u_final=res.u_final.T,
+                                 nf=res.nf * N)
+    if ensemble == "vmap":
+        keys = jax.random.split(key, N)
+
+        def one(u0, p, k):
+            return sde_solve_fixed(prob, u0, p, t0, dt, n_steps, k,
+                                   method=method, save_every=save_every)
+
+        res = jax.vmap(one)(u0s, ps, keys)
+        return EnsembleSDEResult(ts=res.ts[0], us=res.us,
+                                 u_final=res.u_final, nf=jnp.sum(res.nf))
+    raise ValueError(f"unknown ensemble {ensemble!r}")
+
+
+class EnsembleSDEResult(NamedTuple):
+    ts: Array
+    us: Array        # (N, S, n)
+    u_final: Array   # (N, n)
+    nf: Array

@@ -1,0 +1,436 @@
+"""Generic explicit Runge-Kutta engine (tableau-driven), three execution shapes.
+
+One engine serves every strategy in the paper:
+
+  * scalar mode   — ``u: (n,)``, scalar ``t/dt``: the per-trajectory reference
+                    solver (`solve_one`); `vmap`-ing it reproduces the JAX/Diffrax
+                    baseline the paper benchmarks against (EnsembleVmap).
+  * array mode    — ``u: (N, n)``, scalar ``t/dt`` and an ensemble-wide error
+                    norm: bitwise-faithful EnsembleGPUArray semantics (§5.1) —
+                    one lock-step dt for the whole ensemble.
+  * lanes mode    — ``u: (n, B)``, per-lane ``t/dt/accept`` masks: the structure
+                    of the paper's EnsembleGPUKernel (§5.2) adapted to TPU vector
+                    lanes; this exact loop body is also what the Pallas kernel
+                    runs per tile (kernels/tsit5).
+
+All of it is pure ``jax.lax`` control flow (while_loop / scan / cond) — no
+Python-level stepping — so each solve lowers to a single XLA computation
+("one kernel launch" in the paper's terms).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .controller import PIController, hairer_norm, pi_propose
+from .tableaus import Tableau
+
+Array = Any
+
+
+class SolveResult(NamedTuple):
+    ts: Array        # (S,) save times (the common saveat grid)
+    us: Array        # scalar/array mode: (S, n)/(S, N, n); lanes: (S, n, B)
+    t_final: Array
+    u_final: Array
+    naccept: Array
+    nreject: Array
+    status: Array    # 0 = success, 1 = max_iters exhausted
+    nf: Array        # number of RHS evaluations (per control element)
+
+
+class Event(NamedTuple):
+    """condition g(u,p,t) crossing zero triggers affect h (paper §6.6).
+
+    direction: -1 (+ -> -), +1 (- -> +), 0 (any crossing).
+    terminal:  stop integration at the event.
+    affect:    (u, p, t) -> u_new  applied at the event point.
+    """
+    condition: Callable[[Array, Array, Array], Array]
+    affect: Optional[Callable[[Array, Array, Array], Array]] = None
+    terminal: bool = False
+    direction: int = 0
+    bisect_iters: int = 30
+
+
+# ----------------------------------------------------------------------------
+# single embedded RK step
+# ----------------------------------------------------------------------------
+
+def _bc(v, u):
+    """Broadcast a control value (scalar or (B,)) against state u ((n,)/(N,n)/(n,B))."""
+    return v if jnp.ndim(v) == 0 else v[None]
+
+
+def rk_step(f, tab: Tableau, u, p, t, dt, k1):
+    """One embedded step. Returns (u_new, err, ks).
+
+    k1 must be f(u, p, t) (caller owns FSAL reuse). The stage loop is a static
+    Python unroll — 6-16 fused vector ops, no dynamic control flow.
+    """
+    s = tab.stages
+    dtb = _bc(dt, u)
+    ks = [k1]
+    # NOTE: tableau entries are converted to python floats (weak-typed) so the
+    # state dtype (f32 on accelerators, f64 reference) is never upcast.
+    for i in range(1, s):
+        acc = None
+        for j in range(i):
+            aij = float(tab.a[i, j])
+            if aij == 0.0:
+                continue
+            term = aij * ks[j]
+            acc = term if acc is None else acc + term
+        ui = u if acc is None else u + dtb * acc
+        ks.append(f(ui, p, t + float(tab.c[i]) * dt))
+    unew_acc = None
+    err_acc = None
+    for i in range(s):
+        if tab.b[i] != 0.0:
+            term = float(tab.b[i]) * ks[i]
+            unew_acc = term if unew_acc is None else unew_acc + term
+        if tab.btilde[i] != 0.0:
+            term = float(tab.btilde[i]) * ks[i]
+            err_acc = term if err_acc is None else err_acc + term
+    u_new = u + dtb * unew_acc
+    err = dtb * err_acc if err_acc is not None else jnp.zeros_like(u)
+    return u_new, err, ks
+
+
+def interp_step(f, tab: Tableau, u_old, u_new, ks, p, t, dt, theta,
+                lanes: bool = False):
+    """Dense output u(t + theta*dt), theta in [0,1].
+
+    Uses the tableau's free interpolant when available (Tsit5: 4th order),
+    otherwise cubic Hermite on (u_old, k1, u_new, f(u_new)).
+
+    Shape contract:
+      lanes=False: u (n,)/(N,n), dt scalar, theta scalar or (S,)
+                   -> u-shaped or (S, *ushape).
+      lanes=True : u (n,B), dt (B,), theta (B,) or (S,B) — the LAST theta axis
+                   is the lane axis -> (n,B) or (S,n,B).
+    """
+    th_nd = jnp.ndim(theta)
+    u_nd = jnp.ndim(u_old)
+
+    def expand_w(w):
+        """Align a (*theta.shape) weight against the state axes."""
+        if th_nd == 0:
+            return w
+        if lanes:
+            # (..., B) -> (..., 1, B); state (n, B) broadcasts in.
+            return jnp.expand_dims(w, axis=-2)
+        return w.reshape(jnp.shape(w) + (1,) * u_nd)
+
+    def expand_u(x):
+        """Align a state against leading (non-lane) theta axes."""
+        lead = th_nd - (1 if lanes else 0)
+        if lead <= 0:
+            return x
+        return x.reshape((1,) * lead + jnp.shape(x))
+
+    dtb = _bc(dt, u_old)  # scalar or (1, B)
+
+    if tab.interp_bpoly is not None:
+        bw = tab.interp_bpoly(theta)          # (s, *theta.shape)
+        incr = None
+        for i, k in enumerate(ks):
+            term = expand_w(bw[i]) * expand_u(k)
+            incr = term if incr is None else incr + term
+        return expand_u(u_old) + dtb * incr
+    # Hermite cubic
+    f_old = ks[0]
+    f_new = ks[-1] if tab.fsal else f(u_new, p, t + dt)
+    the = theta
+    h00 = expand_w((1 + 2 * the) * (1 - the) ** 2)
+    h10 = expand_w(the * (1 - the) ** 2)
+    h01 = expand_w(the ** 2 * (3 - 2 * the))
+    h11 = expand_w(the ** 2 * (the - 1))
+    return (h00 * expand_u(u_old) + h10 * dtb * expand_u(f_old)
+            + h01 * expand_u(u_new) + h11 * dtb * expand_u(f_new))
+
+
+# ----------------------------------------------------------------------------
+# fixed-step fast path (scan): the throughput shape of the paper's kernels
+# ----------------------------------------------------------------------------
+
+def solve_fixed(f, tab: Tableau, u0, p, t0, dt, n_steps: int,
+                save_every: int = 1):
+    """Fixed-dt integration as scan(fori(rk_step)). Differentiable (fwd+rev).
+
+    Saves every `save_every`-th step => S = n_steps // save_every snapshots.
+    Works for any state shape (scalar/array/lanes).
+    """
+    assert n_steps % save_every == 0, "n_steps must be divisible by save_every"
+    S = n_steps // save_every
+    dt = jnp.asarray(dt, dtype=u0.dtype)
+    t0 = jnp.asarray(t0, dtype=u0.dtype)
+
+    def inner(carry, _):
+        u, t = carry
+
+        def one(i, uk):
+            u, t = uk
+            k1 = f(u, p, t)
+            u_new, _, _ = rk_step(f, tab, u, p, t, dt, k1)
+            return (u_new, t + dt)
+
+        u, t = jax.lax.fori_loop(0, save_every, one, (u, t))
+        return (u, t), u
+
+    (u_f, t_f), us = jax.lax.scan(inner, (u0, t0), None, length=S)
+    ts = t0 + dt * save_every * jnp.arange(1, S + 1, dtype=u0.dtype)
+    nf = jnp.asarray(n_steps * (tab.stages - (1 if tab.fsal else 0)) + (1 if tab.fsal else 0))
+    return SolveResult(ts=ts, us=us, t_final=t_f, u_final=u_f,
+                       naccept=jnp.asarray(n_steps), nreject=jnp.asarray(0),
+                       status=jnp.asarray(0), nf=nf)
+
+
+# ----------------------------------------------------------------------------
+# adaptive driver (while_loop), scalar/array/lanes via shape polymorphism
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveOptions:
+    rtol: float = 1e-6
+    atol: float = 1e-6
+    max_iters: int = 100_000
+    controller: Optional[PIController] = None
+    adaptive: bool = True            # False => accept every step at fixed dt
+    save: str = "grid"               # "grid" | "final"
+    norm_axes: Optional[Any] = "auto"  # "auto": lanes->0, else None
+
+
+def _grid_save(f, tab, us, saveat, u_old, u_new, ks, p, t_old, dt_step,
+               t_new, active):
+    """Masked write of every save point crossed by this step (vectorized over S).
+
+    saveat: (S,). lanes mode: t_old/t_new (B,), us (S,n,B); scalar/array:
+    t_old scalar, us (S,*ushape). Cost is O(S) vector ops but only paid on
+    steps that cross a save point (guarded by lax.cond in the caller).
+    """
+    lanes = jnp.ndim(t_old) == 1
+    eps = jnp.asarray(1e-7, us.dtype) * jnp.maximum(jnp.abs(t_new), 1.0)
+    if lanes:
+        cross = ((saveat[:, None] > t_old[None, :])
+                 & (saveat[:, None] <= t_new[None, :] + eps[None, :])
+                 & active[None, :])                       # (S, B)
+        theta = jnp.clip((saveat[:, None] - t_old[None, :])
+                         / jnp.where(dt_step[None, :] == 0, 1.0, dt_step[None, :]),
+                         0.0, 1.0)                        # (S, B)
+        vals = interp_step(f, tab, u_old, u_new, ks, p, t_old, dt_step, theta,
+                           lanes=True)
+        # vals: (S, n, B); cross -> (S, 1, B)
+        return jnp.where(cross[:, None, :], vals, us)
+    else:
+        cross = ((saveat > t_old) & (saveat <= t_new + eps) & active)  # (S,)
+        theta = jnp.clip((saveat - t_old) / jnp.where(dt_step == 0, 1.0, dt_step),
+                         0.0, 1.0)
+        vals = interp_step(f, tab, u_old, u_new, ks, p, t_old, dt_step, theta)
+        cross_e = cross.reshape(cross.shape + (1,) * (us.ndim - 1))
+        return jnp.where(cross_e, vals, us)
+
+
+def _event_locate(f, tab, ev: Event, u_old, u_new, ks, p, t_old, dt_step,
+                  g_old, g_new, lanes=False):
+    """Bisection for g=0 inside an accepted step using the dense output.
+
+    Returns (theta_star, u_star) per control element; only meaningful where the
+    caller's `hit` mask is true.
+    """
+    lo = jnp.zeros_like(g_old)
+    hi = jnp.ones_like(g_old)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        u_mid = interp_step(f, tab, u_old, u_new, ks, p, t_old, dt_step, mid,
+                            lanes=lanes)
+        g_mid = ev.condition(u_mid, p, t_old + mid * dt_step)
+        # root in [lo, mid] iff sign change between g_old and g_mid
+        left = jnp.sign(g_old) * jnp.sign(g_mid) <= 0
+        lo = jnp.where(left, lo, mid)
+        hi = jnp.where(left, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, ev.bisect_iters, body, (lo, hi))
+    theta = hi  # first point past the root: g has crossed
+    u_star = interp_step(f, tab, u_old, u_new, ks, p, t_old, dt_step, theta,
+                         lanes=lanes)
+    return theta, u_star
+
+
+def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
+                   saveat: Optional[Array] = None,
+                   opts: AdaptiveOptions = AdaptiveOptions(),
+                   event: Optional[Event] = None,
+                   lanes: bool = False):
+    """Adaptive (or fixed-accept) integration with optional events.
+
+    lanes=False, u0 (n,)   : per-trajectory (scalar control).
+    lanes=False, u0 (N, n) : EnsembleGPUArray lock-step semantics (scalar
+                             control, ensemble-wide norm).
+    lanes=True,  u0 (n, B) : per-lane control — EnsembleGPUKernel structure.
+    """
+    dtype = u0.dtype
+    ctrl = opts.controller or PIController.for_order(tab.embedded_order)
+    cshape = (u0.shape[-1],) if lanes else ()
+    axes = (0 if lanes else None) if opts.norm_axes == "auto" else opts.norm_axes
+
+    t0 = jnp.asarray(t0, dtype)
+    tf = jnp.asarray(tf, dtype)
+    tv = jnp.broadcast_to(t0, cshape).astype(dtype)
+    dtv = jnp.broadcast_to(jnp.asarray(dt0, dtype), cshape).astype(dtype)
+
+    if saveat is None:
+        saveat = jnp.asarray([tf], dtype)
+    saveat = jnp.asarray(saveat, dtype)
+    S = saveat.shape[0]
+    save_grid = opts.save == "grid"
+    us0 = jnp.zeros((S,) + u0.shape, dtype)
+    # prefill save points at/before t0 with u0
+    pre = (saveat <= t0).reshape((S,) + (1,) * u0.ndim)
+    us0 = jnp.where(pre, u0[None], us0)
+
+    k0 = f(u0, p, tv)
+    zero_c = jnp.zeros(cshape, dtype)
+    carry0 = dict(
+        t=tv, u=u0, dt=dtv, k1=k0,
+        enorm_prev=jnp.ones(cshape, dtype),
+        done=jnp.zeros(cshape, bool),
+        us=us0,
+        naccept=jnp.zeros(cshape, jnp.int32),
+        nreject=jnp.zeros(cshape, jnp.int32),
+        nf=jnp.ones(cshape, jnp.int32),
+        iters=jnp.asarray(0, jnp.int32),
+        event_t=jnp.full(cshape, jnp.inf, dtype),
+        event_count=jnp.zeros(cshape, jnp.int32),
+    )
+
+    def cond(c):
+        return (c["iters"] < opts.max_iters) & jnp.any(~c["done"])
+
+    def body(c):
+        t, u, dt, k1 = c["t"], c["u"], c["dt"], c["k1"]
+        active = ~c["done"]
+        remaining = tf - t
+        dt_step = jnp.minimum(dt, remaining)
+        dt_step = jnp.where(active, dt_step, jnp.asarray(1.0, dtype))
+
+        u_cand, err, ks = rk_step(f, tab, u, p, t, dt_step, k1)
+
+        if opts.adaptive:
+            enorm = hairer_norm(err, u, u_cand, opts.atol, opts.rtol, axes=axes)
+            finite = jnp.isfinite(u_cand)
+            if lanes:
+                finite = jnp.all(finite, axis=0)
+            else:
+                finite = jnp.all(finite)
+            accept = (enorm <= 1.0) & finite
+            dt_next, enorm_prev = pi_propose(ctrl, dt, enorm, c["enorm_prev"],
+                                             accept)
+        else:
+            enorm = jnp.zeros(cshape, dtype)
+            accept = jnp.ones(cshape, bool)
+            dt_next, enorm_prev = dt, c["enorm_prev"]
+
+        accept = accept & active
+        t_new = jnp.where(accept, t + dt_step, t)
+
+        # ---- events: detect sign change of g over the accepted step --------
+        if event is not None:
+            g_old = event.condition(u, p, t)
+            g_new = event.condition(u_cand, p, t_new)
+            # an affect applied exactly at a root leaves g_old == 0 and would
+            # mask every later crossing; re-anchor the sign just inside the
+            # step (theta = 1e-4) in that case.
+            u_eps = interp_step(f, tab, u, u_cand, ks, p, t, dt_step,
+                                jnp.full_like(g_old, 1e-4) if lanes
+                                else jnp.asarray(1e-4, dtype), lanes=lanes)
+            g_eps = event.condition(u_eps, p, t + 1e-4 * dt_step)
+            g_old = jnp.where(g_old == 0, g_eps, g_old)
+            sgn_change = jnp.sign(g_old) * jnp.sign(g_new) < 0
+            if event.direction == -1:
+                sgn_change &= g_new < g_old
+            elif event.direction == 1:
+                sgn_change &= g_new > g_old
+            hit = sgn_change & accept
+            theta_star, u_star = _event_locate(f, tab, event, u, u_cand, ks, p,
+                                               t, dt_step, g_old, g_new,
+                                               lanes=lanes)
+            t_star = t + theta_star * dt_step
+            if event.affect is not None:
+                u_aff = event.affect(u_star, p, t_star)
+            else:
+                u_aff = u_star
+            hit_e = _bc(hit, u) if lanes else hit
+            u_next = jnp.where(hit_e, u_aff, u_cand)
+            t_new = jnp.where(hit, t_star, t_new)
+            ev_t = jnp.where(hit, t_star, c["event_t"])
+            ev_n = c["event_count"] + hit.astype(jnp.int32)
+            term = hit if event.terminal else jnp.zeros(cshape, bool)
+        else:
+            u_next = u_cand
+            ev_t, ev_n = c["event_t"], c["event_count"]
+            term = jnp.zeros(cshape, bool)
+
+        acc_e = _bc(accept, u) if lanes else accept
+        u_new = jnp.where(acc_e, u_next, u)
+        # FSAL: reuse last stage; recompute after an event modified the state
+        if tab.fsal and event is None:
+            k1_new = jnp.where(acc_e, ks[-1], k1)
+            nf_inc = jnp.where(active, tab.stages - 1, 0)
+        else:
+            k1_new = jnp.where(acc_e, f(u_new, p, t_new), k1)
+            nf_inc = jnp.where(active, tab.stages, 0)
+
+        # ---- dense save -----------------------------------------------------
+        if save_grid:
+            def do_save(us):
+                return _grid_save(f, tab, us, saveat, u, u_cand, ks, p, t,
+                                  dt_step, t_new, accept)
+
+            any_cross = jnp.any(
+                accept & (jnp.max(saveat) > (t.min() if lanes else t)))
+            us = jax.lax.cond(any_cross, do_save, lambda x: x, c["us"])
+        else:
+            us = c["us"]
+
+        eps_end = 1e-7 * jnp.maximum(jnp.abs(tf), 1.0)
+        done = c["done"] | (t_new >= tf - eps_end) | term
+
+        return dict(
+            t=t_new, u=u_new, dt=dt_next, k1=k1_new,
+            enorm_prev=enorm_prev, done=done, us=us,
+            naccept=c["naccept"] + accept.astype(jnp.int32),
+            nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
+            nf=c["nf"] + nf_inc.astype(jnp.int32),
+            iters=c["iters"] + 1,
+            event_t=ev_t, event_count=ev_n,
+        )
+
+    out = jax.lax.while_loop(cond, body, carry0)
+    status = jnp.where(out["done"], 0, 1).astype(jnp.int32)
+    res = SolveResult(ts=saveat, us=out["us"], t_final=out["t"],
+                      u_final=out["u"], naccept=out["naccept"],
+                      nreject=out["nreject"], status=status, nf=out["nf"])
+    if event is not None:
+        return res, dict(event_t=out["event_t"], event_count=out["event_count"])
+    return res
+
+
+# ----------------------------------------------------------------------------
+# public single-trajectory reference solver
+# ----------------------------------------------------------------------------
+
+def solve_one(f, tab: Tableau, u0, p, t0, tf, dt0, saveat=None,
+              rtol=1e-6, atol=1e-6, adaptive=True, max_iters=100_000,
+              event=None, save="grid", controller=None):
+    opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
+                           adaptive=adaptive, save=save, controller=controller)
+    return solve_adaptive(f, tab, u0, p, t0, tf, dt0, saveat=saveat, opts=opts,
+                          event=event, lanes=False)

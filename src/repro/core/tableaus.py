@@ -1,0 +1,194 @@
+"""Butcher tableaus for embedded explicit Runge-Kutta pairs.
+
+The solver engine (`repro.core.solvers`) is tableau-generic: a method is *data*.
+We ship the pairs below with exact published coefficients; each is validated by
+(a) algebraic order-condition unit tests and (b) empirical convergence-order
+tests against closed-form solutions (tests/test_tableaus.py, test_solvers.py).
+
+GPUTsit5 — the solver used in every benchmark figure of the paper — is `TSIT5`.
+
+NOTE on GPUVern7/GPUVern9: Verner's 7(6)/9(8) pairs are 50–120 high-precision
+coefficients.  We deliberately do not ship unverifiable constants; the engine
+accepts any `Tableau`, so adding them is pure data (see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import numpy as np
+
+
+class Tableau(NamedTuple):
+    name: str
+    a: np.ndarray        # (s, s) strictly lower triangular
+    b: np.ndarray        # (s,)  high-order weights
+    btilde: np.ndarray   # (s,)  b - bhat  (error-estimate weights)
+    c: np.ndarray        # (s,)  abscissae
+    order: int           # order of the propagated solution
+    embedded_order: int
+    fsal: bool           # first-same-as-last: k[s-1] of step n == k[0] of step n+1
+    # optional dense-output polynomial: theta -> (s,) weights; None => Hermite cubic
+    interp_bpoly: Optional[Callable] = None
+
+    @property
+    def stages(self) -> int:
+        return len(self.b)
+
+
+def _tab(name, a_rows, b, bhat=None, btilde=None, c=None, order=0,
+         embedded_order=0, fsal=False, interp_bpoly=None) -> Tableau:
+    s = len(b)
+    a = np.zeros((s, s), dtype=np.float64)
+    for i, row in enumerate(a_rows):
+        a[i + 1, : len(row)] = row
+    b = np.asarray(b, dtype=np.float64)
+    if btilde is None:
+        btilde = b - np.asarray(bhat, dtype=np.float64)
+    else:
+        btilde = np.asarray(btilde, dtype=np.float64)
+    if c is None:
+        c = a.sum(axis=1)
+    return Tableau(name, a, b, btilde, np.asarray(c, np.float64), order,
+                   embedded_order, fsal, interp_bpoly)
+
+
+# ----------------------------------------------------------------------------
+# Tsitouras 5(4) — [Tsitouras 2011], coefficients as in OrdinaryDiffEq.jl.
+# FSAL; 7 stages (6 effective); free 4th-order interpolant.
+# ----------------------------------------------------------------------------
+_TSIT5_A = [
+    [0.161],
+    [-0.008480655492356989, 0.335480655492357],
+    [2.8971530571054935, -6.359448489975075, 4.3622954328695815],
+    [5.325864828439257, -11.748883564062828, 7.4955393428898365,
+     -0.09249506636175525],
+    [5.86145544294642, -12.92096931784711, 8.159367898576159,
+     -0.071584973281401006, -0.028269050394068383],
+    [0.09646076681806523, 0.01, 0.4798896504144996, 1.379008574103742,
+     -3.290069515436081, 2.324710524099774],
+]
+_TSIT5_B = [0.09646076681806523, 0.01, 0.4798896504144996, 1.379008574103742,
+            -3.290069515436081, 2.324710524099774, 0.0]
+# btilde = b - bhat (4th-order embedded), OrdinaryDiffEq.jl convention:
+# error = dt * sum(btilde_i * k_i)
+_TSIT5_BTILDE = [-0.00178001105222577714, -0.0008164344596567469,
+                 0.007880878010261995, -0.1447110071732629,
+                 0.5823571654525552, -0.45808210592918697,
+                 0.015151515151515152]
+_TSIT5_C = [0.0, 0.161, 0.327, 0.9, 0.9800255409045097, 1.0, 1.0]
+
+
+def _tsit5_bpoly(theta):
+    """Tsitouras free 4th-order interpolant: theta in [0,1] -> stage weights (7,).
+
+    b_i(theta) polynomials from Tsitouras (2011) / OrdinaryDiffEq.jl Tsit5
+    ConstantCache interpolation.  u(t+theta*h) = u + h * sum_i b_i(theta) k_i.
+    Works on scalar or batched theta (trailing dims broadcast).
+    """
+    import jax.numpy as jnp
+    t = theta
+    b1 = -1.0530884977290216 * t * (t - 1.3299890189751412) * (
+        t * t - 1.4364028541716351 * t + 0.7139816917074209)
+    b2 = 0.1017 * t * t * (t * t - 2.1966568338249754 * t + 1.2949852507374631)
+    b3 = 2.490627285651252793 * t * t * (
+        t * t - 2.38535645472061657 * t + 1.57803468208092486)
+    b4 = -16.54810288924490272 * (t - 1.21712927295533244) * (
+        t - 0.61620406037800089) * t * t
+    b5 = 47.37952196281928122 * (t - 1.203071208372362603) * (
+        t - 0.658047292653547382) * t * t
+    b6 = -34.87065786149660974 * (t - 1.2) * (t - 2.0 / 3.0) * t * t
+    b7 = 2.5 * (t - 1.0) * (t - 0.6) * t * t
+    return jnp.stack([b1, b2, b3, b4, b5, b6, b7])
+
+
+TSIT5 = _tab("tsit5", _TSIT5_A, _TSIT5_B, btilde=_TSIT5_BTILDE, c=_TSIT5_C,
+             order=5, embedded_order=4, fsal=True, interp_bpoly=_tsit5_bpoly)
+
+
+# ----------------------------------------------------------------------------
+# Dormand-Prince 5(4) — [Dormand & Prince 1980]; MATLAB ode45 / dopri5. FSAL.
+# ----------------------------------------------------------------------------
+_DOPRI5_A = [
+    [1 / 5],
+    [3 / 40, 9 / 40],
+    [44 / 45, -56 / 15, 32 / 9],
+    [19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729],
+    [9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656],
+    [35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84],
+]
+_DOPRI5_B = [35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0]
+_DOPRI5_BHAT = [5179 / 57600, 0.0, 7571 / 16695, 393 / 640, -92097 / 339200,
+                187 / 2100, 1 / 40]
+DOPRI5 = _tab("dopri5", _DOPRI5_A, _DOPRI5_B, bhat=_DOPRI5_BHAT,
+              c=[0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0],
+              order=5, embedded_order=4, fsal=True)
+
+
+# ----------------------------------------------------------------------------
+# Cash-Karp 5(4) — the MPGOS comparison method in the paper's Fig. 5/6.
+# ----------------------------------------------------------------------------
+_RKCK_A = [
+    [1 / 5],
+    [3 / 40, 9 / 40],
+    [3 / 10, -9 / 10, 6 / 5],
+    [-11 / 54, 5 / 2, -70 / 27, 35 / 27],
+    [1631 / 55296, 175 / 512, 575 / 13824, 44275 / 110592, 253 / 4096],
+]
+_RKCK_B = [37 / 378, 0.0, 250 / 621, 125 / 594, 0.0, 512 / 1771]
+_RKCK_BHAT = [2825 / 27648, 0.0, 18575 / 48384, 13525 / 55296, 277 / 14336,
+              1 / 4]
+RKCK54 = _tab("rkck54", _RKCK_A, _RKCK_B, bhat=_RKCK_BHAT,
+              c=[0, 1 / 5, 3 / 10, 3 / 5, 1.0, 7 / 8],
+              order=5, embedded_order=4, fsal=False)
+
+
+# ----------------------------------------------------------------------------
+# Bogacki-Shampine 3(2) — MATLAB ode23. FSAL. Cheap low-accuracy option.
+# ----------------------------------------------------------------------------
+_BS3_A = [
+    [1 / 2],
+    [0.0, 3 / 4],
+    [2 / 9, 1 / 3, 4 / 9],
+]
+_BS3_B = [2 / 9, 1 / 3, 4 / 9, 0.0]
+_BS3_BHAT = [7 / 24, 1 / 4, 1 / 3, 1 / 8]
+BS3 = _tab("bs3", _BS3_A, _BS3_B, bhat=_BS3_BHAT, c=[0, 1 / 2, 3 / 4, 1.0],
+           order=3, embedded_order=2, fsal=True)
+
+
+# ----------------------------------------------------------------------------
+# Fehlberg 4(5) — classical RKF45.
+# ----------------------------------------------------------------------------
+_RKF45_A = [
+    [1 / 4],
+    [3 / 32, 9 / 32],
+    [1932 / 2197, -7200 / 2197, 7296 / 2197],
+    [439 / 216, -8.0, 3680 / 513, -845 / 4104],
+    [-8 / 27, 2.0, -3544 / 2565, 1859 / 4104, -11 / 40],
+]
+_RKF45_B = [16 / 135, 0.0, 6656 / 12825, 28561 / 56430, -9 / 50, 2 / 55]
+_RKF45_BHAT = [25 / 216, 0.0, 1408 / 2565, 2197 / 4104, -1 / 5, 0.0]
+RKF45 = _tab("rkf45", _RKF45_A, _RKF45_B, bhat=_RKF45_BHAT,
+             c=[0, 1 / 4, 3 / 8, 12 / 13, 1.0, 1 / 2],
+             order=5, embedded_order=4, fsal=False)
+
+
+# Classical RK4 (fixed-step only; btilde = 0 sentinel).
+_RK4_A = [
+    [1 / 2],
+    [0.0, 1 / 2],
+    [0.0, 0.0, 1.0],
+]
+RK4 = _tab("rk4", _RK4_A, [1 / 6, 1 / 3, 1 / 3, 1 / 6],
+           btilde=[0.0, 0.0, 0.0, 0.0], c=[0, 1 / 2, 1 / 2, 1.0],
+           order=4, embedded_order=4, fsal=False)
+
+
+TABLEAUS = {t.name: t for t in [TSIT5, DOPRI5, RKCK54, BS3, RKF45, RK4]}
+
+
+def get_tableau(name: str) -> Tableau:
+    try:
+        return TABLEAUS[name]
+    except KeyError:
+        raise KeyError(f"unknown tableau {name!r}; have {sorted(TABLEAUS)}")

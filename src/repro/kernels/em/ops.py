@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the SDE ensemble Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sde import EnsembleSDEResult
+
+
+def _pad_lanes(x, B):
+    N = x.shape[-1]
+    pad = (-N) % B
+    if pad == 0:
+        return x, N
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], mode="edge"), N
+
+
+def solve_sde_ensemble_pallas(prob, u0s, ps, key, t0, dt, n_steps,
+                              method="em", save_every=1, lane_tile=128,
+                              seed=None, noise_table=None,
+                              interpret=None) -> EnsembleSDEResult:
+    from .kernel import em_pallas_call
+    if seed is None:
+        seed = int(jnp.asarray(key)[-1]) if key is not None else 0
+    u0_l, N = _pad_lanes(u0s.T, lane_tile)
+    p_l, _ = _pad_lanes(ps.T, lane_tile)
+    if noise_table is not None:
+        noise_table, _ = _pad_lanes(noise_table, lane_tile)
+    us, uf = em_pallas_call(
+        prob.f, prob.g, u0_l, p_l, noise=prob.noise, method=method, t0=t0,
+        dt=dt, n_steps=n_steps, save_every=save_every,
+        m_noise=prob.noise_dim(), seed=seed, noise_table=noise_table,
+        lane_tile=lane_tile, interpret=interpret)
+    ts = jnp.asarray(t0, u0s.dtype) + dt * save_every * jnp.arange(
+        1, n_steps // save_every + 1, dtype=u0s.dtype)
+    return EnsembleSDEResult(ts=ts, us=jnp.moveaxis(us, -1, 0)[:N],
+                             u_final=uf.T[:N],
+                             nf=jnp.asarray(n_steps * N))

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the SDE kernel: lanes-mode scan using the SAME stepper
+definitions and (optionally) the SAME counter RNG, so pathwise comparison is
+exact — not just statistical."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sde import SDE_STEPPERS
+from repro.kernels.rng import counter_normals_threefry
+
+
+def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
+              seed=0, noise_table=None):
+    """u0s (N, n), ps (N, m). Replays the kernel's exact noise stream
+    (threefry counters over global lane indices) or a supplied table.
+    Returns (us (S, n, N), uf (n, N))."""
+    stepper = SDE_STEPPERS[method]
+    u0 = u0s.T
+    p = ps.T
+    n, N = u0.shape
+    m = prob.noise_dim()
+    dtype = u0.dtype
+    sdt = jnp.sqrt(jnp.asarray(dt, dtype))
+    S = n_steps // save_every
+    lane = jnp.broadcast_to(jnp.arange(N, dtype=jnp.uint32)[None], (m, N))
+    rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[:, None], (m, N))
+
+    def step(k, carry):
+        u, us = carry
+        if noise_table is not None:
+            z = jax.lax.dynamic_slice(noise_table, (k, 0, 0), (1, m, N))[0]
+            z = z.astype(dtype)
+        else:
+            z = counter_normals_threefry(seed, k, lane, rows, dtype)
+        t = t0 + k * jnp.asarray(dt, dtype)
+        u = stepper(prob.f, prob.g, u, p, t, jnp.asarray(dt, dtype), z * sdt,
+                    prob.noise)
+        s = (k + 1) // save_every - 1
+        us = jax.lax.cond(
+            (k + 1) % save_every == 0,
+            lambda us: jax.lax.dynamic_update_slice(us, u[None], (s, 0, 0)),
+            lambda us: us, us)
+        return (u, us)
+
+    us0 = jnp.zeros((S, n, N), dtype)
+    u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+    return us, u_f

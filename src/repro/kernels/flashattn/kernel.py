@@ -1,0 +1,106 @@
+"""Flash attention (fwd) Pallas TPU kernel — §Perf Cell-A iteration A4.
+
+The roofline analysis showed the T² attention-score tensors dominate the
+memory term of every long-context cell; at HLO level two chained dots always
+materialize the (T,S) intermediate. The fix is the same one the paper applies
+to ODE solving: fuse the WHOLE computation into one kernel so the intermediate
+state (here: score blocks + online-softmax statistics, there: RK stages)
+lives in VMEM only. HBM traffic drops from O(T·S) to O(T·hd + S·hd) per head.
+
+Grid: (batch, q-head, T/block_q). Each cell loads its q block, streams K/V
+blocks from a VMEM-resident (S, hd) slice, and carries the online-softmax
+running (max m, sum l, accumulator acc) in registers — the standard
+[Dao et al.] recurrence:
+    m' = max(m, rowmax(s));  p = exp(s - m')
+    l' = l·exp(m - m') + rowsum(p);  acc' = acc·exp(m - m') + p @ V
+GQA: kv head = q head // (H/KV) via the BlockSpec index map. Causal masking
+per block; strictly-upper K/V blocks are skipped entirely (2× work saving).
+
+VMEM per cell ≈ S·hd·2·2B [K,V bf16] + block_q·(hd+block_k)·4B ≈ 17 MB at
+S=32k, hd=128 — fits v5e VMEM with bf16 K/V residency.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                  scale: float, causal: bool):
+    # q_ref: (1, block_q, 1, hd); k_ref/v_ref: (1, S, 1, hd)
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale    # (bq, hd)
+    S = k_ref.shape[1]
+    hd = q.shape[-1]
+    nblk = S // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(j * block_k, block_k), 0, :] \
+            .astype(jnp.float32)                          # (bk, hd)
+        v = v_ref[0, pl.dslice(j * block_k, block_k), 0, :] \
+            .astype(jnp.float32)
+        s = q @ k.T                                       # (bq, bk)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (q.shape[0], block_k), 0)
+            cols = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (q.shape[0], block_k), 1)
+            s = jnp.where(cols <= rows, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    bq = q.shape[0]
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    if causal:
+        # K/V block j contributes only if j*block_k <= (qi+1)*block_q - 1
+        upper = jnp.minimum((qi * block_q + block_q + block_k - 1)
+                            // block_k, nblk)
+    else:
+        upper = nblk
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, a0))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[:, None]).astype(o_ref.dtype)
+    o_ref[0, :, 0, :] = out
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, block_q=128, block_k=128,
+                           interpret=None):
+    """q (B, T, H, hd); k/v (B, S, KV, hd) -> (B, T, H, hd).
+
+    T % block_q == 0, S % block_k == 0 (ops.py pads). GQA by head mapping.
+    """
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    assert T % block_q == 0 and S % block_k == 0
+    g = H // KV
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    scale = 1.0 / float(hd) ** 0.5
+
+    kern = functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                             scale=scale, causal=causal)
+    grid = (B, H, T // block_q)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h // g, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,28 @@
+"""Public wrapper: pads T/S to block multiples, restores shapes."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret=None):
+    """q (B,T,H,hd); k/v (B,S,KV,hd). Pads T and S up to block multiples
+    (padded keys are masked out by causality / a length mask)."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+    bq = min(block_q, max(16, T))
+    bk = min(block_k, max(16, S))
+    pt = (-T) % bq
+    ps = (-S) % bk
+    if pt:
+        q = jnp.pad(q, ((0, 0), (0, pt), (0, 0), (0, 0)))
+    if ps:
+        k = jnp.pad(k, ((0, 0), (0, ps), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, ps), (0, 0), (0, 0)))
+    if ps and not causal:
+        raise NotImplementedError("non-causal padding needs a length mask")
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=interpret)
+    return out[:, :T]

@@ -1,0 +1,22 @@
+"""Dense-attention oracle for the flash kernel (f32 math, explicit softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, causal=True):
+    """q (B,T,H,hd); k/v (B,S,KV,hd) -> (B,T,H,hd), GQA by head grouping."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, T, KV, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) / jnp.sqrt(float(hd))
+    if causal:
+        mask = jnp.arange(S)[None, :] <= jnp.arange(T)[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, vf)
+    return o.reshape(B, T, H, hd).astype(q.dtype)

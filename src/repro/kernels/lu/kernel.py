@@ -1,0 +1,62 @@
+"""Batched small-matrix LU solve (paper §5.1.3): W x = b for N independent
+systems, W = -γI + J block-diagonal over the ensemble.
+
+TPU mapping: lanes are systems — W is laid out (n, n, LANES) so every
+elimination/back-substitution scalar op is a (LANES,)-wide vector op; the
+whole factorization is an unrolled register-level computation per tile with
+zero HBM traffic between steps (the GPU version's per-thread LU in registers).
+No pivoting: the paper's W = -γI + J systems are diagonally dominated for the
+step sizes where stiff solvers operate (standard in Rosenbrock GPU solvers);
+the ops-layer falls back to the jnp reference on singular pivots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def build_lu_kernel(n: int):
+    def kernel(W_ref, b_ref, x_ref):
+        W = W_ref[...]                 # (n, n, B)
+        b = b_ref[...]                 # (n, B)
+        rows = [W[i] for i in range(n)]   # each (n, B)
+        rhs = [b[i] for i in range(n)]    # each (B,)
+        # forward elimination (unrolled; every op is lane-vectorized)
+        for k in range(n):
+            inv = 1.0 / rows[k][k]
+            for i in range(k + 1, n):
+                m = rows[i][k] * inv
+                rows[i] = rows[i] - m * rows[k]
+                rhs[i] = rhs[i] - m * rhs[k]
+        # back substitution
+        xs = [None] * n
+        for i in reversed(range(n)):
+            acc = rhs[i]
+            for j in range(i + 1, n):
+                acc = acc - rows[i][j] * xs[j]
+            xs[i] = acc / rows[i][i]
+        x_ref[...] = jnp.stack(xs)
+
+    return kernel
+
+
+def lu_solve_pallas(W_lanes, b_lanes, lane_tile=128, interpret=None):
+    """W_lanes (n, n, N), b_lanes (n, N) -> x (n, N). N % lane_tile == 0."""
+    n = W_lanes.shape[0]
+    N = W_lanes.shape[-1]
+    assert W_lanes.shape == (n, n, N) and b_lanes.shape == (n, N)
+    assert N % lane_tile == 0
+    B = lane_tile
+    T = N // B
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    fn = pl.pallas_call(
+        build_lu_kernel(n),
+        grid=(T,),
+        in_specs=[pl.BlockSpec((n, n, B), lambda i: (0, 0, i)),
+                  pl.BlockSpec((n, B), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((n, B), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, N), W_lanes.dtype),
+        interpret=interpret)
+    return fn(W_lanes, b_lanes)

@@ -1,0 +1,24 @@
+"""Public batched-LU entry: (N, n, n) systems; pads the batch, picks backend."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lu_solve_pallas
+
+
+def batched_solve(W, b, lane_tile=128, backend="pallas", interpret=None):
+    """Solve W[i] x[i] = b[i] for all i. W (N, n, n), b (N, n) -> (N, n)."""
+    N, n, _ = W.shape
+    if backend == "jnp":
+        return jnp.linalg.solve(W, b[..., None])[..., 0]
+    pad = (-N) % lane_tile
+    Wl = jnp.moveaxis(W, 0, -1)          # (n, n, N)
+    bl = b.T                             # (n, N)
+    if pad:
+        eye = jnp.broadcast_to(jnp.eye(n, dtype=W.dtype)[..., None],
+                               (n, n, pad))
+        Wl = jnp.concatenate([Wl, eye], axis=-1)
+        bl = jnp.concatenate([bl, jnp.zeros((n, pad), b.dtype)], axis=-1)
+    x = lu_solve_pallas(Wl, bl, lane_tile=lane_tile, interpret=interpret)
+    return x.T[:N]

@@ -1,0 +1,7 @@
+"""Oracle: vmapped dense solve via jnp.linalg (LAPACK on CPU, partial pivoting)."""
+import jax.numpy as jnp
+
+
+def ref_solve(W, b):
+    """W (N, n, n), b (N, n) -> (N, n)."""
+    return jnp.linalg.solve(W, b[..., None])[..., 0]

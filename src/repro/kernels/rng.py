@@ -1,0 +1,62 @@
+"""Counter-based RNG for inside-kernel noise generation (paper §6.8).
+
+The paper's GPU kernels draw per-thread noise from a counter-based PRNG; the
+TPU-native equivalent is `pltpu.prng_seed`/`prng_random_bits`, but that
+primitive has no CPU/interpret lowering, so kernels default to a hand-rolled
+**Threefry-2x32 (20 rounds)** — the same generator JAX itself uses — built from
+32-bit adds/xors/rotates only (TPU-friendly, identical bits on every backend,
+replayable from (seed, lane, step) counters).  `impl="tpu"` switches to the
+hardware PRNG on real TPUs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+_PARITY = 0x1BD11BDA  # python int: kernels may not capture array constants
+
+
+def _rotl(x, r):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """Threefry-2x32, 20 rounds. All args uint32 arrays (broadcastable).
+    Returns two uint32 arrays of the broadcast shape."""
+    ks0 = jnp.uint32(k0)
+    ks1 = jnp.uint32(k1)
+    ks2 = ks0 ^ ks1 ^ jnp.uint32(_PARITY)
+    x0 = jnp.asarray(c0, jnp.uint32) + ks0
+    x1 = jnp.asarray(c1, jnp.uint32) + ks1
+    subkeys = ((ks1, ks2), (ks2, ks0), (ks0, ks1), (ks1, ks2), (ks2, ks0))
+    for i in range(5):
+        for r in _ROTATIONS[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        a, b = subkeys[i]
+        x0 = x0 + a
+        x1 = x1 + b + jnp.uint32(i + 1)
+    return x0, x1
+
+
+def _to_unit(bits):
+    """uint32 -> float in (0, 1): (bits + 0.5) / 2^32, exact in f32 range."""
+    return (bits.astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -32)
+
+
+def counter_normals_threefry(seed, step, lane_idx, row_idx, dtype=jnp.float32):
+    """N(0,1) draws indexed by (seed; step, noise-row, lane) — one value per
+    (row_idx, lane_idx) element via Box-Muller on two threefry words.
+
+    lane_idx: (…,) global trajectory indices (uint32-able)
+    row_idx:  (…,) noise-component indices, broadcastable against lane_idx.
+    """
+    c0 = (jnp.asarray(step, jnp.uint32) * jnp.uint32(0x9E3779B9)
+          + jnp.asarray(row_idx, jnp.uint32))
+    c1 = jnp.asarray(lane_idx, jnp.uint32)
+    x0, x1 = threefry2x32(jnp.uint32(seed), jnp.uint32(0x243F6A88), c0, c1)
+    u1 = _to_unit(x0)
+    u2 = _to_unit(x1)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return z.astype(dtype)

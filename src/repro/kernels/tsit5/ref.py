@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused-integration kernel: vmap of the scalar-mode
+reference solver (independent control-flow path from the lanes engine)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers import solve_one
+from repro.core.tableaus import Tableau
+
+
+def ref_solve(f, tab: Tableau, u0s, ps, t0, tf, dt0, saveat, rtol, atol,
+              adaptive=True, max_iters=100_000, event=None):
+    """u0s (N,n), ps (N,m) -> (us (N,S,n), uf (N,n), t_final (N,),
+    naccept (N,), nreject (N,))."""
+
+    def one(u0, p):
+        r = solve_one(f, tab, u0, p, t0, tf, dt0, saveat=saveat, rtol=rtol,
+                      atol=atol, adaptive=adaptive, max_iters=max_iters,
+                      event=event)
+        if event is not None:
+            r, _ = r
+        return r
+
+    res = jax.vmap(one)(u0s, ps)
+    return res.us, res.u_final, res.t_final, res.naccept, res.nreject

@@ -1,0 +1,77 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-measure the three chosen cells under named
+variants (hypothesis -> change -> measure; log consumed by EXPERIMENTS.md).
+
+  python -m repro.launch.perf --cell qwen_prefill --variant a1_bf16_scores
+  python -m repro.launch.perf --all
+"""
+import argparse
+import functools
+import json
+
+from repro.launch.roofline import calibrate_cell, roofline_row
+
+CELLS = {
+    "qwen_prefill": ("qwen2.5-32b", "prefill_32k"),
+    "grok_train": ("grok-1-314b", "train_4k"),
+    "mamba_decode": ("mamba2-2.7b", "decode_32k"),
+}
+
+# variant name -> run_cell kwargs (the code change itself lives in the repo;
+# variants toggle config-level switches where applicable)
+VARIANTS = {
+    "baseline": {},
+    "a1a2_bf16_pipeline": {},       # code-level: bf16 scores + bf16 logits
+    "b1_remat_dots": {"remat_mode": "dots"},
+    "b2_zero1": {"shard_mode": "zero1"},
+    "c1_state_sharding": {},        # code-level: cache_specs model sharding
+}
+
+
+def measure(cell_key: str, variant: str, out_dir: str):
+    from repro.launch.dryrun import run_cell
+    arch, shape = CELLS[cell_key]
+    fn = functools.partial(run_cell, **VARIANTS[variant])
+    cal = calibrate_cell(arch, shape, fn)
+    if not cal.get("ok"):
+        rec = {"cell": cell_key, "variant": variant,
+               "error": cal.get("error")}
+    else:
+        rec = roofline_row(arch, shape, cal)
+        rec.update({"cell": cell_key, "variant": variant})
+    path = os.path.join(out_dir, f"perf_{cell_key}_{variant}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if "error" in rec:
+        print(f"[perf] {cell_key}/{variant}: FAIL {rec['error']}", flush=True)
+    else:
+        print(f"[perf] {cell_key}/{variant}: "
+              f"t_c={rec['t_compute_s']:.3g} t_m={rec['t_memory_s']:.3g} "
+              f"t_x={rec['t_collective_s']:.3g} "
+              f"bneck={rec['bottleneck']} frac={rec['roofline_fraction']:.3f}",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS))
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+    if args.all:
+        plan = [("qwen_prefill", "a1a2_bf16_pipeline"),
+                ("grok_train", "a1a2_bf16_pipeline"),
+                ("grok_train", "b1_remat_dots"),
+                ("mamba_decode", "c1_state_sharding")]
+        for c, v in plan:
+            measure(c, v, args.out)
+    else:
+        measure(args.cell, args.variant, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# (safe: only ever run as a standalone module, like dryrun.py)
+
+"""Roofline analysis (deliverable g).
+
+Terms per (arch x shape) on the single-pod mesh, TPU v5e constants:
+    t_compute    = HLO_FLOPs_per_device   / 197e12
+    t_memory     = HLO_bytes_per_device   / 819e9
+    t_collective = collective_bytes_per_device / 50e9
+(cost_analysis is the per-device SPMD module, so dividing per-device numbers
+by per-chip peaks equals the spec's global/(chips*peak) form.)
+
+KNOWN XLA PITFALL (measured, see EXPERIMENTS.md §Roofline-method): XLA's
+cost_analysis counts a scan/while body ONCE, so any layer-scanned model
+under-reports by ~L×. We therefore lower each cell at two shallow depths
+(multiples of the architecture's block pattern), fit
+    f(d) = base + d * per_layer
+and reconstruct full-depth FLOPs/bytes/collective-bytes. The same fit is
+applied to all three terms. MODEL_FLOPS is analytic (6·N_active·tokens for
+training + exact attention/SSM terms), giving the MODEL/HLO "useful compute"
+ratio the spec asks for.
+"""
+import argparse
+import dataclasses
+import json
+
+from repro.configs.archs import ARCHS, LONG_CONTEXT_SKIP, get_arch
+from repro.models.config import SHAPES, ModelConfig
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s / chip
+ICI_BW = 50e9           # B/s / link
+
+
+# --------------------------------------------------------------------------
+# analytic model FLOPs (the MODEL_FLOPS numerator)
+# --------------------------------------------------------------------------
+
+def _attn_flops(cfg: ModelConfig, B, T, decode_S=None):
+    """QK^T + AV einsum flops, all layers, full (unmasked-dense) compute as
+    implemented. Window layers use T*W."""
+    H, hd = cfg.n_heads, cfg.hd
+    if cfg.family == "ssm" or H == 0:
+        return 0
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("R", "R", "A")
+        n_att = sum(1 for i in range(cfg.n_layers)
+                    if pat[i % len(pat)] == "A")
+    else:
+        n_att = cfg.n_layers
+    if decode_S is not None:
+        per = 4 * B * H * hd * min(decode_S, cfg.window or decode_S) \
+            if (cfg.family == "hybrid") else 4 * B * H * hd * decode_S
+        # gemma3: local layers only see the window
+        if cfg.global_every:
+            n_glob = cfg.n_layers // cfg.global_every
+            n_loc = cfg.n_layers - n_glob
+            return (n_glob * 4 * B * H * hd * decode_S
+                    + n_loc * 4 * B * H * hd * min(cfg.window, decode_S))
+        return n_att * per
+    # full-sequence compute
+    if cfg.global_every:
+        n_glob = cfg.n_layers // cfg.global_every
+        n_loc = cfg.n_layers - n_glob
+        return (n_glob * 4 * B * H * hd * T * T
+                + n_loc * 4 * B * H * hd * T * min(cfg.window, T))
+    if cfg.family == "hybrid":
+        return n_att * 4 * B * H * hd * T * min(cfg.window or T, T)
+    extra = 0
+    if cfg.family == "encdec":
+        # encoder self (enc_seq^2) + cross (T*enc_seq)
+        extra = (cfg.enc_layers * 4 * B * H * hd * cfg.enc_seq ** 2
+                 + cfg.n_layers * 4 * B * H * hd * T * cfg.enc_seq)
+    return n_att * 4 * B * H * hd * T * T + extra
+
+
+def _matmul_params(cfg: ModelConfig):
+    """Active params participating in matmuls per token (embed gather
+    excluded; logits matmul included)."""
+    n = cfg.n_params_active()
+    n -= cfg.vocab_size * cfg.d_model          # embedding gather
+    if cfg.tie_embeddings:
+        n += cfg.vocab_padded * cfg.d_model    # tied logits matmul
+    else:
+        n += (cfg.vocab_padded - cfg.vocab_size) * cfg.d_model  # padding
+    return n
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    s = SHAPES[shape_name]
+    B, T = s.global_batch, s.seq_len
+    N = _matmul_params(cfg)
+    if s.kind == "train":
+        return 6.0 * N * B * T + 3.0 * _attn_flops(cfg, B, T)
+    if s.kind == "prefill":
+        return 2.0 * N * B * T + _attn_flops(cfg, B, T)
+    # decode: one token against an S-long cache
+    return 2.0 * N * B + _attn_flops(cfg, B, 1, decode_S=T)
+
+
+# --------------------------------------------------------------------------
+# depth-calibrated HLO totals
+# --------------------------------------------------------------------------
+
+def with_depth(cfg: ModelConfig, d: int) -> ModelConfig:
+    kw = {"n_layers": d}
+    if cfg.family == "encdec":
+        kw["enc_layers"] = d
+    return dataclasses.replace(cfg, **kw)
+
+
+def depth_pair(cfg: ModelConfig):
+    period = (cfg.global_every or
+              (len(cfg.block_pattern) if cfg.block_pattern else 0) or 1)
+    d1 = period if period > 1 else 2
+    return d1, 2 * d1
+
+
+def calibrate_cell(arch: str, shape_name: str, run_cell_fn) -> dict:
+    """Two shallow lowers -> per-layer slopes -> full-depth reconstruction."""
+    cfg = get_arch(arch)
+    d1, d2 = depth_pair(cfg)
+    recs = {}
+    for d in (d1, d2):
+        sub = with_depth(cfg, d)
+        # register the shallow config temporarily
+        name = f"{arch}@d{d}"
+        ARCHS[name] = dataclasses.replace(sub, name=name)
+        try:
+            # scan_unroll: XLA counts rolled scan bodies once — unroll the
+            # shallow model so both depths carry their true totals.
+            recs[d] = run_cell_fn(name, shape_name, False, scan_unroll=True)
+        finally:
+            del ARCHS[name]
+        if not recs[d]["ok"]:
+            return {"ok": False, "error": recs[d].get("error"),
+                    "which": f"depth {d}"}
+    out = {"ok": True, "d1": d1, "d2": d2}
+    L = cfg.n_layers
+    for k in ("flops", "hlo_bytes", "collective_bytes"):
+        f1, f2 = recs[d1][k], recs[d2][k]
+        per_layer = (f2 - f1) / (d2 - d1)
+        base = f1 - d1 * per_layer
+        if per_layer < 0 or base < 0:
+            # fusion variance between depths can produce a (small) negative
+            # fit component; fall back to the conservative through-origin
+            # slope so the reconstruction stays positive
+            per_layer = max(f2, f1) / d2
+            base = 0.0
+        out[k] = base + L * per_layer
+        out[k + "_per_layer"] = per_layer
+        out[k + "_base"] = base
+    out["accum"] = recs[d1].get("accum", 1)
+    return out
+
+
+def roofline_row(arch: str, shape_name: str, cal: dict,
+                 n_devices: int = 256) -> dict:
+    cfg = get_arch(arch)
+    t_c = cal["flops"] / PEAK_FLOPS
+    t_m = cal["hlo_bytes"] / HBM_BW
+    t_x = cal["collective_bytes"] / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    mf = model_flops(cfg, shape_name)
+    hlo_global = cal["flops"] * n_devices
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+        "bottleneck": dom[1],
+        "model_flops_global": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else float("nan"),
+        "roofline_bound_s": max(t_c, t_m, t_x),
+        "roofline_fraction": t_c / max(t_c, t_m, t_x),
+        "accum": cal.get("accum", 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    args = ap.parse_args()
+    from repro.launch.dryrun import run_cell
+
+    if args.arch:
+        cells = [(args.arch, args.shape)]
+    else:
+        cells = [(a, s) for a in ARCHS for s in SHAPES
+                 if not (s == "long_500k" and a in LONG_CONTEXT_SKIP)]
+    rows = []
+    for arch, shape in cells:
+        cal = calibrate_cell(arch, shape, run_cell)
+        if cal.get("ok"):
+            row = roofline_row(arch, shape, cal)
+            row.update({k: cal[k] for k in cal if k.endswith("_per_layer")})
+        else:
+            row = {"arch": arch, "shape": shape, "error": cal.get("error")}
+        rows.append(row)
+        with open(os.path.join(args.out, f"roofline_{arch}_{shape}.json"),
+                  "w") as f:
+            json.dump(row, f, indent=1)
+        print(f"[roofline] {arch} x {shape}: "
+              + (f"bottleneck={row.get('bottleneck')} "
+                 f"frac={row.get('roofline_fraction', 0):.3f}"
+                 if "error" not in row else f"FAIL {row['error']}"),
+              flush=True)
+    agg = "roofline_all.json" if not args.arch else \
+        f"roofline_run_{args.arch}_{args.shape}.json"
+    with open(os.path.join(args.out, agg), "w") as f:
+        json.dump(rows, f, indent=1)
+    if args.arch:
+        # refresh the full aggregate from per-cell files if it exists
+        full = os.path.join(args.out, "roofline_all.json")
+        if os.path.exists(full):
+            old = json.load(open(full))
+            for i, r in enumerate(old):
+                pc = os.path.join(args.out,
+                                  f"roofline_{r['arch']}_{r['shape']}.json")
+                if os.path.exists(pc):
+                    old[i] = json.load(open(pc))
+            json.dump(old, open(full, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input — weak-type
+correct, shardable, ZERO device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        # image tokens + text tokens = seq_len total positions
+        Tt = T - cfg.vis_seq
+        return {"tokens": sds((B, Tt), jnp.int32),
+                "labels": sds((B, Tt), jnp.int32),
+                "patches": sds((B, cfg.vis_seq, cfg.vis_dim), jnp.float32)}
+    if cfg.family == "encdec":
+        return {"tokens": sds((B, T), jnp.int32),
+                "labels": sds((B, T), jnp.int32),
+                "frames": sds((B, cfg.enc_seq, cfg.d_model), jnp.float32)}
+    return {"tokens": sds((B, T), jnp.int32),
+            "labels": sds((B, T), jnp.int32)}
+
+
+def decode_token_specs(shape: ShapeConfig):
+    return sds((shape.global_batch, 1), jnp.int32)
+
+
+def abstract_params(model):
+    return jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+
+def abstract_cache(model, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, model=None):
+    """Full input pytree (abstract) for the given cell, per shape kind."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "decode":
+        assert model is not None
+        return {"tokens": decode_token_specs(shape),
+                "cache": abstract_cache(model, shape.global_batch,
+                                        shape.seq_len)}
+    raise ValueError(shape.kind)

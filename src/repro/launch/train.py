@@ -1,0 +1,78 @@
+"""Training launcher: `python -m repro.launch.train --arch <id> [...]`.
+
+On real hardware this builds the production mesh and pjits the step over it;
+on this CPU container it falls back to single-device (use --smoke to select
+the reduced config). Fault-tolerant by construction: resumes from the latest
+checkpoint, data cursor included (dist/fault.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.archs import get_arch
+from repro.data.pipeline import DataPipeline
+from repro.dist.fault import TrainSupervisor
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.train.trainer import make_train_step, pick_accum
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=0, help="0 = auto")
+    ap.add_argument("--shard-mode", default="fsdp",
+                    choices=["fsdp", "zero1", "tp"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=100)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the 16x16 mesh (requires 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch + ("-smoke" if args.smoke else ""))
+    mesh = None
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    model = build_model(cfg, dtype=jnp.float32 if mesh is None
+                        else jnp.bfloat16, remat=mesh is not None)
+    accum = args.accum or pick_accum(cfg, args.batch, args.seq)
+    opt = AdamW(lr=cosine_schedule(args.lr, 20, args.steps))
+    plan = make_train_step(model, opt, mesh=mesh, accum=accum, donate=False,
+                           shard_mode=args.shard_mode)
+
+    sup = TrainSupervisor(args.ckpt_dir + "/" + cfg.name,
+                          save_every=args.save_every)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start, state, extra = sup.resume_or_init(
+        lambda: {"params": params, "opt": opt_state},
+        {"params": params, "opt": opt_state})
+    params, opt_state = state["params"], state["opt"]
+    pipe = DataPipeline(cfg, batch=args.batch, seq_len=args.seq,
+                        start_step=extra.get("cursor", 0))
+    print(f"training {cfg.name} from step {start} "
+          f"(accum={accum}, shard={args.shard_mode}, mesh={mesh})")
+    for step in range(start + 1, args.steps + 1):
+        t0 = time.perf_counter()
+        params, opt_state, m = plan.step_fn(params, opt_state, next(pipe))
+        if step % 10 == 0 or step == 1:
+            print(f"step {step:5d}  loss {float(m['loss']):.4f}  "
+                  f"{time.perf_counter() - t0:.2f}s/step", flush=True)
+        sup.maybe_save(step, {"params": params, "opt": opt_state},
+                       {"cursor": pipe.cursor()})
+    pipe.close()
+
+
+if __name__ == "__main__":
+    main()

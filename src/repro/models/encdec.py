@@ -1,0 +1,188 @@
+"""Whisper-style encoder-decoder BACKBONE (paper pool entry: whisper-tiny).
+
+Per the assignment the conv/mel audio frontend is a STUB: `input_specs()`
+provides precomputed frame embeddings (B, enc_seq, D). The backbone is real:
+bidirectional transformer encoder + causal decoder with cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (apply_rope, attention_decode, attention_train,
+                     attn_params, cross_attention, mlp_params, rmsnorm,
+                     rope_freqs, swiglu)
+from .lm import _embed_params, _logits, xent_loss
+
+Array = Any
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig, dtype=jnp.bfloat16, remat=False,
+                 unroll=1):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.remat = remat
+        self.unroll = unroll
+        from .lm import ActivationSharding
+        self.act_shard = ActivationSharding(None)
+        self.q_chunk = 0
+
+    def _enc_block_params(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"attn": attn_params(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd, self.dtype),
+                "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, self.dtype),
+                "ln1": jnp.zeros((cfg.d_model,), self.dtype),
+                "ln2": jnp.zeros((cfg.d_model,), self.dtype)}
+
+    def _dec_block_params(self, key):
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = self._enc_block_params(jax.random.fold_in(key, 0))
+        p["xattn"] = attn_params(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, self.dtype)
+        p["lnx"] = jnp.zeros((cfg.d_model,), self.dtype)
+        return p
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ke, k1, k2 = jax.random.split(key, 3)
+        params = _embed_params(ke, cfg, self.dtype)
+        params["enc_blocks"] = jax.vmap(self._enc_block_params)(
+            jax.random.split(k1, cfg.enc_layers))
+        params["dec_blocks"] = jax.vmap(self._dec_block_params)(
+            jax.random.split(k2, cfg.n_layers))
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), self.dtype)
+        return params
+
+    def _attn_kwargs(self):
+        cfg = self.cfg
+        return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                    rope_theta=cfg.rope_theta, q_chunk=self.q_chunk)
+
+    def encode(self, params, frames):
+        """frames: (B, enc_seq, D) stub embeddings -> encoder states."""
+        cfg = self.cfg
+        x = frames.astype(self.dtype)
+
+        def block(p, x):
+            x = self.act_shard(x)
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            a = attention_train(h, p["attn"], causal=False,
+                                **self._attn_kwargs())
+            x = x + a
+            h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+            return x + swiglu(h2, p["mlp"])
+
+        if self.remat:
+            block = jax.checkpoint(block)
+        x, _ = jax.lax.scan(lambda c, p: (block(p, c), None), x,
+                            params["enc_blocks"], unroll=self.unroll)
+        return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _xkv(self, p, enc):
+        cfg = self.cfg
+        B, S, D = enc.shape
+        k = (enc @ p["xattn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        v = (enc @ p["xattn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        return k, v
+
+    def _dec_block(self, p, x, enc, mode, cache=None):
+        cfg = self.cfg
+        x = self.act_shard(x)
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            a, cache = attention_decode(h, p["attn"], cache,
+                                        **self._attn_kwargs())
+        else:
+            a = attention_train(h, p["attn"], **self._attn_kwargs())
+        x = x + a
+        h = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        xk, xv = self._xkv(p, enc)
+        x = x + cross_attention(h, p["xattn"], xk, xv, n_heads=cfg.n_heads,
+                                n_kv=cfg.n_kv_heads, hd=cfg.hd)
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + swiglu(h, p["mlp"]), cache
+
+    def forward(self, params, tokens, frames):
+        cfg = self.cfg
+        enc = self.encode(params, frames)
+        x = params["embed"][tokens].astype(self.dtype)
+
+        def body(x, p):
+            y, _ = self._dec_block(p, x, enc, "train")
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"],
+                            unroll=self.unroll)
+        return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch):
+        x = self.forward(params, batch["tokens"], batch["frames"])
+        logits = _logits(x, params, self.cfg)
+        ce = xent_loss(logits[:, :-1], batch["labels"][:, 1:])
+        return ce, {"ce": ce, "aux": jnp.asarray(0.0)}
+
+    def init_cache(self, batch, cache_len, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "v": jnp.zeros((L, batch, cache_len, cfg.n_kv_heads, cfg.hd),
+                           dtype),
+            "enc": jnp.zeros((batch, cfg.enc_seq, cfg.d_model), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        frames = batch["frames"]
+        B, T = tokens.shape
+        cache_len = cache_len or T
+        enc = self.encode(params, frames)
+        x = params["embed"][tokens].astype(self.dtype)
+
+        def body(x, p):
+            h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+            k = (h @ p["attn"]["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+            v = (h @ p["attn"]["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.hd)
+            cos, sin = rope_freqs(cfg.hd, cfg.rope_theta, jnp.arange(T))
+            k = apply_rope(k, cos, sin)
+            y, _ = self._dec_block(p, x, enc, "train")
+            return y, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["dec_blocks"],
+                                   unroll=self.unroll)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        pad = cache_len - T
+        if pad > 0:
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return _logits(x[:, -1:], params, cfg), {
+            "k": ks, "v": vs, "enc": enc, "pos": jnp.asarray(T, jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(self.dtype)
+        pos = cache["pos"]
+        enc = cache["enc"]
+
+        def body(x, xs):
+            p, ck, cv = xs
+            lc = {"k": ck, "v": cv, "pos": pos}
+            y, lc = self._dec_block(p, x, enc, "decode", cache=lc)
+            return y, (lc["k"], lc["v"])
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["dec_blocks"],
+                                             cache["k"], cache["v"]),
+                                   unroll=self.unroll)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return _logits(x, params, cfg), {"k": ks, "v": vs, "enc": enc,
+                                         "pos": pos + 1}

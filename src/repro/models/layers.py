@@ -1,0 +1,251 @@
+"""Shared transformer building blocks: RMSNorm, RoPE, GQA attention (global /
+sliding-window, optional softcap and bias), SwiGLU MLP.
+
+Conventions:
+  activations  x: (B, T, D), computed in the param dtype (bf16 target),
+  softmax/norm statistics in f32.
+  attention weights: wq (D, H*hd), wk/wv (D, KV*hd), wo (H*hd, D).
+  KV cache: dict(k=(B, S, KV, hd), v=(B, S, KV, hd), pos=()) — pos is the
+  current fill level (static-shape cache, masked reads).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+# ---------------------------------------------------------------------------
+# norms & positional encoding
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float, positions):
+    """positions (…,) -> cos/sin (…, hd/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(q, cos, sin):
+    """q (B, T, H, hd); cos/sin (T, hd/2) or (B, T, hd/2)."""
+    q1, q2 = jnp.split(q, 2, axis=-1)
+    cos = cos[..., None, :]          # head axis
+    sin = sin[..., None, :]
+    while cos.ndim < q1.ndim:        # leading batch axes
+        cos = cos[None]
+        sin = sin[None]
+    out = jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=-1)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _soft_cap(logits, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def attention_train(x, w, *, n_heads, n_kv, hd, rope_theta, window=0,
+                    softcap=0.0, is_global=True, bias=None, positions=None,
+                    causal=True, q_chunk=0):
+    """Self-attention over a full sequence (training / prefill compute).
+
+    w: dict(wq, wk, wv, wo [, bq, bk, bv]). window>0 & not is_global =>
+    sliding-window causal mask; causal=False => bidirectional (encoders).
+    q_chunk>0 => memory-efficient attention: scan over query blocks so the
+    peak score tensor is (…, q_chunk, S) instead of (…, T, S) — required for
+    the 32k prefill cells to fit HBM (§Dry-run memory proof); 0 => dense.
+    Returns (B, T, D).
+    """
+    B, T, D = x.shape
+    q = x @ w["wq"]
+    k = x @ w["wk"]
+    v = x @ w["wv"]
+    if bias is not None:
+        q = q + bias["bq"]
+        k = k + bias["bk"]
+        v = v + bias["bv"]
+    q = q.reshape(B, T, n_heads, hd)
+    k = k.reshape(B, T, n_kv, hd)
+    v = v.reshape(B, T, n_kv, hd)
+    if positions is None:
+        positions = jnp.arange(T)
+    cos, sin = rope_freqs(hd, rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    g = n_heads // n_kv
+    q = q.reshape(B, T, n_kv, g, hd)
+    # score pipeline stays in the compute dtype (bf16 deployment / f32+f64
+    # tests): the T^2 tensors dominate HBM bytes at long context, and bf16
+    # scores with f32-accumulated softmax sums are the standard accuracy
+    # trade (§Perf iteration A1 — halves-to-thirds the memory roofline term).
+    dt = x.dtype
+    neg = jnp.asarray(jnp.finfo(dt).min / 8, dt)
+    si = jnp.arange(T)[None, :]
+
+    def block(qb, q0):
+        """qb: (B, C, KV, g, hd) starting at global row q0. -> (B, C, H*hd)"""
+        C = qb.shape[1]
+        logits = jnp.einsum("bqkgh,bskh->bkgqs", qb, k)
+        logits = logits * (1.0 / float(hd) ** 0.5)
+        logits = _soft_cap(logits, softcap)
+        qi = q0 + jnp.arange(C)[:, None]
+        mask = (si <= qi) if causal else jnp.ones((C, T), bool)
+        if window:
+            # is_global may be a traced per-layer flag (gemma3 5:1 pattern)
+            wmask = mask & (si > qi - window)
+            mask = jnp.where(jnp.asarray(is_global), mask, wmask)
+        logits = jnp.where(mask, logits, neg)
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        e = jnp.exp(logits - m)
+        s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+        probs = (e / s.astype(dt))
+        ob = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+        return ob.reshape(B, C, n_heads * hd)
+
+    if q_chunk and T > q_chunk and T % q_chunk == 0:
+        nc = T // q_chunk
+        qc = q.reshape(B, nc, q_chunk, n_kv, g, hd)
+
+        def body(_, idx):
+            qb = qc[:, idx]
+            return None, block(qb, idx * q_chunk)
+
+        _, blocks = jax.lax.scan(body, None, jnp.arange(nc))
+        out = jnp.moveaxis(blocks, 0, 1).reshape(B, T, n_heads * hd)
+    else:
+        out = block(q, 0)
+    return out @ w["wo"]
+
+
+def attention_decode(x, w, cache: Dict[str, Array], *, n_heads, n_kv, hd,
+                     rope_theta, window=0, softcap=0.0, is_global=True,
+                     bias=None, q_chunk=0):  # q_chunk ignored (single token)
+    """One-token decode against a static-shape KV cache.
+
+    x: (B, 1, D); cache k/v: (B, S, KV, hd), cache["pos"]: scalar int32
+    absolute position of the NEW token. Two cache layouts:
+      absolute — slot i holds position i (default); causal mask si <= pos,
+                 optional sliding-window mask.
+      ring     — cache["write_idx"] present: slot = position % S (window-sized
+                 caches for local-attention layers; rope stays absolute so
+                 relative geometry is preserved, eviction is automatic).
+    Returns (out (B,1,D), new_cache).
+    """
+    B, T, D = x.shape
+    assert T == 1
+    S = cache["k"].shape[1]
+    pos = cache["pos"]
+    write_idx = cache.get("write_idx", pos)
+    q = x @ w["wq"]
+    k = x @ w["wk"]
+    v = x @ w["wv"]
+    if bias is not None:
+        q = q + bias["bq"]
+        k = k + bias["bk"]
+        v = v + bias["bv"]
+    q = q.reshape(B, 1, n_heads, hd)
+    k = k.reshape(B, 1, n_kv, hd)
+    v = v.reshape(B, 1, n_kv, hd)
+    cos, sin = rope_freqs(hd, rope_theta, pos[None].astype(jnp.float32))
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    zero = jnp.zeros((), write_idx.dtype)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (zero, write_idx, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (zero, write_idx, zero, zero))
+
+    g = n_heads // n_kv
+    qh = q.reshape(B, n_kv, g, hd)
+    dt = x.dtype
+    logits = jnp.einsum("bkgh,bskh->bkgs", qh, ck)
+    logits = logits * (1.0 / float(hd) ** 0.5)
+    logits = _soft_cap(logits, softcap)
+    si = jnp.arange(S)
+    valid = si <= pos
+    if window and "write_idx" not in cache:
+        wvalid = valid & (si > pos - window)
+        valid = jnp.where(jnp.asarray(is_global), valid, wvalid)
+    neg = jnp.asarray(jnp.finfo(dt).min / 8, dt)
+    logits = jnp.where(valid[None, None, None, :], logits, neg)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    probs = e / s.astype(dt)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, cv)
+    out = out.reshape(B, 1, n_heads * hd)
+    return out @ w["wo"], {"k": ck, "v": cv, "pos": pos + 1}
+
+
+def cross_attention(x, w, kv_k, kv_v, *, n_heads, n_kv, hd):
+    """Decoder→encoder cross-attention (whisper). kv_k/kv_v: (B, Senc, KV, hd)
+    precomputed from encoder output; no mask, no rope (absolute content)."""
+    B, T, D = x.shape
+    q = (x @ w["wq"]).reshape(B, T, n_heads, hd)
+    g = n_heads // n_kv
+    qh = q.reshape(B, T, n_kv, g, hd)
+    dt = x.dtype
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qh, kv_k)
+    logits = logits * (1.0 / float(hd) ** 0.5)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    probs = e / s.astype(dt)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, kv_v).reshape(B, T,
+                                                               n_heads * hd)
+    return out @ w["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w):
+    """w: dict(wi, wg, wo): (D,F), (D,F), (F,D)."""
+    return (jax.nn.silu(x @ w["wg"]) * (x @ w["wi"])) @ w["wo"]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def attn_params(key, D, n_heads, n_kv, hd, dtype, qkv_bias=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (D, n_kv * hd), dtype),
+        "wv": dense_init(ks[2], (D, n_kv * hd), dtype),
+        "wo": dense_init(ks[3], (n_heads * hd, D), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((n_kv * hd,), dtype)
+        p["bv"] = jnp.zeros((n_kv * hd,), dtype)
+    return p
+
+
+def mlp_params(key, D, F, dtype):
+    ks = jax.random.split(key, 3)
+    return {"wi": dense_init(ks[0], (D, F), dtype),
+            "wg": dense_init(ks[1], (D, F), dtype),
+            "wo": dense_init(ks[2], (F, D), dtype)}

@@ -1,0 +1,24 @@
+"""Model factory: config -> model instance (family dispatch)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .encdec import EncDecLM
+from .lm import DecoderLM, HybridLM, Mamba2LM
+from .vlm import VLM
+
+
+def build_model(cfg: ModelConfig, dtype=jnp.bfloat16, remat=False,
+                unroll=1, **kw):
+    if cfg.family in ("dense", "moe"):
+        return DecoderLM(cfg, dtype=dtype, remat=remat, unroll=unroll, **kw)
+    if cfg.family == "ssm":
+        return Mamba2LM(cfg, dtype=dtype, remat=remat, unroll=unroll, **kw)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, dtype=dtype, remat=remat, unroll=unroll)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, dtype=dtype, remat=remat, unroll=unroll)
+    if cfg.family == "vlm":
+        return VLM(cfg, dtype=dtype, remat=remat, unroll=unroll)
+    raise ValueError(f"unknown family {cfg.family!r}")

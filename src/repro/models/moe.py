@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN: grouped capacity-based top-k dispatch (GShard/GSPMD
+style) + always-on shared experts.
+
+Covers both assigned MoE architectures:
+  grok-1        — 8 experts, top-2, no shared experts (expert d_ff 32768).
+  deepseek-moe  — 64 fine-grained routed experts top-6 + 2 shared experts
+                  (expert d_ff 1408).
+
+Dispatch: tokens are processed in groups of `group_size`; within a group each
+token's top-k experts get a slot up to capacity C = ceil(g·topk/E · cf)
+(overflow soft-drops, standard Switch behaviour). Expert compute is then
+exactly E·C ≈ topk·cf tokens' worth of FFN — the compiled FLOPs track ACTIVE
+parameters (6·N_active·D), not total, which the roofline §MODEL/HLO ratio
+checks. Under GSPMD the expert axis shards over `model` when divisible
+(deepseek 64/16: expert parallelism; dispatch einsums become the all-to-all
+exchange), otherwise the FFN width shards (grok: 8 experts, TP within expert).
+Router runs in f32 and returns the Switch load-balance aux loss.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+Array = Any
+
+
+def moe_params(key, D, F, n_experts, n_shared, dtype):
+    ks = jax.random.split(key, 7)
+
+    def stack(k, shape):
+        return dense_init(k, shape, dtype, scale=1.0 / jnp.sqrt(shape[-2]))
+
+    p = {
+        "router": dense_init(ks[0], (D, n_experts), jnp.float32),
+        "wi": stack(ks[1], (n_experts, D, F)),
+        "wg": stack(ks[2], (n_experts, D, F)),
+        "wo": stack(ks[3], (n_experts, F, D)),
+    }
+    if n_shared:
+        p["s_wi"] = stack(ks[4], (n_shared, D, F))
+        p["s_wg"] = stack(ks[5], (n_shared, D, F))
+        p["s_wo"] = stack(ks[6], (n_shared, F, D))
+    return p
+
+
+def moe_ffn(x, p, *, topk: int, n_experts: int,
+            capacity_factor: float = 1.25, group_size: int = 4096):
+    """x (B, T, D) -> (out (B, T, D), aux_loss scalar).
+
+    capacity_factor=None => no-drop (C = g): used for inference paths where
+    token dropping would make prefill/decode inconsistent."""
+    B, T, D = x.shape
+    N = B * T
+    g = min(group_size, N)
+    assert N % g == 0, f"tokens {N} not divisible by MoE group size {g}"
+    G = N // g
+    E = n_experts
+    if capacity_factor is None:
+        C = g
+    else:
+        C = max(1, int((g * topk / E) * capacity_factor))
+    xf = x.reshape(G, g, D)
+
+    logits = jnp.einsum("Ggd,de->Gge", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, g, E)
+    topv, topi = jax.lax.top_k(probs, topk)                  # (G, g, k)
+    topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+    oh = jax.nn.one_hot(topi, E, dtype=jnp.float32)          # (G, g, k, E)
+
+    # position of each (token, k-slot) in its expert queue (token-major order)
+    ohf = oh.reshape(G, g * topk, E)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                      # (G, g*k, E)
+    pos_slot = jnp.sum(pos * ohf, axis=-1).reshape(G, g, topk)
+    pos_slot = pos_slot.astype(jnp.int32)
+    keep = (pos_slot < C).astype(jnp.float32)                # capacity drop
+    pos_oh = jax.nn.one_hot(pos_slot, C, dtype=jnp.float32)  # (G, g, k, C)
+
+    dispatch = jnp.einsum("Ggke,Ggkc,Ggk->Ggec", oh, pos_oh, keep)
+    combine = jnp.einsum("Ggec,Ggk,Ggke->Ggec", dispatch, topv, oh)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+
+    xe = jnp.einsum("Ggec,Ggd->Gecd", dispatch, xf)          # (G, E, C, D)
+    hg = jnp.einsum("Gecd,edf->Gecf", xe, p["wg"])
+    hi = jnp.einsum("Gecd,edf->Gecf", xe, p["wi"])
+    he = jax.nn.silu(hg) * hi
+    ye = jnp.einsum("Gecf,efd->Gecd", he, p["wo"])
+    y = jnp.einsum("Gecd,Ggec->Ggd", ye, combine)
+
+    if "s_wi" in p:   # shared experts: always-on, plain FFN sum
+        sg = jnp.einsum("Ggd,sdf->Ggsf", xf, p["s_wg"])
+        si = jnp.einsum("Ggd,sdf->Ggsf", xf, p["s_wi"])
+        y = y + jnp.einsum("Ggsf,sfd->Ggd", jax.nn.silu(sg) * si, p["s_wo"])
+
+    # Switch-style load-balance aux: E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(oh, axis=2), axis=(0, 1))
+    P_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e)
+    return y.reshape(B, T, D), aux

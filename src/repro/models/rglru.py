@@ -1,0 +1,78 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The gated diagonal linear recurrence
+    a_t = exp(-c · softplus(Λ) · r_t),   r_t, i_t = σ(linear(x_t))
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+is a per-channel one-step ODE integrator — training parallelizes it with an
+associative scan over time (the lanes-style treatment of the paper's fused
+time loop), decode is the O(1) recurrence.
+
+Block structure (Griffin): y = W_out[ RG-LRU(conv4(W_x x)) ⊙ GeLU(W_g x) ].
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .ssm import _causal_conv
+
+_C = 8.0
+
+
+def rglru_params(key, D, W, K, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (D, W), dtype),
+        "w_gate": dense_init(ks[1], (D, W), dtype),
+        "w_r": dense_init(ks[2], (W, W), dtype),
+        "w_i": dense_init(ks[3], (W, W), dtype),
+        "b_r": jnp.zeros((W,), jnp.float32),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "lam": jnp.full((W,), 0.65, jnp.float32),  # a ~ 0.94^r at init
+        "conv_w": dense_init(ks[4], (K, W), dtype, scale=0.5),
+        "w_out": dense_init(ks[5], (W, D), dtype),
+    }
+
+
+def _gates(xb, p):
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((xb @ p["w_r"]).astype(f32) + p["b_r"])
+    i = jax.nn.sigmoid((xb @ p["w_i"]).astype(f32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xb.astype(f32))
+    return a, gated
+
+
+def rglru_train(x, p, state=None):
+    """x (B,T,D) -> (y (B,T,D), state dict(h (B,W) f32, conv))."""
+    xb = x @ p["w_x"]
+    conv_state = None if state is None else state["conv"]
+    xb, conv_new = _causal_conv(xb, p["conv_w"], conv_state)
+    a, gated = _gates(xb, p)               # (B,T,W) f32
+    if state is not None:
+        # fold carried state into step 0: h_0 = a_0 h_in + gated_0
+        gated = gated.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h_fin = hh[:, -1]
+    y = (hh.astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])) @ p["w_out"]
+    return y, {"h": h_fin, "conv": conv_new}
+
+
+def rglru_decode(x, p, state):
+    """x (B,1,D), state dict(h (B,W) f32, conv (B,K-1,W))."""
+    xb = x @ p["w_x"]
+    xb, conv_new = _causal_conv(xb, p["conv_w"], state["conv"])
+    a, gated = _gates(xb, p)               # (B,1,W)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    y = (h[:, None].astype(x.dtype) * jax.nn.gelu(x @ p["w_gate"])) @ p["w_out"]
+    return y, {"h": h, "conv": conv_new}

@@ -1,0 +1,184 @@
+"""GSPMD sharding rules for the model zoo on the production mesh.
+
+Axis convention (launch/mesh.py):
+  "pod"   — cross-pod data parallelism (outermost; DCN-class links)
+  "data"  — in-pod data parallelism (batch axis / ensemble axis / cache-seq)
+  "model" — tensor/expert parallelism (16-way)
+
+Parameter rules are matched by leaf *path name* over the abstract param tree,
+so one matcher covers every family (stacked layer axes are skipped
+automatically: any leading axes beyond the rule's rank get None).
+
+Key choices (see DESIGN.md §4/§5):
+  embeddings      vocab-sharded over `model` (vocabs padded to /2048)
+  attention       fused head*head_dim feature dim over `model` (works for
+                  head counts not divisible by 16 — GSPMD propagates through
+                  the reshape)
+  MLP             F over `model` both directions (megatron pattern)
+  MoE             expert axis over `model` when divisible (deepseek 64/16 →
+                  EP), else F within expert (grok 8 experts → TP)
+  SSM / RG-LRU    inner width / rnn width over `model`
+  KV caches       batch over (pod, data) when divisible, else cache SEQUENCE
+                  over `data` (long_500k batch=1 → sequence-parallel decode)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def _rule_for(path_names, shape, cfg: ModelConfig, mdl="model"):
+    """Return a PartitionSpec for a parameter leaf."""
+    name = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else ""
+    rank = len(shape)
+
+    def spec(*tail):
+        # left-pad with None for stacked layer/period axes
+        pad = rank - len(tail)
+        return P(*([None] * pad + list(tail)))
+
+    ep = cfg.n_experts > 0 and cfg.n_experts % 16 == 0
+
+    if name == "embed":
+        return P(mdl, None)
+    if name == "unembed":
+        return P(None, mdl)
+    if name in ("wq", "wk", "wv"):
+        return spec(None, mdl)
+    if name in ("bq", "bk", "bv"):
+        return spec(mdl)
+    if name == "wo" and parent in ("attn", "xattn"):
+        return spec(mdl, None)
+    if name in ("wi", "wg") and parent == "moe" or name in ("s_wi", "s_wg"):
+        if ep and not name.startswith("s_"):
+            return spec(mdl, None, None)      # (E, D, F): expert parallel
+        return spec(None, None, mdl)          # TP within expert / shared
+    if name == "wo" and parent == "moe" or name == "s_wo":
+        if ep and not name.startswith("s_"):
+            return spec(mdl, None, None)
+        return spec(None, mdl, None)
+    if name == "router":
+        return spec(None, None)
+    if name in ("wi", "wg"):                   # dense mlp
+        return spec(None, mdl)
+    if name == "wo":                           # dense mlp out
+        return spec(mdl, None)
+    if name in ("w_x", "w_z", "w_dt", "w_gate"):
+        return spec(None, mdl)
+    if name in ("w_B", "w_C"):
+        return spec(None, None)
+    if name in ("w_r", "w_i"):
+        return spec(None, mdl)
+    if name in ("A_log", "dt_bias", "D_skip"):
+        return spec(mdl)
+    if name in ("b_r", "b_i", "lam", "gate_norm"):
+        return spec(mdl)
+    if name == "w_out":
+        return spec(mdl, None)
+    if name == "conv_w":
+        return spec(None, None)
+    if name in ("w1",):                        # vlm projector in
+        return P(None, mdl)
+    if name in ("w2",):
+        return P(None, mdl)
+    # norms, biases, scalars
+    return P(*([None] * rank))
+
+
+def param_specs(abstract_params, cfg: ModelConfig, mdl="model",
+                fsdp_axis: Optional[str] = None, fsdp_size: int = 16,
+                min_fsdp_elems: int = 2 ** 22):
+    """PartitionSpec tree matching an (abstract) parameter tree.
+
+    fsdp_axis: additionally shard each LARGE (>= min_fsdp_elems) >=2D weight's
+    biggest still-unsharded divisible dim over this axis (ZeRO-3/FSDP-style
+    storage sharding; GSPMD inserts the per-layer all-gathers). Required to
+    fit grok-1-scale params+optimizer in 16 GB/chip; small leaves stay
+    replicated over `data` to avoid pointless gather latency.
+    """
+
+    def visit(path, leaf):
+        names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        names = [str(n) for n in names if n is not None]
+        spec = _rule_for(names, leaf.shape, cfg, mdl)
+        if fsdp_axis is None or len(leaf.shape) < 2:
+            return spec
+        import numpy as _np
+        if _np.prod(leaf.shape) < min_fsdp_elems:
+            return spec
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        # pick the largest unsharded dim divisible by the fsdp axis size
+        cands = [(d, i) for i, d in enumerate(leaf.shape)
+                 if entries[i] is None and d % fsdp_size == 0]
+        if not cands:
+            return spec
+        _, idx = max(cands)
+        entries[idx] = fsdp_axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(visit, abstract_params)
+
+
+def batch_spec(mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes)
+
+
+def cache_specs(abstract_cache, cfg: ModelConfig, mesh, batch: int):
+    """Shard KV caches / recurrent states.
+
+    batch divisible by the data axes => shard batch; otherwise (long_500k,
+    batch=1) shard the cache SEQUENCE axis over `data` (sequence-parallel
+    decode) and recurrent-state width over `model`.
+    """
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    nbatch = 1
+    for a in daxes:
+        nbatch *= mesh.shape[a]
+    batch_ok = batch % nbatch == 0
+
+    def visit(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+        name = names[-1] if names else ""
+        rank = len(leaf.shape)
+        if name in ("k", "v"):
+            # (L?, B, S, KV, hd). Batch over data; ALSO shard the model axis:
+            # kv-heads when divisible (deepseek 16), else head_dim (128/256/64
+            # all divide 16) — without this a 32k cache is 64 GiB/device and
+            # does not fit HBM (measured; §Dry-run memory proof).
+            pad = rank - 4
+            kv_n, hd_n = leaf.shape[-2], leaf.shape[-1]
+            kvs, hds = (("model", None) if kv_n % 16 == 0 else
+                        (None, "model") if hd_n % 16 == 0 else (None, None))
+            if batch_ok:
+                return P(*([None] * pad + [daxes, None, kvs, hds]))
+            return P(*([None] * pad + [None, "data", kvs, hds]))
+        if name == "h":
+            # ssm (L,B,H,P,N) / rglru (P?,B,W). The head/width axis follows
+            # the params' `model` sharding — otherwise GSPMD re-gathers the
+            # state every layer (measured: dominates mamba2 decode traffic,
+            # §Perf iteration C1).
+            if rank == 5:      # ssm: (L, B, H, P, N)
+                hs = "model" if cfg.ssm_heads % 16 == 0 else None
+                return P(None, daxes if batch_ok else None, hs, None, None)
+            if rank >= 2:      # rglru: (..., B, W)
+                ws = "model" if (cfg.rnn_width or cfg.d_model) % 16 == 0 \
+                    else None
+                return P(*([None] * (rank - 2)
+                           + [daxes if batch_ok else None, ws]))
+            return P(*([None] * rank))
+        if name == "conv":
+            # (L?, B, K-1, C): C = din+2N (ssm) or W (rglru)
+            cs = "model" if leaf.shape[-1] % 16 == 0 else None
+            return P(*([None] * (rank - 3)
+                       + [daxes if batch_ok else None, None, cs]))
+        if name == "enc":
+            return P(daxes if batch_ok else None, None, None)
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(visit, abstract_cache)

@@ -1,0 +1,172 @@
+"""Mamba-2 / SSD (state-space duality) layer [arXiv:2405.21060].
+
+Training/prefill uses the chunked block decomposition: quadratic attention-like
+compute *within* chunks (MXU-friendly einsums) + a linear recurrence *across*
+chunk states — the TPU-native analogue of the paper's fused time-stepping: the
+recurrent state H advances chunk-to-chunk without leaving the device, exactly
+like the ODE kernel's loop-carried state. Decode is the O(1) recurrent step
+h' = exp(dt·A) h + dt·x⊗B, y = C·h.
+
+Shapes: x (B, T, D); inner width d_in = expand·D split into H heads of P=64;
+state N per head shared B/C (multi-value attention analogy).
+Validated against a naive per-step recurrence oracle (tests/test_models_ssm).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+
+Array = Any
+
+
+def ssd_params(key, cfg, dtype):
+    D = cfg.d_model
+    din = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    K = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "w_x": dense_init(ks[0], (D, din), dtype),
+        "w_z": dense_init(ks[1], (D, din), dtype),
+        "w_B": dense_init(ks[2], (D, N), dtype),
+        "w_C": dense_init(ks[3], (D, N), dtype),
+        "w_dt": dense_init(ks[4], (D, H), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "conv_w": dense_init(ks[5], (K, din + 2 * N), dtype, scale=0.5),
+        "gate_norm": jnp.zeros((din,), dtype),
+        "w_out": dense_init(ks[6], (din, D), dtype),
+    }
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv. u (B, T, C), w (K, C). state: (B, K-1, C) tail of
+    the previous tokens (decode) or None (train: left-pad zeros).
+    Returns (y (B,T,C), new_state (B, K-1, C))."""
+    K = w.shape[0]
+    B, T, C = u.shape
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)          # (B, K-1+T, C)
+    y = jnp.zeros_like(u)
+    for k in range(K):
+        y = y + ext[:, k:k + T, :] * w[k]
+    new_state = ext[:, T:, :] if K > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(xh, dt, B_in, C_in, A, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh (B,T,H,P), dt (B,T,H) [post-softplus], B_in/C_in (B,T,N), A (H,) (<0).
+    h0: initial state (B,H,P,N) or None. Returns (y (B,T,H,P), h_final).
+    """
+    Bsz, T, H, P = xh.shape
+    N = B_in.shape[-1]
+    L = min(chunk, T)
+    assert T % L == 0, f"seq {T} % chunk {L} != 0"
+    nc = T // L
+    # state/decay math in >= f32 (f64 when the caller is f64 — oracle tests)
+    f32 = jnp.result_type(jnp.float32, xh.dtype)
+
+    xc = xh.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(f32)
+    Bc = B_in.reshape(Bsz, nc, L, N)
+    Cc = C_in.reshape(Bsz, nc, L, N)
+
+    dA = dtc * A  # (B,c,L,H) log-decay per step (negative)
+    lcum = jnp.cumsum(dA, axis=2)                       # inclusive
+    # ---- intra-chunk (attention-like) ----
+    # decay[l,s] = exp(lcum[l] - lcum[s]) for s<=l else 0
+    dec = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]   # (B,c,L,S,H)
+    mask = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+    dec = jnp.where(mask[None, None, :, :, None], jnp.exp(dec), 0.0)
+    cb = jnp.einsum("bcln,bcsn->bcls", Cc.astype(f32), Bc.astype(f32))
+    scores = cb[..., None] * dec * dtc[:, :, None, :, :]    # (B,c,L,S,H)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores,
+                         xc.astype(f32))
+
+    # ---- chunk states ----
+    last = lcum[:, :, -1:, :]                                # (B,c,1,H)
+    decay_to_end = jnp.exp(last - lcum)                      # (B,c,L,H)
+    S_c = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                     decay_to_end * dtc, Bc.astype(f32), xc.astype(f32))
+
+    # ---- inter-chunk recurrence (scan over chunks) ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])                  # (B,c,H)
+
+    def step(h, inp):
+        cd, sc = inp                       # (B,H), (B,H,P,N)
+        h_new = h * cd[..., None, None] + sc
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+    h_fin, h_starts = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_c, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                  # (B,c,H,P,N)
+
+    # ---- contribution of carried-in state ----
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         Cc.astype(f32), jnp.exp(lcum), h_starts)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y.astype(xh.dtype), h_fin
+
+
+def ssd_layer_train(x, p, cfg, chunk=256, state=None):
+    """Full mamba2 block. x (B,T,D) -> (y (B,T,D), new_state dict or None)."""
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, T, D = x.shape
+    xi = x @ p["w_x"]
+    z = x @ p["w_z"]
+    Bv = x @ p["w_B"]
+    Cv = x @ p["w_C"]
+    conv_in = jnp.concatenate([xi, Bv, Cv], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    cy, conv_state_new = _causal_conv(conv_in, p["conv_w"], conv_state)
+    cy = jax.nn.silu(cy)
+    xi, Bv, Cv = cy[..., :din], cy[..., din:din + N], cy[..., din + N:]
+    dt = jax.nn.softplus(
+        (x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, T, H, P)
+    h0 = None if state is None else state["h"]
+    y, h_fin = ssd_chunked(xh, dt, Bv, Cv, A, chunk, h0=h0)
+    y = y + (p["D_skip"].astype(x.dtype))[None, None, :, None] * xh
+    y = y.reshape(B, T, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    new_state = {"h": h_fin, "conv": conv_state_new}
+    return out, new_state
+
+
+def ssd_layer_decode(x, p, cfg, state):
+    """One-token decode. x (B,1,D); state dict(h (B,H,P,N) f32, conv)."""
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B = x.shape[0]
+    xi = x @ p["w_x"]
+    z = x @ p["w_z"]
+    Bv = x @ p["w_B"]
+    Cv = x @ p["w_C"]
+    conv_in = jnp.concatenate([xi, Bv, Cv], axis=-1)
+    cy, conv_new = _causal_conv(conv_in, p["conv_w"], state["conv"])
+    cy = jax.nn.silu(cy)
+    xi, Bv, Cv = cy[..., :din], cy[..., din:din + N], cy[..., din + N:]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, 1, H, P).astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0] * A)                                # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0], Bv[:, 0]
+                     .astype(jnp.float32))
+    h = state["h"] * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cv[:, 0].astype(jnp.float32), h)
+    y = y + p["D_skip"][None, :, None] * xh[:, 0]
+    y = y.reshape(B, 1, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"h": h, "conv": conv_new}

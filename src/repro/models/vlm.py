@@ -1,0 +1,123 @@
+"""InternVL2-style VLM BACKBONE (paper pool entry: internvl2-26b).
+
+Per the assignment the InternViT frontend is a STUB: `input_specs()` provides
+precomputed patch embeddings (B, vis_seq, vis_dim). The backbone is real: an
+MLP projector into the LM width + the InternLM2 decoder; the image tokens are
+prepended to the text sequence, loss is computed on text positions only.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+from .lm import DecoderLM, _logits, xent_loss
+
+Array = Any
+
+
+class VLM:
+    def __init__(self, cfg: ModelConfig, dtype=jnp.bfloat16, remat=False,
+                 unroll=1):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.lm = DecoderLM(cfg, dtype=dtype, remat=remat, unroll=unroll)
+        # share the LM's activation-sharding hook (set by train/serve plans)
+        self.act_shard = self.lm.act_shard
+
+    def init_params(self, key):
+        k1, k2 = jax.random.split(key)
+        params = self.lm.init_params(k1)
+        ks = jax.random.split(k2, 2)
+        params["projector"] = {
+            "w1": dense_init(ks[0], (self.cfg.vis_dim, self.cfg.d_model),
+                             self.dtype),
+            "w2": dense_init(ks[1], (self.cfg.d_model, self.cfg.d_model),
+                             self.dtype),
+        }
+        return params
+
+    def _embed_multimodal(self, params, tokens, patches):
+        vis = jax.nn.gelu(patches.astype(self.dtype)
+                          @ params["projector"]["w1"])
+        vis = vis @ params["projector"]["w2"]               # (B, Tv, D)
+        txt = params["embed"][tokens].astype(self.dtype)    # (B, Tt, D)
+        return jnp.concatenate([vis, txt], axis=1)
+
+    def loss(self, params, batch):
+        """batch: tokens (B, Tt), labels (B, Tt), patches (B, Tv, vis_dim)."""
+        h0 = self._embed_multimodal(params, batch["tokens"], batch["patches"])
+        x, aux = self.lm.forward(params, None, h0=h0)
+        Tv = batch["patches"].shape[1]
+        logits = _logits(x[:, Tv:], params, self.cfg)       # text positions
+        ce = xent_loss(logits[:, :-1], batch["labels"][:, 1:])
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def init_cache(self, batch, cache_len, dtype=None):
+        return self.lm.init_cache(batch, cache_len, dtype)
+
+    def prefill(self, params, batch, cache_len=None):
+        """Image + prompt prefill. tokens (B,Tt), patches (B,Tv,vis_dim)."""
+        # Project and embed jointly, then run the LM prefill path on embeds:
+        h0 = self._embed_multimodal(params, batch["tokens"], batch["patches"])
+        B, T, _ = h0.shape
+        cache_len = cache_len or T
+        # reuse DecoderLM.prefill via a token-free variant: temporarily treat
+        # h0 as the embedded stream
+        return _prefill_from_embeds(self.lm, params, h0, cache_len)
+
+    def decode_step(self, params, cache, tokens):
+        return self.lm.decode_step(params, cache, tokens)
+
+
+def _prefill_from_embeds(lm: DecoderLM, params, h0, cache_len):
+    """DecoderLM.prefill generalized to a precomputed embedding stream."""
+    import jax.numpy as jnp
+    from .layers import apply_rope, attention_train, rope_freqs, swiglu
+    from .moe import moe_ffn
+    cfg = lm.cfg
+    B, T, _ = h0.shape
+    x = h0
+
+    def body(carry, xs):
+        x, aux = carry
+        p, is_global = xs
+        x = lm.act_shard(x)   # batch-sharding anchor (§Perf A3)
+        bias = ({k: p["attn"][k] for k in ("bq", "bk", "bv")}
+                if cfg.qkv_bias else None)
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        k = h @ p["attn"]["wk"]
+        v = h @ p["attn"]["wv"]
+        if bias is not None:
+            k = k + bias["bk"]
+            v = v + bias["bv"]
+        k = k.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+        v = v.reshape(B, T, cfg.n_kv_heads, cfg.hd)
+        cos, sin = rope_freqs(cfg.hd, cfg.rope_theta, jnp.arange(T))
+        k = apply_rope(k, cos, sin)
+        x = x + attention_train(h, p["attn"], is_global=is_global, bias=bias,
+                                **lm._attn_kwargs())
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if cfg.family in ("moe",):
+            y, a = moe_ffn(h2, p["moe"], topk=cfg.topk,
+                           n_experts=cfg.n_experts, capacity_factor=None,
+                           group_size=lm.moe_group)
+            aux = aux + a
+        else:
+            y = swiglu(h2, p["mlp"])
+        return (x + y, aux), (k, v)
+
+    (x, aux), (ks, vs) = jax.lax.scan(
+        body, (x, jnp.asarray(0.0, jnp.float32)),
+        (params["blocks"], lm.layer_global), unroll=lm.unroll)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(x[:, -1:], params, cfg)
+    pad = cache_len - T
+    if pad > 0:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(T, jnp.int32)}

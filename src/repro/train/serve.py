@@ -1,0 +1,107 @@
+"""Serving step factories: prefill (prompt -> cache) and decode (one token).
+
+These are the objects the dry-run lowers for the `prefill_32k`, `decode_32k`
+and `long_500k` cells; on CPU the examples drive them directly (mesh=None).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import batch_spec, cache_specs, param_specs
+
+Array = Any
+
+
+@dataclasses.dataclass
+class ServePlan:
+    prefill_fn: Any
+    decode_fn: Any
+    params_sharding: Any
+    cache_sharding: Any
+    abstract_params: Any
+    abstract_cache: Any
+
+
+def make_serve_plan(model, mesh: Optional[Mesh], batch: int, cache_len: int,
+                    fsdp: bool = True, abstract_batch=None):
+    cfg = model.cfg
+
+    def prefill_fn(params, b):
+        return model.prefill(params, b, cache_len=cache_len)
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    if mesh is None:
+        return ServePlan(jax.jit(prefill_fn), jax.jit(decode_fn),
+                         None, None, None, None)
+
+    key = jax.random.PRNGKey(0)
+    # anchor batch sharding at block boundaries (§Perf A3) — only when the
+    # batch actually divides over the data axes (not long_500k batch=1)
+    from repro.models.lm import ActivationSharding
+    daxes_n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            daxes_n *= mesh.shape[a]
+    if batch % daxes_n == 0:
+        model.act_shard = ActivationSharding(mesh)
+        if hasattr(model, "lm"):
+            model.lm.act_shard = model.act_shard
+    if cache_len >= 8192:
+        # memory-efficient attention: the (T, S) prefill score tensor at 32k+
+        # otherwise exceeds HBM (§Dry-run memory proof)
+        model.q_chunk = 512
+        if hasattr(model, "lm"):
+            model.lm.q_chunk = 512
+    if getattr(model, "moe_inference_cf", "x") is None:
+        model.moe_inference_cf = 2.0  # finite serving capacity (drops rare)
+    abstract_params = jax.eval_shape(model.init_params, key)
+    pspecs = param_specs(abstract_params, cfg,
+                         fsdp_axis="data" if fsdp else None,
+                         fsdp_size=mesh.shape.get("data", 1))
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    abstract_cache = jax.eval_shape(
+        lambda: model.init_cache(batch, cache_len))
+    cspecs = cache_specs(abstract_cache, cfg, mesh, batch)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+    bspec = batch_spec(mesh)
+    daxes = bspec[0]
+    nb = 1
+    for a, sz in mesh.shape.items():
+        if a in (daxes if isinstance(daxes, tuple) else (daxes,)):
+            nb *= sz
+    batch_ok = batch % max(nb, 1) == 0
+
+    def bshard(x):
+        if not batch_ok:
+            return NamedSharding(mesh, P(*([None] * x.ndim)))
+        return NamedSharding(mesh,
+                             P(*([daxes] + [None] * (x.ndim - 1))))
+
+    if abstract_batch is None:
+        abstract_batch = {
+            "tokens": jax.ShapeDtypeStruct((batch, 8), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, 8), jnp.int32)}
+    pre_b_shard = jax.tree.map(bshard, abstract_batch)
+    tok_shard = bshard(jax.ShapeDtypeStruct((batch, 1), jnp.int32))
+    # logits leave the step batch-sharded (replicating them costs a
+    # full-vocab all-gather per decode step — §Perf iteration C2)
+    logit_shard = (NamedSharding(mesh, P(daxes, None, None)) if batch_ok
+                   else NamedSharding(mesh, P()))
+
+    prefill = jax.jit(prefill_fn,
+                      in_shardings=(p_shard, pre_b_shard),
+                      out_shardings=(logit_shard, c_shard))
+    decode = jax.jit(decode_fn,
+                     in_shardings=(p_shard, c_shard, tok_shard),
+                     out_shardings=(logit_shard, c_shard),
+                     donate_argnums=(1,))
+    return ServePlan(prefill, decode, p_shard, c_shard, abstract_params,
+                     abstract_cache)

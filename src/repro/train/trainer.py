@@ -1,0 +1,155 @@
+"""Training step factory: pjit/GSPMD, microbatch gradient accumulation,
+bf16 compute + f32 optimizer, remat via scan-over-layers checkpointing.
+
+`make_train_step` returns a jit'd (params, opt_state, batch) -> (params,
+opt_state, metrics) with NamedShardings attached — the object the multi-pod
+dry-run lowers and the CPU examples execute (mesh=None => single device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import batch_spec, param_specs
+from repro.optim.adamw import AdamW, AdamWState
+
+Array = Any
+
+
+@dataclasses.dataclass
+class TrainPlan:
+    """Everything the launcher / dry-run needs for one training setup."""
+    step_fn: Any              # jit'd step
+    params_sharding: Any
+    opt_sharding: Any
+    batch_sharding: Any
+    abstract_params: Any
+    abstract_opt: Any
+
+
+def pick_accum(cfg: ModelConfig, per_dev_batch: int, seq: int,
+               budget_bytes: float = 8e9) -> int:
+    """Gradient-accumulation factor so the two dominant per-microbatch
+    residents fit the budget:
+      * layer-boundary activations remat keeps: L * mb * T * D * 2B
+      * full-vocab logits (+grad +exp):       ~3 * mb * T * Vp * 2B
+    (the logits term dominates for small-D/large-V archs — gemma3, whisper)."""
+    per_mb = (cfg.n_layers * per_dev_batch * seq * cfg.d_model * 2
+              + 3 * per_dev_batch * seq * cfg.vocab_padded * 2)
+    accum = 1
+    while per_mb / accum > budget_bytes and accum < per_dev_batch:
+        accum *= 2
+    return min(accum, per_dev_batch)
+
+
+def batch_shardings(mesh, abstract_batch):
+    """Batch-leading sharding for every leaf of a batch dict."""
+    spec = batch_spec(mesh)
+
+    def one(x):
+        return NamedSharding(mesh, P(*(list(spec) + [None] * (x.ndim - 1))))
+
+    return jax.tree.map(one, abstract_batch)
+
+
+def make_train_step(model, opt: AdamW, mesh: Optional[Mesh] = None,
+                    accum: int = 1, donate: bool = True,
+                    fsdp: bool = True, abstract_batch=None,
+                    shard_mode: Optional[str] = None):
+    """Build the jit'd train step (+ sharding trees when mesh is given).
+
+    shard_mode (overrides `fsdp` when set):
+      "fsdp"  — params AND optimizer state sharded over (model, data):
+                minimum memory, per-layer weight all-gathers in fwd/bwd.
+      "zero1" — params TP-only (replicated over data), optimizer state
+                sharded over data (ZeRO-1): no per-layer weight gathers —
+                trades param memory for gather traffic (§Perf hillclimb).
+      "tp"    — everything TP-only (small models).
+    """
+    cfg = model.cfg
+    if shard_mode is None:
+        shard_mode = "fsdp" if fsdp else "tp"
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def step_fn(params, opt_state, batch):
+        if accum > 1:
+            # microbatch scan: grads accumulate in f32, constant memory
+            def micro(carry, mb):
+                gsum, msum = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, msum + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, om = opt.update(grads, opt_state, params)
+        out = {"loss": loss, **{k: v for k, v in metrics.items()}, **om}
+        return new_params, new_opt, out
+
+    if mesh is None:
+        return TrainPlan(jax.jit(step_fn, donate_argnums=(0, 1) if donate
+                                 else ()),
+                         None, None, None, None, None)
+
+    key = jax.random.PRNGKey(0)
+    # anchor batch sharding at block boundaries (§Perf A3: GSPMD otherwise
+    # may replicate the batch and shard attention by heads instead)
+    from repro.models.lm import ActivationSharding
+    model.act_shard = ActivationSharding(mesh)
+    if hasattr(model, "lm"):
+        model.lm.act_shard = model.act_shard
+    if getattr(model, "q_chunk", None) == 0 and cfg.n_heads \
+            and cfg.n_heads % 16 != 0:
+        # heads can't shard over `model` => the (T,T) score tensor stays
+        # whole per device; chunk queries to bound the peak (gemma3/whisper
+        # train cells otherwise exceed HBM)
+        model.q_chunk = 1024
+        if hasattr(model, "lm"):
+            model.lm.q_chunk = 1024
+    abstract_params = jax.eval_shape(model.init_params, key)
+    fsdp_kw = dict(fsdp_axis="data", fsdp_size=mesh.shape.get("data", 1))
+    pspecs = param_specs(abstract_params, cfg,
+                         **(fsdp_kw if shard_mode == "fsdp" else
+                            {"fsdp_axis": None}))
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    abstract_opt = jax.eval_shape(opt.init, abstract_params)
+    ospecs = (param_specs(abstract_params, cfg, **fsdp_kw)
+              if shard_mode in ("fsdp", "zero1") else pspecs)
+    o_specs = AdamWState(step=P(), mu=ospecs, nu=ospecs)
+    o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    if abstract_batch is None:
+        abstract_batch = {"tokens": jax.ShapeDtypeStruct((8, 8), jnp.int32),
+                          "labels": jax.ShapeDtypeStruct((8, 8), jnp.int32)}
+    b_shard = batch_shardings(mesh, abstract_batch)
+    m_rep = NamedSharding(mesh, P())
+
+    step = jax.jit(
+        step_fn,
+        in_shardings=(p_shard, o_shard, b_shard),
+        out_shardings=(p_shard, o_shard, m_rep),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return TrainPlan(step, p_shard, o_shard, b_shard, abstract_params,
+                     abstract_opt)

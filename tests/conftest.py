@@ -1,0 +1,5 @@
+import jax
+
+# Tests validate numerics against f64 references; smoke tests and benches must
+# see exactly ONE device (dry-run sets XLA_FLAGS itself, in its own process).
+jax.config.update("jax_enable_x64", True)

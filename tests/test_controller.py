@@ -1,0 +1,72 @@
+"""PI controller + error-norm invariants (hypothesis property tests)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PIController, hairer_norm
+from repro.core.controller import pi_propose
+
+CTRL = PIController.for_order(4, dtmin=1e-12, dtmax=10.0)
+
+pos_floats = st.floats(min_value=1e-8, max_value=1e6, allow_nan=False)
+errs = st.floats(min_value=1e-8, max_value=1e4, allow_nan=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(dt=pos_floats, e=errs, ep=errs, accept=st.booleans())
+def test_dt_within_clamps(dt, e, ep, accept):
+    dt = min(dt, 5.0)
+    dt_next, _ = pi_propose(CTRL, jnp.asarray(dt), jnp.asarray(e),
+                            jnp.asarray(ep), jnp.asarray(accept))
+    assert CTRL.dtmin <= float(dt_next) <= CTRL.dtmax
+    # growth/shrink bounded by controller limits
+    assert float(dt_next) <= dt * CTRL.qmax + 1e-12
+    if not accept:
+        assert float(dt_next) <= dt * 1.0 + 1e-12  # rejection never grows dt
+
+
+@settings(max_examples=50, deadline=None)
+@given(dt=st.floats(1e-6, 1.0), e1=errs, e2=errs, ep=errs)
+def test_monotone_in_error(dt, e1, e2, ep):
+    """Larger error => no larger proposed dt (accept branch)."""
+    lo, hi = sorted((e1, e2))
+    d_lo, _ = pi_propose(CTRL, jnp.asarray(dt), jnp.asarray(lo),
+                         jnp.asarray(ep), jnp.asarray(True))
+    d_hi, _ = pi_propose(CTRL, jnp.asarray(dt), jnp.asarray(hi),
+                         jnp.asarray(ep), jnp.asarray(True))
+    assert float(d_hi) <= float(d_lo) + 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(scale=st.floats(1e-3, 1e3),
+       e=st.lists(st.floats(-10, 10), min_size=3, max_size=3))
+def test_norm_homogeneous_in_err(scale, e):
+    u = jnp.asarray([1.0, -2.0, 3.0])
+    err = jnp.asarray(e)
+    n1 = float(hairer_norm(err, u, u, 0.0, 1e-3))
+    n2 = float(hairer_norm(scale * err, u, u, 0.0, 1e-3))
+    np.testing.assert_allclose(n2, scale * n1, rtol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(e=st.lists(st.floats(-1, 1), min_size=4, max_size=4))
+def test_norm_nonnegative_and_axes(e):
+    err = jnp.asarray(e).reshape(2, 2)
+    u = jnp.ones((2, 2))
+    full = hairer_norm(err, u, u, 1e-6, 1e-3)
+    per_lane = hairer_norm(err, u, u, 1e-6, 1e-3, axes=0)
+    assert float(full) >= 0
+    assert per_lane.shape == (2,)
+    # full norm is the RMS of the per-lane norms
+    np.testing.assert_allclose(float(full),
+                               float(jnp.sqrt(jnp.mean(per_lane ** 2))),
+                               rtol=1e-6)
+
+
+def test_accept_iff_enorm_below_one_semantics():
+    """The driver accepts exactly when scaled err <= 1; spot-check the scale."""
+    u = jnp.asarray([2.0])
+    err = jnp.asarray([0.002])
+    # scale = atol + |u| rtol = 1e-3 + 2*1e-3 = 3e-3 -> norm = 2/3 < 1
+    n = float(hairer_norm(err, u, u, 1e-3, 1e-3))
+    np.testing.assert_allclose(n, 2 / 3, rtol=1e-6)

@@ -1,0 +1,82 @@
+"""Event handling (paper §6.6, Fig. 8): bouncing ball vs closed-form impacts."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AdaptiveOptions, get_tableau, solve_adaptive
+from repro.configs.de_problems import (bouncing_ball_event,
+                                       bouncing_ball_problem)
+
+TAB = get_tableau("tsit5")
+
+
+def test_first_impact_time_and_velocity():
+    prob = bouncing_ball_problem(e=0.8, x0=10.0)
+    ev = bouncing_ball_event()
+    t1 = np.sqrt(2 * 10.0 / 9.8)  # first impact
+    res, evlog = solve_adaptive(prob.f, TAB, prob.u0, prob.p, 0.0, t1 + 0.3,
+                                1e-3, saveat=jnp.asarray([t1 + 0.3]),
+                                opts=AdaptiveOptions(rtol=1e-9, atol=1e-9),
+                                event=ev)
+    assert int(evlog["event_count"]) == 1
+    np.testing.assert_allclose(float(evlog["event_t"]), t1, atol=1e-6)
+    # post-bounce upward velocity at impact: e * g * t1
+    # and x stays non-negative afterwards
+    assert float(res.u_final[0]) >= -1e-6
+
+
+def test_bounce_sequence_geometric():
+    """Impact times follow t_{k+1} = t_k + 2 e^k t_1 (geometric flight times)."""
+    e = 0.5
+    prob = bouncing_ball_problem(e=e, x0=10.0)
+    ev = bouncing_ball_event()
+    t1 = np.sqrt(2 * 10.0 / 9.8)
+    impacts = [t1]
+    for k in range(1, 4):
+        impacts.append(impacts[-1] + 2 * e**k * t1)
+    # integrate past the 4th impact; count events
+    tf = impacts[-1] + 0.05
+    res, evlog = solve_adaptive(prob.f, TAB, prob.u0, prob.p, 0.0, tf, 1e-3,
+                                saveat=jnp.asarray([tf]),
+                                opts=AdaptiveOptions(rtol=1e-10, atol=1e-10,
+                                                     max_iters=200_000),
+                                event=ev)
+    assert int(evlog["event_count"]) == 4
+    np.testing.assert_allclose(float(evlog["event_t"]), impacts[-1], atol=1e-4)
+
+
+def test_terminal_event_stops_integration():
+    from repro.core.solvers import Event
+    prob = bouncing_ball_problem(e=0.9, x0=10.0)
+    ev = Event(condition=lambda u, p, t: u[0], affect=None, terminal=True,
+               direction=-1)
+    t1 = np.sqrt(2 * 10.0 / 9.8)
+    res, evlog = solve_adaptive(prob.f, TAB, prob.u0, prob.p, 0.0, 15.0, 1e-3,
+                                saveat=jnp.asarray([15.0]),
+                                opts=AdaptiveOptions(rtol=1e-9, atol=1e-9),
+                                event=ev)
+    np.testing.assert_allclose(float(res.t_final), t1, atol=1e-6)
+    assert int(evlog["event_count"]) == 1
+
+
+def test_events_lanes_mode_per_lane_restitution():
+    """Per-lane events in the fused-kernel path: different e per trajectory."""
+    prob = bouncing_ball_problem()
+    ev = bouncing_ball_event()
+    B = 5
+    es = jnp.linspace(0.3, 0.9, B, dtype=jnp.float64)
+    ps = jnp.stack([jnp.full((B,), 9.8), es])          # (2, B)
+    u0 = jnp.stack([jnp.full((B,), 10.0), jnp.zeros(B)])  # (2, B)
+    t1 = float(np.sqrt(2 * 10.0 / 9.8))
+    tf = t1 + 0.2
+    res, evlog = solve_adaptive(prob.f, TAB, u0, ps, 0.0, tf, 1e-3,
+                                saveat=jnp.asarray([tf]),
+                                opts=AdaptiveOptions(rtol=1e-9, atol=1e-9),
+                                event=ev, lanes=True)
+    assert evlog["event_count"].shape == (B,)
+    np.testing.assert_array_equal(np.asarray(evlog["event_count"]),
+                                  np.ones(B, np.int32))
+    np.testing.assert_allclose(np.asarray(evlog["event_t"]),
+                               np.full(B, t1), atol=1e-6)
+    # velocity right after bounce scales with e: check ordering
+    v_after = np.asarray(res.u_final)[1]
+    assert np.all(np.diff(v_after) != 0)

@@ -1,0 +1,96 @@
+"""Texture-memory analogue (§6.7): uniform-grid interpolation, both TPU modes."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.interp import (UniformTable1D, UniformTable2D, interp1d,
+                               interp2d)
+
+
+def _tab1(fn, K=33, x0=-2.0, dx=0.25):
+    xs = x0 + dx * jnp.arange(K)
+    return UniformTable1D(fn(xs), x0, dx), xs
+
+
+def test_exact_at_nodes():
+    tab, xs = _tab1(jnp.sin)
+    for mode in ("gather", "onehot"):
+        np.testing.assert_allclose(np.asarray(interp1d(tab, xs, mode)),
+                                   np.sin(np.asarray(xs)), atol=1e-12)
+
+
+def test_linear_function_exact_everywhere():
+    tab, _ = _tab1(lambda x: 3.0 * x - 1.0)
+    q = jnp.linspace(-2.0, 6.0 - 1e-6, 57)
+    for mode in ("gather", "onehot"):
+        np.testing.assert_allclose(np.asarray(interp1d(tab, q, mode)),
+                                   3.0 * np.asarray(q) - 1.0, atol=1e-10)
+
+
+def test_clamped_boundaries():
+    tab, xs = _tab1(jnp.sin)
+    lo = float(interp1d(tab, jnp.asarray(-100.0)))
+    hi = float(interp1d(tab, jnp.asarray(100.0)))
+    np.testing.assert_allclose(lo, np.sin(-2.0), atol=1e-12)
+    np.testing.assert_allclose(hi, float(jnp.sin(xs[-1])), atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-10, 10), min_size=1, max_size=8))
+def test_gather_equals_onehot_1d(qs):
+    tab, _ = _tab1(jnp.cos, K=17, x0=-1.0, dx=0.5)
+    q = jnp.asarray(qs)
+    np.testing.assert_allclose(np.asarray(interp1d(tab, q, "gather")),
+                               np.asarray(interp1d(tab, q, "onehot")),
+                               atol=1e-12)
+
+
+def test_bilinear_2d_exact_on_bilinear_fn():
+    K = 9
+    x0, dx, y0, dy = 0.0, 0.5, -1.0, 0.25
+    xs = x0 + dx * jnp.arange(K)
+    ys = y0 + dy * jnp.arange(K)
+    V = 2.0 * xs[:, None] + 3.0 * ys[None, :] + 0.5 * xs[:, None] * ys[None, :]
+    tab = UniformTable2D(V, x0, dx, y0, dy)
+    qx = jnp.linspace(0.0, 3.99, 23)
+    qy = jnp.linspace(-1.0, 0.99, 23)
+    want = 2 * qx + 3 * qy + 0.5 * qx * qy
+    for mode in ("gather", "onehot"):
+        got = interp2d(tab, qx, qy, mode)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-5, 10), st.floats(-5, 5))
+def test_gather_equals_onehot_2d(x, y):
+    K = 7
+    xs = jnp.arange(K) * 0.5
+    V = jnp.sin(xs[:, None]) * jnp.cos(xs[None, :])
+    tab = UniformTable2D(V, 0.0, 0.5, 0.0, 0.5)
+    a = float(interp2d(tab, jnp.asarray(x), jnp.asarray(y), "gather"))
+    b = float(interp2d(tab, jnp.asarray(x), jnp.asarray(y), "onehot"))
+    np.testing.assert_allclose(a, b, atol=1e-12)
+
+
+def test_interp_inside_ode_rhs():
+    """A wind-field drag table consumed inside the RHS (the paper's use-case):
+    solver integrates with a table-dependent force, both modes agree."""
+    from repro.core import get_tableau, solve_fixed
+    wind, _ = _tab1(lambda x: 0.1 * jnp.sin(x), K=65, x0=0.0, dx=0.25)
+
+    def make_rhs(mode):
+        def rhs(u, p, t):
+            drag = interp1d(wind, u[0], mode)
+            return jnp.stack([u[1], -9.8 - drag * u[1]])
+        return rhs
+
+    tab = get_tableau("tsit5")
+    u0 = jnp.asarray([10.0, 0.0])
+    p = jnp.zeros(1)
+    ra = solve_fixed(make_rhs("gather"), tab, u0, p, 0.0, 0.01, 100,
+                     save_every=100)
+    rb = solve_fixed(make_rhs("onehot"), tab, u0, p, 0.0, 0.01, 100,
+                     save_every=100)
+    np.testing.assert_allclose(np.asarray(ra.u_final), np.asarray(rb.u_final),
+                               rtol=1e-10)

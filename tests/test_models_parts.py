@@ -1,0 +1,163 @@
+"""Component-level model tests: SSD vs naive recurrence oracle, RG-LRU vs
+naive scan, MoE routing conservation, attention causality (property)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.ssm import ssd_chunked
+from repro.models.rglru import rglru_train, rglru_decode, rglru_params
+from repro.models.moe import moe_ffn, moe_params
+from repro.models.layers import attention_train, attn_params
+
+
+def naive_ssd(xh, dt, B_in, C_in, A, h0=None):
+    """Per-step recurrence oracle (f64): h' = exp(dt A) h + dt x⊗B; y = C·h."""
+    Bsz, T, H, P = xh.shape
+    N = B_in.shape[-1]
+    h = np.zeros((Bsz, H, P, N)) if h0 is None else np.asarray(h0, np.float64)
+    ys = np.zeros((Bsz, T, H, P))
+    xh, dt, B_in, C_in, A = map(lambda a: np.asarray(a, np.float64),
+                                (xh, dt, B_in, C_in, A))
+    for t in range(T):
+        dA = np.exp(dt[:, t] * A)                           # (B,H)
+        h = h * dA[..., None, None] + np.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], xh[:, t], B_in[:, t])
+        ys[:, t] = np.einsum("bn,bhpn->bhp", C_in[:, t], h)
+    return ys, h
+
+
+@pytest.mark.parametrize("T,chunk", [(8, 4), (16, 8), (12, 12), (16, 4)])
+def test_ssd_chunked_matches_naive(T, chunk):
+    key = jax.random.PRNGKey(0)
+    Bsz, H, P, N = 2, 3, 4, 5
+    ks = jax.random.split(key, 4)
+    xh = jax.random.normal(ks[0], (Bsz, T, H, P), jnp.float64)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, T, H), jnp.float64))
+    B_in = jax.random.normal(ks[2], (Bsz, T, N), jnp.float64)
+    C_in = jax.random.normal(ks[3], (Bsz, T, N), jnp.float64)
+    A = -jnp.exp(jnp.linspace(-1.0, 0.5, H))
+    y, h = ssd_chunked(xh, dt, B_in, C_in, A, chunk)
+    y_ref, h_ref = naive_ssd(xh, dt, B_in, C_in, A)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(h), h_ref, rtol=1e-9, atol=1e-9)
+
+
+def test_ssd_carried_state_prefill_decode_split():
+    """Integrating [0,T) then [T,2T) with carried state == one [0,2T) pass."""
+    key = jax.random.PRNGKey(1)
+    Bsz, T, H, P, N, chunk = 2, 8, 2, 4, 3, 4
+    ks = jax.random.split(key, 4)
+    xh = jax.random.normal(ks[0], (Bsz, 2 * T, H, P), jnp.float64)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, 2 * T, H),
+                                           jnp.float64))
+    B_in = jax.random.normal(ks[2], (Bsz, 2 * T, N), jnp.float64)
+    C_in = jax.random.normal(ks[3], (Bsz, 2 * T, N), jnp.float64)
+    A = -jnp.exp(jnp.linspace(-1.0, 0.0, H))
+    y_full, h_full = ssd_chunked(xh, dt, B_in, C_in, A, chunk)
+    y1, h1 = ssd_chunked(xh[:, :T], dt[:, :T], B_in[:, :T], C_in[:, :T], A,
+                         chunk)
+    y2, h2 = ssd_chunked(xh[:, T:], dt[:, T:], B_in[:, T:], C_in[:, T:], A,
+                         chunk, h0=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, T:]), np.asarray(y2),
+                               rtol=1e-9, atol=1e-9)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_rglru_train_decode_agree():
+    """Recurrent training scan == step-by-step decode."""
+    key = jax.random.PRNGKey(2)
+    D, W, K, B, T = 8, 8, 4, 2, 6
+    p = rglru_params(key, D, W, K, jnp.float64)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, T, D), jnp.float64)
+    y_train, st = rglru_train(x, p)
+    state = {"h": jnp.zeros((B, W), jnp.float64),
+             "conv": jnp.zeros((B, K - 1, W), jnp.float64)}
+    ys = []
+    for t in range(T):
+        y, state = rglru_decode(x[:, t:t + 1], p, state)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    # associative_scan reassociates the recurrence: f32-rounded gate inputs
+    # give ~1e-7 differences even under f64 math
+    np.testing.assert_allclose(np.asarray(y_train), np.asarray(y_dec),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(state["h"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_moe_combine_weights_sum():
+    """With no capacity drops, each token's combine weights sum to 1 and the
+    output is a convex combination of expert outputs (checked via linearity:
+    identical experts => MoE == plain FFN)."""
+    key = jax.random.PRNGKey(3)
+    D, F, E, k = 8, 16, 4, 2
+    p = moe_params(key, D, F, E, 0, jnp.float64)
+    # make all experts identical
+    for nm in ("wi", "wg", "wo"):
+        p[nm] = jnp.broadcast_to(p[nm][0:1], p[nm].shape)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, D), jnp.float64)
+    y, aux = moe_ffn(x, p, topk=k, n_experts=E, capacity_factor=None,
+                     group_size=16)
+    # plain FFN with expert-0 weights
+    ref = (jax.nn.silu(x @ p["wg"][0]) * (x @ p["wi"][0])) @ p["wo"][0]
+    # router/dispatch weights are f32 by design => ~1e-7 tolerance
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+    assert float(aux) > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), t_cut=st.integers(1, 7))
+def test_attention_causality_property(seed, t_cut):
+    """Changing tokens at positions > t_cut must not change outputs <= t_cut."""
+    key = jax.random.PRNGKey(seed)
+    B, T, D, H, KV, hd = 1, 8, 16, 4, 2, 4
+    w = attn_params(key, D, H, KV, hd, jnp.float64)
+    x1 = jax.random.normal(jax.random.fold_in(key, 1), (B, T, D), jnp.float64)
+    x2 = x1.at[:, t_cut:].set(
+        jax.random.normal(jax.random.fold_in(key, 2), (B, T - t_cut, D),
+                          jnp.float64))
+    kw = dict(n_heads=H, n_kv=KV, hd=hd, rope_theta=1e4)
+    y1 = attention_train(x1, w, **kw)
+    y2 = attention_train(x2, w, **kw)
+    np.testing.assert_allclose(np.asarray(y1[:, :t_cut]),
+                               np.asarray(y2[:, :t_cut]), rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_sliding_window_restricts_reach():
+    """With window w, output at position t is unaffected by tokens < t - w."""
+    key = jax.random.PRNGKey(5)
+    B, T, D, H, KV, hd, w_sz = 1, 12, 16, 2, 1, 8, 4
+    w = attn_params(key, D, H, KV, hd, jnp.float64)
+    x1 = jax.random.normal(jax.random.fold_in(key, 1), (B, T, D), jnp.float64)
+    # perturb position 0; outputs at t >= 0 + window must be unchanged
+    x2 = x1.at[:, 0].set(jax.random.normal(jax.random.fold_in(key, 2), (B, D),
+                                           jnp.float64))
+    kw = dict(n_heads=H, n_kv=KV, hd=hd, rope_theta=1e4, window=w_sz,
+              is_global=False)
+    y1 = attention_train(x1, w, **kw)
+    y2 = attention_train(x2, w, **kw)
+    np.testing.assert_allclose(np.asarray(y1[:, w_sz:]),
+                               np.asarray(y2[:, w_sz:]), rtol=1e-9, atol=1e-9)
+    # and position 1 IS affected (sanity that the perturbation propagates)
+    assert not np.allclose(np.asarray(y1[:, 1]), np.asarray(y2[:, 1]))
+
+def test_q_chunked_attention_equals_dense():
+    """Memory-efficient (q-chunked) attention == dense attention exactly,
+    across causal/window/gemma-flag combinations."""
+    key = jax.random.PRNGKey(7)
+    B, T, D, H, KV, hd = 2, 32, 16, 4, 2, 4
+    w = attn_params(key, D, H, KV, hd, jnp.float64)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, T, D), jnp.float64)
+    for kw in (dict(), dict(window=8, is_global=False),
+               dict(window=8, is_global=True), dict(softcap=30.0),
+               dict(causal=False)):
+        base = dict(n_heads=H, n_kv=KV, hd=hd, rope_theta=1e4, **kw)
+        y_dense = attention_train(x, w, **base)
+        y_chunk = attention_train(x, w, q_chunk=8, **base)
+        np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_chunk),
+                                   rtol=1e-12, atol=1e-12)

@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train-grad step + one prefill->decode chain on CPU; shape + finiteness
+asserts. The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS, get_arch
+from repro.models.model import build_model
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def make_batch(cfg, key, B=2, T=32):
+    kt, kf = jax.random.split(key)
+    toks = jax.random.randint(kt, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(kf, (B, cfg.enc_seq, cfg.d_model),
+                                            jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(kf, (B, cfg.vis_seq, cfg.vis_dim),
+                                             jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_arch(arch + "-smoke")
+    model = build_model(cfg, dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    batch = make_batch(cfg, key)
+
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), \
+        f"{arch}: non-finite grads"
+    assert float(loss) > 0
+    # loss should be near ln(V) at random init (uniform prediction)
+    assert abs(float(metrics["ce"]) - np.log(cfg.vocab_size)) < 2.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    """prefill(T tokens) then decode 1 more == forward(T+1) last logits."""
+    cfg = get_arch(arch + "-smoke")
+    kw = {"moe_cf": None} if cfg.family == "moe" else {}  # no-drop oracle
+    model = build_model(cfg, dtype=jnp.float32, **kw)
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key)
+    B, T = 2, 16
+    batch = make_batch(cfg, key, B=B, T=T + 1)
+    toks = batch["tokens"]
+
+    pre_batch = dict(batch, tokens=toks[:, :T], labels=toks[:, :T])
+    extra = cfg.vis_seq if cfg.family == "vlm" else 0  # image tokens in cache
+    logits_pre, cache = model.prefill(params, pre_batch,
+                                      cache_len=T + extra + 4)
+    logits_dec, cache = model.decode_step(params, cache, toks[:, T:T + 1])
+    assert logits_dec.shape == (B, 1, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits_dec[..., :cfg.vocab_size])))
+
+    # oracle: full forward over T+1 tokens (teacher forcing)
+    if cfg.family == "vlm":
+        h0 = model._embed_multimodal(params, toks, batch["patches"])
+        x, _ = model.lm.forward(params, None, h0=h0)
+    elif cfg.family == "encdec":
+        x = model.forward(params, toks, batch["frames"])
+    elif cfg.family == "moe" or cfg.family == "dense":
+        x, _ = model.forward(params, toks)
+    else:
+        x = model.forward(params, toks)
+    from repro.models.lm import _logits
+    want = _logits(x[:, -1:], params, cfg)
+    got = logits_dec
+    if cfg.family == "vlm":
+        # decode path has image tokens in cache; forward oracle covers them
+        pass
+    V = cfg.vocab_size
+    np.testing.assert_allclose(
+        np.asarray(got[..., :V], np.float32),
+        np.asarray(want[..., :V], np.float32), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "mamba2-2.7b",
+                                  "recurrentgemma-9b", "gemma3-1b"])
+def test_smoke_multi_token_decode(arch):
+    """Greedy decode 4 tokens step-by-step stays finite and deterministic."""
+    cfg = get_arch(arch + "-smoke")
+    model = build_model(cfg, dtype=jnp.float32)
+    params = model.init_params(jax.random.PRNGKey(2))
+    B, T = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    logits, cache = model.prefill(params, batch, cache_len=T + 8)
+    cur = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+    outs = []
+    for _ in range(4):
+        logits, cache = model.decode_step(params, cache, cur)
+        cur = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+        outs.append(cur)
+    seq = jnp.concatenate(outs, axis=1)
+    assert seq.shape == (B, 4)
+    assert bool(jnp.all(seq >= 0)) and bool(jnp.all(seq < cfg.vocab_size))
+
+
+def test_full_configs_param_counts():
+    """Sanity: analytic parameter counts are in the advertised ballpark."""
+    import math
+    expect = {
+        "grok-1-314b": (250e9, 380e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "command-r-35b": (30e9, 40e9),
+        "qwen2.5-32b": (28e9, 36e9),
+        "internlm2-1.8b": (1.5e9, 2.2e9),
+        "gemma3-1b": (0.7e9, 1.3e9),
+        "mamba2-2.7b": (2.2e9, 3.2e9),
+        "recurrentgemma-9b": (7e9, 11e9),
+        "internvl2-26b": (18e9, 27e9),  # LM backbone only (ViT stubbed)
+        "whisper-tiny": (2e7, 8e7),
+    }
+    for name, (lo, hi) in expect.items():
+        n = ARCHS[name].n_params()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,110 @@
+"""SDE stepper validation: exact pathwise structure, scheme moments, weak order."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnsembleProblem
+from repro.core.sde import sde_solve_fixed, solve_sde_ensemble
+from repro.configs.de_problems import crn_problem, gbm_problem
+
+R, V = 1.5, 0.2
+
+
+def test_em_pathwise_exact_structure():
+    """EM on GBM has the closed form X_{k+1} = X_k (1 + r dt + V dW_k).
+    With an injected noise table the solver must reproduce it exactly."""
+    prob = gbm_problem(r=R, v=V, dtype=jnp.float64)
+    n_steps, dt = 50, 0.02
+    key = jax.random.PRNGKey(0)
+    Z = jax.random.normal(key, (n_steps, 3), jnp.float64)
+    res = sde_solve_fixed(prob, prob.u0, prob.p, 0.0, dt, n_steps,
+                          key=None, method="em", save_every=n_steps,
+                          noise_table=Z)
+    X = np.asarray(prob.u0, np.float64)
+    for k in range(n_steps):
+        X = X * (1.0 + R * dt + V * np.sqrt(dt) * np.asarray(Z[k]))
+    np.testing.assert_allclose(np.asarray(res.u_final), X, rtol=1e-12)
+
+
+def test_em_ensemble_moments_match_discrete_closed_form():
+    """E[X_n] = X0 (1+r dt)^n and E[X_n^2] = X0^2 ((1+r dt)^2 + V^2 dt)^n are
+    the EXACT moments of the EM chain — the MC ensemble must match them."""
+    prob = gbm_problem(r=R, v=V, dtype=jnp.float64)
+    N, n_steps, dt = 20000, 20, 0.05
+    ens = EnsembleProblem(prob, N)
+    res = solve_sde_ensemble(ens, jax.random.PRNGKey(1), dt, n_steps,
+                             method="em", ensemble="kernel",
+                             save_every=n_steps)
+    X = np.asarray(res.u_final)[:, 0]
+    mean_exact = 0.1 * (1 + R * dt) ** n_steps
+    m2_exact = 0.01 * ((1 + R * dt) ** 2 + V * V * dt) ** n_steps
+    # MC standard errors
+    se_mean = X.std() / np.sqrt(N)
+    assert abs(X.mean() - mean_exact) < 5 * se_mean + 1e-12
+    se_m2 = (X**2).std() / np.sqrt(N)
+    assert abs((X**2).mean() - m2_exact) < 5 * se_m2 + 1e-12
+
+
+def test_platen_weak_order_two_vs_em():
+    """Weak error of E[X(1)] vs analytic X0 e^r: Platen's bias must shrink
+    ~quadratically and be far below EM's O(dt) bias at the same dt."""
+    prob = gbm_problem(r=R, v=V, dtype=jnp.float64)
+    N = 40000
+    exact = 0.1 * np.exp(R)
+    key = jax.random.PRNGKey(2)
+
+    def mean_final(method, n_steps):
+        ens = EnsembleProblem(prob, N)
+        res = solve_sde_ensemble(ens, key, 1.0 / n_steps, n_steps,
+                                 method=method, ensemble="kernel",
+                                 save_every=n_steps)
+        return float(np.asarray(res.u_final)[:, 0].mean())
+
+    em_bias = abs(mean_final("em", 20) - exact)
+    pl_bias = abs(mean_final("platen_w2", 20) - exact)
+    assert pl_bias < 0.3 * em_bias, f"platen {pl_bias} vs em {em_bias}"
+    # deterministic part of EM bias is known: X0[(1+r dt)^n - e^r]
+    det = abs(0.1 * ((1 + R / 20) ** 20 - np.exp(R)))
+    assert abs(em_bias - det) < 0.3 * det + 5e-4
+
+
+def test_vmap_vs_kernel_same_law():
+    """Different lane packing => different noise draws, same distribution."""
+    prob = gbm_problem(r=R, v=V, dtype=jnp.float64)
+    N, n_steps, dt = 8000, 20, 0.05
+    ens = EnsembleProblem(prob, N)
+    rk = solve_sde_ensemble(ens, jax.random.PRNGKey(3), dt, n_steps,
+                            method="em", ensemble="kernel",
+                            save_every=n_steps)
+    rv = solve_sde_ensemble(ens, jax.random.PRNGKey(4), dt, n_steps,
+                            method="em", ensemble="vmap", save_every=n_steps)
+    a = np.asarray(rk.u_final)[:, 0]
+    b = np.asarray(rv.u_final)[:, 0]
+    se = np.hypot(a.std(), b.std()) / np.sqrt(N)
+    assert abs(a.mean() - b.mean()) < 5 * se
+
+
+def test_crn_general_noise_runs_finite():
+    """The paper's 4-state/8-noise CRN (general noise matrix) integrates."""
+    prob = crn_problem(tspan=(0.0, 10.0), dtype=jnp.float64)
+    ens = EnsembleProblem(prob, 64)
+    res = solve_sde_ensemble(ens, jax.random.PRNGKey(5), 0.1, 100,
+                             method="em", ensemble="kernel", save_every=10)
+    assert res.us.shape == (64, 10, 4)
+    assert bool(jnp.all(jnp.isfinite(res.us)))
+
+
+def test_heun_stratonovich_drift_correction():
+    """For GBM, Stratonovich Heun converges to the Stratonovich solution,
+    whose mean is X0 e^{(r+V^2/2)t} — distinguishable from the Ito mean."""
+    prob = gbm_problem(r=R, v=0.8, dtype=jnp.float64)  # big V to separate
+    N, n_steps = 40000, 400
+    ens = EnsembleProblem(prob, N)
+    res = solve_sde_ensemble(ens, jax.random.PRNGKey(6), 1.0 / n_steps,
+                             n_steps, method="heun_strat", ensemble="kernel",
+                             save_every=n_steps)
+    X = np.asarray(res.u_final)[:, 0]
+    strat_mean = 0.1 * np.exp(R + 0.5 * 0.64)
+    ito_mean = 0.1 * np.exp(R)
+    assert abs(X.mean() - strat_mean) < abs(X.mean() - ito_mean)

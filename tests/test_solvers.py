@@ -1,0 +1,109 @@
+"""Adaptive driver behaviour: accuracy-vs-tolerance, saveat, lanes==scalar, statuses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveOptions, get_tableau, solve_adaptive,
+                        solve_fixed, solve_one)
+from repro.configs.de_problems import (linear_decay_problem, lorenz_problem,
+                                       sho_problem)
+
+
+@pytest.mark.parametrize("tol", [1e-4, 1e-7, 1e-10])
+def test_accuracy_tracks_tolerance(tol):
+    prob = linear_decay_problem()
+    tab = get_tableau("tsit5")
+    res = solve_one(prob.f, tab, prob.u0, prob.p, 0.0, 2.0, 0.01,
+                    saveat=jnp.asarray([2.0]), rtol=tol, atol=tol)
+    err = float(abs(res.u_final[0] - jnp.exp(-2.0)))
+    assert err < 100 * tol
+    assert int(res.status) == 0
+
+
+def test_tighter_tol_more_steps():
+    prob = sho_problem()
+    tab = get_tableau("tsit5")
+    n = []
+    for tol in (1e-4, 1e-8):
+        res = solve_one(prob.f, tab, prob.u0, prob.p, 0.0, 3.0, 0.01,
+                        rtol=tol, atol=tol)
+        n.append(int(res.naccept))
+    assert n[1] > n[0]
+
+
+def test_saveat_dense_output_accuracy():
+    prob = sho_problem(omega=2.0)
+    tab = get_tableau("tsit5")
+    saveat = jnp.linspace(0.0, 3.0, 33)
+    res = solve_one(prob.f, tab, prob.u0, prob.p, 0.0, 3.0, 0.01,
+                    saveat=saveat, rtol=1e-8, atol=1e-8)
+    exact = jnp.cos(2.0 * saveat)
+    np.testing.assert_allclose(res.us[:, 0], exact, atol=1e-5)
+    # saveat[0] == t0 must be prefilled with u0
+    np.testing.assert_allclose(res.us[0], prob.u0, atol=0)
+
+
+def test_lanes_mode_matches_vmap_of_scalar():
+    """Per-lane adaptive control must reproduce per-trajectory solves exactly."""
+    prob = lorenz_problem(jnp.float64)
+    tab = get_tableau("tsit5")
+    B = 7
+    rho = jnp.linspace(5.0, 28.0, B, dtype=jnp.float64)
+    ps = jnp.stack([jnp.full((B,), 10.0), rho, jnp.full((B,), 8.0 / 3.0)])
+    u0 = jnp.broadcast_to(jnp.asarray([1.0, 0.0, 0.0])[:, None], (3, B))
+    saveat = jnp.linspace(0.0, 1.0, 5)
+    opts = AdaptiveOptions(rtol=1e-7, atol=1e-7)
+    lanes = solve_adaptive(prob.f, tab, u0, ps, 0.0, 1.0, 1e-3,
+                           saveat=saveat, opts=opts, lanes=True)
+
+    def one(p):
+        return solve_adaptive(prob.f, tab, jnp.asarray([1.0, 0.0, 0.0]), p,
+                              0.0, 1.0, 1e-3, saveat=saveat, opts=opts)
+
+    ref = jax.vmap(one)(ps.T)
+    np.testing.assert_allclose(np.moveaxis(np.asarray(lanes.us), -1, 0),
+                               np.asarray(ref.us), rtol=1e-12, atol=1e-12)
+    np.testing.assert_array_equal(np.asarray(lanes.naccept),
+                                  np.asarray(ref.naccept))
+
+
+def test_fixed_equals_adaptive_fixed_mode():
+    prob = sho_problem()
+    tab = get_tableau("rk4")
+    n_steps = 64
+    rf = solve_fixed(prob.f, tab, prob.u0, prob.p, 0.0, 1.0 / n_steps, n_steps,
+                     save_every=n_steps)
+    opts = AdaptiveOptions(adaptive=False, max_iters=n_steps + 2)
+    ra = solve_adaptive(prob.f, tab, prob.u0, prob.p, 0.0, 1.0, 1.0 / n_steps,
+                        saveat=jnp.asarray([1.0]), opts=opts)
+    np.testing.assert_allclose(rf.u_final, ra.u_final, rtol=1e-12)
+
+
+def test_max_iters_status():
+    prob = sho_problem()
+    tab = get_tableau("tsit5")
+    res = solve_one(prob.f, tab, prob.u0, prob.p, 0.0, 1000.0, 1e-5,
+                    rtol=1e-10, atol=1e-10, max_iters=10)
+    assert int(res.status) == 1
+
+
+def test_f32_pipeline():
+    prob = sho_problem(dtype=jnp.float32)
+    tab = get_tableau("tsit5")
+    res = solve_one(prob.f, tab, prob.u0, prob.p, 0.0, 3.0, 0.01,
+                    rtol=1e-5, atol=1e-5)
+    assert res.u_final.dtype == jnp.float32
+    assert abs(float(res.u_final[0]) - float(np.cos(6.0))) < 1e-3
+
+
+def test_nonfinite_rejection_recovers():
+    """A blow-up candidate step must be rejected, not propagated."""
+    def f(u, p, t):
+        # stiff-ish: large negative eigenvalue; big dt0 causes overflow risk
+        return -p[0] * u * (1.0 + 1e3 * jnp.tanh(u))
+
+    tab = get_tableau("tsit5")
+    res = solve_one(f, tab, jnp.asarray([1.0]), jnp.asarray([1.0]),
+                    0.0, 0.1, 0.05, rtol=1e-6, atol=1e-6, max_iters=20000)
+    assert bool(jnp.all(jnp.isfinite(res.u_final)))

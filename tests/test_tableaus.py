@@ -1,0 +1,99 @@
+"""Algebraic order conditions + empirical convergence order for every tableau."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import get_tableau, solve_fixed
+from repro.core.tableaus import TABLEAUS
+from repro.configs.de_problems import sho_problem
+
+ADAPTIVE_TABS = ["tsit5", "dopri5", "rkck54", "bs3", "rkf45"]
+
+
+@pytest.mark.parametrize("name", sorted(TABLEAUS))
+def test_row_sum_consistency(name):
+    tab = get_tableau(name)
+    np.testing.assert_allclose(tab.a.sum(axis=1), tab.c, atol=5e-15)
+
+
+@pytest.mark.parametrize("name", sorted(TABLEAUS))
+def test_order_conditions(name):
+    tab = get_tableau(name)
+    b, c, a = tab.b, tab.c, tab.a
+    # order 1..4 conditions (all shipped methods are >= order 3)
+    assert abs(b.sum() - 1.0) < 1e-13
+    assert abs(b @ c - 0.5) < 1e-13
+    if tab.order >= 3:
+        assert abs(b @ c**2 - 1 / 3) < 1e-12
+        assert abs(b @ (a @ c) - 1 / 6) < 1e-12
+    if tab.order >= 4:
+        assert abs(b @ c**3 - 1 / 4) < 1e-12
+        assert abs((b * c) @ (a @ c) - 1 / 8) < 1e-12
+        assert abs(b @ (a @ c**2) - 1 / 12) < 1e-12
+        assert abs(b @ (a @ (a @ c)) - 1 / 24) < 1e-12
+    if tab.order >= 5:
+        assert abs(b @ c**4 - 1 / 5) < 1e-12
+
+
+@pytest.mark.parametrize("name", ADAPTIVE_TABS)
+def test_error_weights_consistent(name):
+    # btilde = b - bhat with bhat a consistent (sum=1) lower-order method
+    tab = get_tableau(name)
+    assert abs(tab.btilde.sum()) < 1e-12
+    bhat = tab.b - tab.btilde
+    assert abs(bhat.sum() - 1.0) < 1e-12
+    # embedded method should satisfy order-2 condition at least
+    assert abs(bhat @ tab.c - 0.5) < 1e-10
+
+
+@pytest.mark.parametrize("name", ["tsit5", "dopri5"])
+def test_fsal(name):
+    tab = get_tableau(name)
+    assert tab.fsal
+    np.testing.assert_allclose(tab.a[-1, :-1], tab.b[:-1], atol=1e-15)
+    assert tab.c[-1] == 1.0
+
+
+@pytest.mark.parametrize("name", ADAPTIVE_TABS + ["rk4"])
+def test_empirical_convergence_order(name):
+    """Fixed-dt self-convergence on the harmonic oscillator: the observed
+    order of the propagated solution must match the tableau's claim."""
+    tab = get_tableau(name)
+    prob = sho_problem(omega=2.0)
+    exact = jnp.asarray([jnp.cos(2.0 * 1.0), -2.0 * jnp.sin(2.0 * 1.0)])
+
+    def err_at(n_steps):
+        res = solve_fixed(prob.f, tab, prob.u0, prob.p, 0.0, 1.0 / n_steps,
+                          n_steps, save_every=n_steps)
+        return float(jnp.linalg.norm(res.u_final - exact))
+
+    e1, e2 = err_at(64), err_at(128)
+    order = np.log2(e1 / e2)
+    assert order > tab.order - 0.5, f"{name}: measured order {order:.2f}"
+
+
+def test_tsit5_interpolant_order():
+    """The free interpolant must be ~4th order accurate at the step midpoint."""
+    from repro.core import rk_step, interp_step
+    tab = get_tableau("tsit5")
+    prob = sho_problem(omega=2.0)
+    errs = []
+    for dt in (0.1, 0.05):
+        k1 = prob.f(prob.u0, prob.p, 0.0)
+        u_new, _, ks = rk_step(prob.f, tab, prob.u0, prob.p, 0.0, dt, k1)
+        u_mid = interp_step(prob.f, tab, prob.u0, u_new, ks, prob.p, 0.0, dt,
+                            jnp.asarray(0.5))
+        exact = jnp.asarray([jnp.cos(2 * dt / 2), -2 * jnp.sin(2 * dt / 2)])
+        errs.append(float(jnp.linalg.norm(u_mid - exact)))
+    order = np.log2(errs[0] / errs[1])
+    assert order > 3.5, f"interpolant order {order:.2f}"
+    # endpoints must be exact
+    dt = 0.1
+    k1 = prob.f(prob.u0, prob.p, 0.0)
+    u_new, _, ks = rk_step(prob.f, tab, prob.u0, prob.p, 0.0, dt, k1)
+    u0i = interp_step(prob.f, tab, prob.u0, u_new, ks, prob.p, 0.0, dt,
+                      jnp.asarray(0.0))
+    u1i = interp_step(prob.f, tab, prob.u0, u_new, ks, prob.p, 0.0, dt,
+                      jnp.asarray(1.0))
+    np.testing.assert_allclose(u0i, prob.u0, atol=1e-12)
+    np.testing.assert_allclose(u1i, u_new, atol=1e-9)
