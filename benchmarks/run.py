@@ -12,6 +12,9 @@ import os
 import sys
 import traceback
 
+# allow both `python -m benchmarks.run` and `python benchmarks/run.py`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 MODULES = [
     ("fig4", "benchmarks.bench_fig4_crossover"),
     ("table1", "benchmarks.bench_table1_speedups"),
@@ -50,11 +53,24 @@ def print_roofline_summary():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--dry", action="store_true",
+                    help="import every benchmark module and check its entry "
+                         "point without timing anything (CI smoke)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     import importlib
+    failed = []
     for tag, modname in MODULES:
         if only and tag not in only:
+            continue
+        if args.dry:
+            try:
+                mod = importlib.import_module(modname)
+                assert callable(getattr(mod, "main")), f"{modname}.main"
+                print(f"# {modname}: ok")
+            except Exception as e:  # noqa: BLE001 — report all, then fail
+                failed.append(modname)
+                print(f"# {modname} FAILED: {type(e).__name__}: {e}")
             continue
         print(f"\n# ==== {modname} ====")
         try:
@@ -62,6 +78,8 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001 — keep the suite running
             print(f"# {modname} FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    if args.dry:
+        sys.exit(1 if failed else 0)
     print_roofline_summary()
 
 

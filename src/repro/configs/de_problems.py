@@ -95,6 +95,29 @@ def sho_problem(omega=2.0, dtype=jnp.float64) -> ODEProblem:
 
 
 # ---------------------------------------------------------------------------
+# Van der Pol — the standard stiff benchmark (paper §7's missing frontier,
+# served here by the rosenbrock23 registry method + batched-LU W solves)
+# ---------------------------------------------------------------------------
+
+def vdp_rhs(u, p, t):
+    mu = p[0]
+    return jnp.stack([u[1], mu * ((1.0 - u[0] ** 2) * u[1]) - u[0]])
+
+
+def vdp_problem(mu=10.0, tspan=(0.0, 1.0), dtype=jnp.float64) -> ODEProblem:
+    return ODEProblem(vdp_rhs, jnp.asarray([2.0, 0.0], dtype),
+                      jnp.asarray([mu], dtype), tspan, name="vdp")
+
+
+def vdp_ensemble(n_trajectories: int, mu_range=(5.0, 20.0),
+                 tspan=(0.0, 1.0), dtype=jnp.float64) -> EnsembleProblem:
+    """Stiffness sweep: mu uniform over mu_range (larger mu = stiffer)."""
+    prob = vdp_problem(tspan=tspan, dtype=dtype)
+    mus = jnp.linspace(mu_range[0], mu_range[1], n_trajectories, dtype=dtype)
+    return EnsembleProblem(prob, n_trajectories, ps=mus[:, None])
+
+
+# ---------------------------------------------------------------------------
 # A.2.1 Linear SDE (geometric Brownian motion) — asset-price model (Fig. 9)
 # ---------------------------------------------------------------------------
 
@@ -159,6 +182,7 @@ DE_PROBLEMS = {
     "bouncing_ball": bouncing_ball_problem,
     "linear_decay": linear_decay_problem,
     "sho": sho_problem,
+    "vdp": vdp_problem,
     "gbm": gbm_problem,
     "crn": crn_problem,
 }

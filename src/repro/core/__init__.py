@@ -5,6 +5,7 @@
 from .problem import EnsembleProblem, ODEProblem, SDEProblem
 from .tableaus import TABLEAUS, get_tableau
 from .controller import PIController, hairer_norm, initial_dt
+from .methods import MethodSpec, get_method, list_methods, register_method
 from .solvers import (AdaptiveOptions, Event, SolveResult, interp_step,
                       rk_step, solve_adaptive, solve_fixed, solve_one)
 from .ensemble import EnsembleResult, solve_ensemble_local
@@ -12,6 +13,7 @@ from .ensemble import EnsembleResult, solve_ensemble_local
 __all__ = [
     "EnsembleProblem", "ODEProblem", "SDEProblem",
     "TABLEAUS", "get_tableau", "PIController", "hairer_norm", "initial_dt",
+    "MethodSpec", "get_method", "list_methods", "register_method",
     "AdaptiveOptions", "Event", "SolveResult", "interp_step", "rk_step",
     "solve_adaptive", "solve_fixed", "solve_one",
     "EnsembleResult", "solve_ensemble_local",

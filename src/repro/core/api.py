@@ -34,9 +34,14 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
                    **kw) -> EnsembleResult:
     """Solve an ensemble, optionally sharded over `mesh`.
 
-    Trajectories are split over `shard_axes` (default: every ensemble-capable
-    axis present — "pod" and "data"); each device runs the fused kernel path
-    on its local chunk. N must divide by the total shard count.
+    This is the distributed face of the unified front door: `alg=` may be any
+    registered method (erk / rosenbrock / sde — see `repro.core.methods`),
+    dispatched through any `ensemble=`/`backend=` combination by
+    `solve_ensemble_local`. Trajectories are split over `shard_axes` (default:
+    every ensemble-capable axis present — "pod" and "data"); each device runs
+    the fused kernel path on its local chunk. N must divide by the total shard
+    count. (SDE counter-RNG lanes are local to each shard's chunk; use
+    distinct `seed`s per run, not per shard.)
     """
     if mesh is None:
         return solve_ensemble_local(eprob, **kw)

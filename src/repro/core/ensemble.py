@@ -1,4 +1,8 @@
-"""Ensemble execution strategies (paper §5) on a single device.
+"""Ensemble execution strategies (paper §5) on a single device — all families.
+
+`solve_ensemble_local` is the single front door: ANY registered method
+(`repro.core.methods` — explicit RK, Rosenbrock-stiff, SDE steppers) through
+ANY strategy and backend.
 
 Strategies (``ensemble=``):
 
@@ -18,8 +22,22 @@ Strategies (``ensemble=``):
                 computation per lane-tile; tiles retire independently.
                 backend="xla"    — fused lax.while_loop per tile (lax.map over
                                    tiles); measured-benchmark path on CPU.
-                backend="pallas" — the Pallas TPU kernel (kernels/tsit5) with
-                                   VMEM-resident state; the deployment path.
+                backend="pallas" — the generic ensemble Pallas kernel
+                                   (kernels/ensemble_kernel) with VMEM-resident
+                                   state; the deployment path. lane_tile=None
+                                   derives the tile from the §5.2 VMEM formula.
+
+Method families (``alg=`` resolves via the registry):
+
+  erk         — all strategies/backends; adaptive or fixed dt; events.
+  rosenbrock  — "vmap" and "kernel" (xla/pallas); the W = I - γh·J solves
+                (paper §5.1.3) run batched per lane, inlined inside the Pallas
+                kernel. No events yet.
+  sde         — "vmap" and "kernel" (xla/pallas); fixed-dt counter-RNG
+                steppers (§5.2.2). Pass `seed=` (or `key=`) — the SAME
+                (seed; step, row, lane) Threefry stream is replayed on every
+                strategy/backend, so paths agree bitwise across dispatch
+                targets; or inject `noise_table=` (n_steps, m, N).
 
 Distribution over a mesh (the paper's MPI composition, §6.3) lives in
 `repro.core.api.solve_ensemble` via shard_map over the trajectory axis.
@@ -35,12 +53,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from .controller import PIController
-from .problem import EnsembleProblem, ODEProblem
-from .solvers import (AdaptiveOptions, Event, SolveResult, rk_step,
-                      solve_adaptive, solve_fixed, solve_one)
-from .tableaus import Tableau, get_tableau
+from .methods import MethodSpec, get_method
+from .problem import EnsembleProblem, ODEProblem, SDEProblem
+from .solvers import (AdaptiveOptions, Event, SolveResult, interp_step,
+                      rk_step, solve_adaptive, solve_fixed, solve_one)
+from .tableaus import Tableau
 
 Array = Any
+
+# default lane tile for the XLA lanes path (the Pallas path derives its tile
+# from the VMEM formula instead — see kernels/ensemble_kernel.auto_lane_tile)
+XLA_LANE_TILE = 256
 
 
 class EnsembleResult(NamedTuple):
@@ -55,10 +78,6 @@ class EnsembleResult(NamedTuple):
     status: Array
 
 
-def _as_tab(alg) -> Tableau:
-    return alg if isinstance(alg, Tableau) else get_tableau(alg)
-
-
 def _pad_to(x, n_target, axis=0):
     pad = n_target - x.shape[axis]
     if pad == 0:
@@ -66,6 +85,29 @@ def _pad_to(x, n_target, axis=0):
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths, mode="edge")
+
+
+def _tile_lanes(u0s, ps, lane_tile):
+    """(N, k)-major arrays -> (T, B, k) tiles for the XLA lanes path."""
+    N = u0s.shape[0]
+    B = min(lane_tile, N)
+    T = -(-N // B)
+    u0p = _pad_to(u0s, T * B).reshape(T, B, u0s.shape[1])
+    psp = _pad_to(ps, T * B).reshape(T, B, ps.shape[1])
+    return u0p, psp, T, B
+
+
+def _untile(res, N, n):
+    """Invert _tile_lanes on a lanes-mode SolveResult mapped over tiles."""
+    us = jnp.moveaxis(res.us, -1, 1).reshape(-1, res.us.shape[1], n)[:N]
+    u_final = jnp.moveaxis(res.u_final, -1, 1).reshape(-1, n)[:N]
+    return EnsembleResult(
+        ts=res.ts[0], us=us, u_final=u_final,
+        t_final=res.t_final.reshape(-1)[:N],
+        naccept=res.naccept.reshape(-1)[:N],
+        nreject=res.nreject.reshape(-1)[:N],
+        nf=jnp.sum(res.nf.reshape(-1)[:N]),
+        status=jnp.max(res.status))
 
 
 # ----------------------------------------------------------------------------
@@ -155,7 +197,6 @@ def solve_array_eager(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
             t_new = t + dt_step
             while sidx < S and saveat_np[sidx] <= t_new + 1e-12:
                 theta = np.clip((saveat_np[sidx] - t) / dt_step, 0.0, 1.0)
-                from .solvers import interp_step
                 us[sidx] = np.asarray(
                     interp_step(prob.f, tab, U, U_new, ks, P, t, dt_step,
                                 jnp.asarray(theta, U.dtype)))
@@ -179,7 +220,7 @@ def solve_array_eager(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
 # ----------------------------------------------------------------------------
 
 def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
-                     rtol, atol, adaptive, max_iters, lane_tile=256,
+                     rtol, atol, adaptive, max_iters, lane_tile=XLA_LANE_TILE,
                      event=None) -> EnsembleResult:
     """Fused-integration lanes path expressed in pure XLA.
 
@@ -189,10 +230,7 @@ def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
     as its oracle and as the measured-CPU-benchmark path.
     """
     N, n = u0s.shape
-    B = min(lane_tile, N)
-    T = -(-N // B)
-    u0p = _pad_to(u0s, T * B).reshape(T, B, n)
-    psp = _pad_to(ps, T * B).reshape(T, B, ps.shape[1])
+    u0p, psp, T, B = _tile_lanes(u0s, ps, lane_tile)
     opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
                            adaptive=adaptive)
 
@@ -204,17 +242,7 @@ def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
             res, _ = res
         return res
 
-    res = jax.lax.map(tile, (u0p, psp))
-    # res.us: (T, S, n, B) -> (N, S, n)
-    us = jnp.moveaxis(res.us, -1, 1).reshape(T * B, res.us.shape[1], n)[:N]
-    u_final = jnp.moveaxis(res.u_final, -1, 1).reshape(T * B, n)[:N]
-    return EnsembleResult(
-        ts=saveat, us=us, u_final=u_final,
-        t_final=res.t_final.reshape(-1)[:N],
-        naccept=res.naccept.reshape(-1)[:N],
-        nreject=res.nreject.reshape(-1)[:N],
-        nf=jnp.sum(res.nf.reshape(-1)[:N]),
-        status=jnp.max(res.status))
+    return _untile(jax.lax.map(tile, (u0p, psp)), N, n)
 
 
 def solve_kernel_fixed(prob: ODEProblem, u0s, ps, tab, t0, dt, n_steps,
@@ -234,27 +262,30 @@ def solve_kernel_fixed(prob: ODEProblem, u0s, ps, tab, t0, dt, n_steps,
 
 
 # ----------------------------------------------------------------------------
-# front door
+# family dispatch: erk
 # ----------------------------------------------------------------------------
 
-def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
-                         ensemble: str = "kernel", backend: str = "xla",
-                         t0=None, tf=None, dt0=1e-2, saveat=None,
-                         rtol=1e-6, atol=1e-6, adaptive=True,
-                         n_steps=None, save_every=1, lane_tile=256,
-                         max_iters=100_000, event=None) -> EnsembleResult:
-    """Single-device ensemble solve. See module docstring for strategies."""
-    prob = eprob.prob
-    tab = _as_tab(alg)
-    u0s, ps = eprob.materialize()
-    t0 = prob.tspan[0] if t0 is None else t0
-    tf = prob.tspan[1] if tf is None else tf
-    if saveat is None:
-        saveat = jnp.asarray([tf], u0s.dtype)
-    saveat = jnp.asarray(saveat, u0s.dtype)
-
+def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
+               dt0, saveat, rtol, atol, adaptive, n_steps, save_every,
+               lane_tile, max_iters, event):
+    tab = spec.tableau
+    if not spec.adaptive:
+        adaptive = False  # e.g. rk4: no embedded error estimate
+    explicit_saveat = saveat is not None
     if not adaptive and n_steps is None:
         n_steps = int(round((tf - t0) / dt0))
+    if saveat is None:
+        if not adaptive and ensemble == "kernel" and event is None:
+            # mirror solve_kernel_fixed's save_every grid so the pallas and
+            # xla fixed-step paths produce identical snapshots
+            if n_steps % save_every != 0:
+                raise ValueError(
+                    f"save_every={save_every} must divide n_steps={n_steps}")
+            saveat = t0 + dt0 * save_every * jnp.arange(
+                1, n_steps // save_every + 1)
+        else:
+            saveat = [tf]
+    saveat = jnp.asarray(saveat, u0s.dtype)
 
     if ensemble == "vmap":
         return solve_vmap(prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol,
@@ -263,18 +294,237 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
         return solve_array(prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol,
                            adaptive, max_iters, event)
     if ensemble == "array_eager":
+        if event is not None:
+            raise NotImplementedError(
+                "events are not supported on the array_eager strategy")
         return solve_array_eager(prob, u0s, ps, tab, t0, tf, dt0, saveat,
                                  rtol, atol, adaptive)
     if ensemble == "kernel":
         if backend == "pallas":
-            from repro.kernels.tsit5 import ops as tsit5_ops
-            return tsit5_ops.solve_ensemble_pallas(
+            from repro.kernels.tsit5 import ops as erk_ops
+            return erk_ops.solve_ensemble_pallas(
                 prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol, adaptive,
-                lane_tile=lane_tile, max_iters=max_iters)
-        if not adaptive:
+                lane_tile=lane_tile, max_iters=max_iters, event=event)
+        if not adaptive and event is None and not explicit_saveat:
             return solve_kernel_fixed(prob, u0s, ps, tab, t0, dt0, n_steps,
-                                      save_every, lane_tile)
+                                      save_every,
+                                      lane_tile or XLA_LANE_TILE)
+        # fixed dt with a user saveat: lanes path with adaptive=False honours
+        # the requested grid via dense output
         return solve_kernel_xla(prob, u0s, ps, tab, t0, tf, dt0, saveat,
-                                rtol, atol, adaptive, max_iters, lane_tile,
-                                event)
+                                rtol, atol, adaptive, max_iters,
+                                lane_tile or XLA_LANE_TILE, event)
     raise ValueError(f"unknown ensemble strategy {ensemble!r}")
+
+
+# ----------------------------------------------------------------------------
+# family dispatch: rosenbrock (stiff, paper §5.1.3 + §7)
+# ----------------------------------------------------------------------------
+
+def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
+                      t0, tf, dt0, saveat, rtol, atol, lane_tile, max_iters,
+                      linsolve, event):
+    from .rosenbrock import solve_rosenbrock23
+
+    if event is not None:
+        raise NotImplementedError(
+            "events are not supported for rosenbrock methods yet")
+    if saveat is None:
+        saveat = jnp.asarray([tf], u0s.dtype)
+    saveat = jnp.asarray(saveat, u0s.dtype)
+    N, n = u0s.shape
+
+    if ensemble == "vmap":
+        def one(u0, p):
+            return solve_rosenbrock23(prob.f, u0, p, t0, tf, dt0, rtol=rtol,
+                                      atol=atol, saveat=saveat,
+                                      max_iters=max_iters)
+
+        res = jax.vmap(one)(u0s, ps)
+        return EnsembleResult(ts=saveat, us=res.us, u_final=res.u_final,
+                              t_final=res.t_final, naccept=res.naccept,
+                              nreject=res.nreject, nf=jnp.sum(res.nf),
+                              status=jnp.max(res.status))
+
+    if ensemble == "kernel":
+        if backend == "pallas":
+            from repro.kernels.ensemble_kernel import (rosenbrock_body,
+                                                       rosenbrock_work_words,
+                                                       run_ensemble_kernel)
+            body = rosenbrock_body(prob.f, t0=float(t0), tf=float(tf),
+                                   dt0=float(dt0), rtol=float(rtol),
+                                   atol=float(atol), max_iters=max_iters)
+            return run_ensemble_kernel(
+                body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
+                lane_tile=lane_tile,
+                work_words=rosenbrock_work_words(n, ps.shape[1]))
+
+        u0p, psp, T, B = _tile_lanes(u0s, ps, lane_tile or XLA_LANE_TILE)
+
+        def tile(args):
+            u0t, pt = args
+            return solve_rosenbrock23(prob.f, u0t.T, pt.T, t0, tf, dt0,
+                                      rtol=rtol, atol=atol, saveat=saveat,
+                                      max_iters=max_iters, lanes=True,
+                                      linsolve=linsolve, lane_tile=B)
+
+        return _untile(jax.lax.map(tile, (u0p, psp)), N, n)
+
+    raise NotImplementedError(
+        f"rosenbrock methods do not support ensemble={ensemble!r} "
+        "(use 'vmap' or 'kernel')")
+
+
+# ----------------------------------------------------------------------------
+# family dispatch: sde (fixed-dt counter-RNG steppers, paper §5.2.2)
+# ----------------------------------------------------------------------------
+
+def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
+               backend, t0, tf, dt0, saveat, n_steps, save_every, lane_tile,
+               key, seed, noise_table, event):
+    from .sde import (SDE_STEPPERS, sde_nf_per_step, sde_save_grid,
+                      sde_step_and_save)
+
+    if event is not None:
+        raise NotImplementedError("events are not supported for SDE methods")
+    if saveat is not None:
+        raise NotImplementedError(
+            "SDE methods are fixed-dt: snapshots land on the save_every grid; "
+            "pass n_steps/save_every instead of saveat")
+    if prob.noise not in spec.noise:
+        raise ValueError(
+            f"method {spec.name!r} supports noise {spec.noise}, "
+            f"problem has {prob.noise!r}")
+    if n_steps is None:
+        n_steps = int(round((tf - t0) / dt0))
+    assert n_steps % save_every == 0
+    if seed is None:
+        # keep the seed traceable (jit-able) on the XLA paths; the Pallas
+        # kernel bakes it into the kernel closure and concretizes below
+        seed = jnp.asarray(key)[-1] if key is not None else 0
+    N, n = u0s.shape
+    m = prob.noise_dim()
+
+    if ensemble == "kernel" and backend == "pallas":
+        from repro.kernels.em.ops import solve_sde_ensemble_kernel
+        try:
+            seed_c = int(seed)
+        except (TypeError, jax.errors.TracerIntegerConversionError,
+                jax.errors.ConcretizationTypeError):
+            raise ValueError(
+                "backend='pallas' specializes the RNG seed into the kernel; "
+                "pass a concrete `seed=` (python int) outside of jit")
+        return solve_sde_ensemble_kernel(
+            prob, u0s, ps, t0=t0, dt=dt0, n_steps=n_steps, method=spec.name,
+            save_every=save_every, lane_tile=lane_tile, seed=seed_c,
+            noise_table=noise_table)
+
+    stepper = SDE_STEPPERS[spec.name]
+    nf_per_step = sde_nf_per_step(spec.name)
+    ts = sde_save_grid(t0, dt0, n_steps, save_every, u0s.dtype)
+
+    if ensemble == "kernel":
+        # XLA lanes path replaying the kernel's exact Threefry counter stream
+        # (global lane indices) — the Pallas oracle, bitwise on every backend.
+        from repro.kernels.em.ref import ref_solve
+        us, uf = ref_solve(prob, u0s, ps, t0=t0, dt=dt0, n_steps=n_steps,
+                           method=spec.name, save_every=save_every, seed=seed,
+                           noise_table=noise_table)
+        return _assemble_sde_result(ts, jnp.moveaxis(us, -1, 0), uf.T, N,
+                                    n_steps, nf_per_step, t0, dt0, u0s.dtype)
+
+    if ensemble == "vmap":
+        from repro.kernels.rng import counter_normals_threefry
+
+        def one(u0, p, lane, table_col):
+            lane_v = jnp.full((m,), lane, jnp.uint32)
+            rows = jnp.arange(m, dtype=jnp.uint32)
+            S = n_steps // save_every
+
+            def step(k, carry):
+                u, us = carry
+                if noise_table is not None:
+                    z = jax.lax.dynamic_slice(table_col, (k, 0), (1, m))[0]
+                    z = z.astype(u.dtype)
+                else:
+                    z = counter_normals_threefry(seed, k, lane_v, rows,
+                                                 u.dtype)
+                return sde_step_and_save(stepper, prob.f, prob.g, prob.noise,
+                                         u, us, p, t0, dt0, k, z, save_every)
+
+            us0 = jnp.zeros((S, n), u0.dtype)
+            return jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+
+        lanes = jnp.arange(N, dtype=jnp.uint32)
+        if noise_table is not None:
+            table_cols = jnp.moveaxis(noise_table, -1, 0)    # (N, steps, m)
+            uf, us = jax.vmap(one)(u0s, ps, lanes, table_cols)
+        else:
+            uf, us = jax.vmap(partial(one, table_col=None))(u0s, ps, lanes)
+        return _assemble_sde_result(ts, us, uf, N, n_steps, nf_per_step,
+                                    t0, dt0, u0s.dtype)
+
+    raise NotImplementedError(
+        f"sde methods do not support ensemble={ensemble!r} "
+        "(use 'vmap' or 'kernel')")
+
+
+def _assemble_sde_result(ts, us, uf, N, n_steps, nf_per_step, t0, dt,
+                         dtype) -> EnsembleResult:
+    return EnsembleResult(
+        ts=ts, us=us, u_final=uf,
+        t_final=jnp.full((N,), t0 + n_steps * dt, dtype),
+        naccept=jnp.full((N,), n_steps, jnp.int32),
+        nreject=jnp.zeros((N,), jnp.int32),
+        nf=jnp.asarray(n_steps * nf_per_step * N),
+        status=jnp.asarray(0, jnp.int32))
+
+
+# ----------------------------------------------------------------------------
+# front door
+# ----------------------------------------------------------------------------
+
+def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
+                         ensemble: str = "kernel", backend: str = "xla",
+                         t0=None, tf=None, dt0=1e-2, saveat=None,
+                         rtol=1e-6, atol=1e-6, adaptive=True,
+                         n_steps=None, save_every=1, lane_tile=None,
+                         max_iters=100_000, event=None, key=None, seed=None,
+                         noise_table=None, linsolve="jnp") -> EnsembleResult:
+    """Single-device ensemble solve — ANY registered method through ANY
+    strategy/backend. See the module docstring for the matrix; `alg` may be a
+    registry name, a MethodSpec, or a bare Tableau."""
+    spec = get_method(alg)
+    prob = eprob.prob
+    u0s, ps = eprob.materialize()
+    t0 = prob.tspan[0] if t0 is None else t0
+    tf = prob.tspan[1] if tf is None else tf
+
+    if spec.family == "sde":
+        if not isinstance(prob, SDEProblem):
+            raise TypeError(
+                f"method {spec.name!r} is an SDE stepper but the problem is "
+                f"{type(prob).__name__}")
+        return _solve_sde(spec, prob, u0s, ps, ensemble=ensemble,
+                          backend=backend, t0=t0, tf=tf, dt0=dt0,
+                          saveat=saveat, n_steps=n_steps,
+                          save_every=save_every, lane_tile=lane_tile, key=key,
+                          seed=seed, noise_table=noise_table, event=event)
+
+    if isinstance(prob, SDEProblem):
+        raise TypeError(
+            f"problem {prob.name!r} is stochastic; pick an sde method "
+            f"(e.g. alg='em'), not {spec.name!r}")
+
+    if spec.family == "rosenbrock":
+        return _solve_rosenbrock(spec, prob, u0s, ps, ensemble=ensemble,
+                                 backend=backend, t0=t0, tf=tf, dt0=dt0,
+                                 saveat=saveat, rtol=rtol, atol=atol,
+                                 lane_tile=lane_tile, max_iters=max_iters,
+                                 linsolve=linsolve, event=event)
+
+    return _solve_erk(spec, prob, u0s, ps, ensemble=ensemble, backend=backend,
+                      t0=t0, tf=tf, dt0=dt0, saveat=saveat, rtol=rtol,
+                      atol=atol, adaptive=adaptive, n_steps=n_steps,
+                      save_every=save_every, lane_tile=lane_tile,
+                      max_iters=max_iters, event=event)

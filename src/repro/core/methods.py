@@ -1,0 +1,138 @@
+"""Method registry: every solver algorithm the front door can dispatch.
+
+The paper's central claim is that ONE kernel-generation pipeline ("automated
+translation") serves every method family.  This module is the data model for
+that claim: a `MethodSpec` describes an algorithm — its family (explicit RK,
+Rosenbrock-stiff, or SDE stepper), the tableau or stepper function that
+parameterizes the shared engine, and its capabilities (adaptive stepping,
+stiffness, supported noise types).  `repro.core.ensemble.solve_ensemble_local`
+and the Pallas kernel factory (`repro.kernels.ensemble_kernel`) consume specs
+instead of hard-coding per-method entry points, so registering a method here is
+all it takes to reach every execution strategy (vmap / array / kernel) and
+backend (xla / pallas).
+
+Families:
+  "erk"        — embedded explicit Runge-Kutta; `tableau` drives
+                 `repro.core.solvers` (scalar / array / lanes modes).
+  "rosenbrock" — linearly-implicit stiff methods; batched block-diagonal
+                 W = I - γh·J solves (paper §5.1.3) via `repro.core.rosenbrock`.
+  "sde"        — fixed-dt stochastic steppers; `stepper` drives
+                 `repro.core.sde` (and the fused SDE kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from .tableaus import TABLEAUS, Tableau
+
+FAMILIES = ("erk", "rosenbrock", "sde")
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """Declarative description of one solver algorithm.
+
+    name:      canonical registry key.
+    family:    one of FAMILIES.
+    tableau:   Butcher tableau (erk only).
+    stepper:   stepper fn `(f, g, u, p, t, dt, dW, noise) -> u_new` (sde only).
+    order:     order of the propagated solution.
+    adaptive:  the method supports embedded-error adaptive stepping.
+    stiff:     suitable for stiff problems (implicit/semi-implicit).
+    noise:     supported SDEProblem.noise kinds (sde only).
+    aliases:   alternative lookup names (paper-facing spellings).
+    """
+
+    name: str
+    family: str
+    order: float
+    tableau: Optional[Tableau] = None
+    stepper: Optional[Callable] = None
+    adaptive: bool = True
+    stiff: bool = False
+    noise: Tuple[str, ...] = ()
+    aliases: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(
+                f"family {self.family!r} not one of {FAMILIES}")
+        if self.family == "erk" and self.tableau is None:
+            raise ValueError(f"erk method {self.name!r} needs a tableau")
+        if self.family == "sde" and self.stepper is None:
+            raise ValueError(f"sde method {self.name!r} needs a stepper")
+
+
+_REGISTRY: Dict[str, MethodSpec] = {}
+
+
+def register_method(spec: MethodSpec, overwrite: bool = False) -> MethodSpec:
+    """Register `spec` under its name and every alias."""
+    for key in (spec.name,) + spec.aliases:
+        if key in _REGISTRY and not overwrite:
+            raise ValueError(f"method {key!r} already registered")
+        _REGISTRY[key] = spec
+    return spec
+
+
+def get_method(alg: Any) -> MethodSpec:
+    """Resolve `alg` (name, Tableau, or MethodSpec) to a MethodSpec.
+
+    A bare Tableau is wrapped as an ad-hoc erk spec, so user-supplied tableaus
+    keep working without registration.
+    """
+    if isinstance(alg, MethodSpec):
+        return alg
+    if isinstance(alg, Tableau):
+        return MethodSpec(name=alg.name, family="erk", order=alg.order,
+                          tableau=alg, adaptive=bool((alg.btilde != 0).any()))
+    try:
+        return _REGISTRY[alg]
+    except (KeyError, TypeError):
+        raise KeyError(
+            f"unknown method {alg!r}; registered: {sorted(set(_REGISTRY))}")
+
+
+def list_methods(family: Optional[str] = None):
+    """Canonical (deduplicated) specs, optionally filtered by family."""
+    seen = {}
+    for spec in _REGISTRY.values():
+        if family is None or spec.family == family:
+            seen[spec.name] = spec
+    return [seen[k] for k in sorted(seen)]
+
+
+# ---------------------------------------------------------------------------
+# built-in registrations
+# ---------------------------------------------------------------------------
+
+def _register_builtins():
+    # every shipped tableau is an erk method (RK4 has btilde == 0: fixed-only)
+    for tab in TABLEAUS.values():
+        register_method(MethodSpec(
+            name=tab.name, family="erk", order=tab.order, tableau=tab,
+            adaptive=bool((tab.btilde != 0).any()),
+            aliases=("gpu" + tab.name,) if tab.name == "tsit5" else ()))
+
+    register_method(MethodSpec(
+        name="rosenbrock23", family="rosenbrock", order=2, adaptive=True,
+        stiff=True, aliases=("rb23", "ode23s")))
+
+    # SDE steppers (fixed-dt, as the paper's GPU kernel set)
+    from .sde import (em_step, heun_strat_step, milstein_step, platen_w2_step)
+    register_method(MethodSpec(
+        name="em", family="sde", order=0.5, stepper=em_step, adaptive=False,
+        noise=("diagonal", "general"), aliases=("gpuem", "euler_maruyama")))
+    register_method(MethodSpec(
+        name="platen_w2", family="sde", order=2.0, stepper=platen_w2_step,
+        adaptive=False, noise=("diagonal",), aliases=("siea", "gpusiea")))
+    register_method(MethodSpec(
+        name="heun_strat", family="sde", order=0.5, stepper=heun_strat_step,
+        adaptive=False, noise=("diagonal", "general")))
+    register_method(MethodSpec(
+        name="milstein", family="sde", order=1.0, stepper=milstein_step,
+        adaptive=False, noise=("diagonal",)))
+
+
+_register_builtins()

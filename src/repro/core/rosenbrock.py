@@ -35,13 +35,21 @@ def _jac_lanes(f, u, p, t):
 
 
 def _linsolve(W, rhs, mode, lane_tile):
-    """W (B, n, n), rhs (n, B) -> (n, B) [lanes] or W (n,n), rhs (n,) [scalar]."""
+    """W (B, n, n), rhs (n, B) -> (n, B) [lanes] or W (n,n), rhs (n,) [scalar].
+
+    modes: "jnp" (vmapped LAPACK), "pallas" (batched-LU Pallas kernel launch),
+    "lanes" (the LU kernel *body* inlined — no nested pallas_call, used when
+    the whole Rosenbrock integration already runs inside a fused kernel).
+    """
     if W.ndim == 2:
         return jnp.linalg.solve(W, rhs)
     if mode == "pallas":
         from repro.kernels.lu.ops import batched_solve
         x = batched_solve(W, rhs.T, lane_tile=lane_tile)  # (B, n)
         return x.T
+    if mode == "lanes":
+        from repro.kernels.lu.kernel import lu_solve_lanes
+        return lu_solve_lanes(jnp.moveaxis(W, 0, -1), rhs)
     return jnp.linalg.solve(W, rhs.T[..., None])[..., 0].T
 
 

@@ -112,6 +112,36 @@ def counter_normals(key, step, shape, dtype):
     return jax.random.normal(jax.random.fold_in(key, step), shape, dtype)
 
 
+def sde_nf_per_step(method: str) -> int:
+    """Drift evaluations per step (the nf work proxy), per method."""
+    return 2 if method != "em" else 1
+
+
+def sde_save_grid(t0, dt, n_steps: int, save_every: int, dtype):
+    """The fixed-step snapshot times: t0 + dt*save_every*(1..S)."""
+    return jnp.asarray(t0, dtype) + jnp.asarray(dt, dtype) * save_every \
+        * jnp.arange(1, n_steps // save_every + 1, dtype=dtype)
+
+
+def sde_step_and_save(stepper, f, g, noise: str, u, us, p, t0, dt, k, z,
+                      save_every: int):
+    """ONE fixed-dt step + masked snapshot write — the loop body every SDE
+    execution path shares (vmap, XLA lanes, Pallas kernel), so the
+    (step, save-index) plumbing that bitwise cross-backend parity depends on
+    exists exactly once.  Layout-polymorphic: u (n,)/(n, B) with us
+    (S, n)/(S, n, B); z is the N(0,1) draw for step k."""
+    dtv = jnp.asarray(dt, u.dtype)
+    t = t0 + k * dtv
+    u = stepper(f, g, u, p, t, dtv, z * jnp.sqrt(dtv), noise)
+    s = (k + 1) // save_every - 1
+    us = jax.lax.cond(
+        (k + 1) % save_every == 0,
+        lambda us: jax.lax.dynamic_update_slice(
+            us, u[None], (s,) + (0,) * (us.ndim - 1)),
+        lambda us: us, us)
+    return u, us
+
+
 def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
                     method: str = "em", save_every: int = 1,
                     noise_table: Optional[Array] = None) -> SolveResult:
@@ -161,41 +191,20 @@ def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
 def solve_sde_ensemble(eprob: EnsembleProblem, key, dt, n_steps=None,
                        method="em", ensemble="kernel", backend="xla",
                        save_every=1, t0=None, tf=None,
-                       lane_tile=1024) -> "EnsembleSDEResult":
-    """Ensemble SDE front door. Strategies mirror the ODE ones; SDE kernels are
-    fixed-dt (as in the paper §5.2.2)."""
-    prob: SDEProblem = eprob.prob
-    u0s, ps = eprob.materialize()
-    N, n = u0s.shape
-    t0 = prob.tspan[0] if t0 is None else t0
-    tf = prob.tspan[1] if tf is None else tf
-    if n_steps is None:
-        n_steps = int(round((tf - t0) / dt))
+                       lane_tile=None) -> "EnsembleSDEResult":
+    """Legacy SDE-facing wrapper over the unified front door
+    (`repro.core.ensemble.solve_ensemble_local`): same fixed-dt kernels
+    (paper §5.2.2), dispatched through the method registry, result adapted to
+    the SDE-shaped tuple.  New code should call the front door directly with
+    ``alg=method``."""
+    from .ensemble import solve_ensemble_local
 
-    if ensemble == "kernel" and backend == "pallas":
-        from repro.kernels.em import ops as em_ops
-        return em_ops.solve_sde_ensemble_pallas(
-            prob, u0s, ps, key, t0, dt, n_steps, method=method,
-            save_every=save_every, lane_tile=lane_tile)
-
-    if ensemble == "kernel":
-        # lanes layout (n, N): one fused scan; per-lane noise drawn inside.
-        res = sde_solve_fixed(prob, u0s.T, ps.T, t0, dt, n_steps, key,
-                              method=method, save_every=save_every)
-        us = jnp.moveaxis(res.us, -1, 0)
-        return EnsembleSDEResult(ts=res.ts, us=us, u_final=res.u_final.T,
-                                 nf=res.nf * N)
-    if ensemble == "vmap":
-        keys = jax.random.split(key, N)
-
-        def one(u0, p, k):
-            return sde_solve_fixed(prob, u0, p, t0, dt, n_steps, k,
-                                   method=method, save_every=save_every)
-
-        res = jax.vmap(one)(u0s, ps, keys)
-        return EnsembleSDEResult(ts=res.ts[0], us=res.us,
-                                 u_final=res.u_final, nf=jnp.sum(res.nf))
-    raise ValueError(f"unknown ensemble {ensemble!r}")
+    res = solve_ensemble_local(
+        eprob, alg=method, ensemble=ensemble, backend=backend, t0=t0, tf=tf,
+        dt0=dt, n_steps=n_steps, save_every=save_every, lane_tile=lane_tile,
+        key=key)
+    return EnsembleSDEResult(ts=res.ts, us=res.us, u_final=res.u_final,
+                             nf=res.nf)
 
 
 class EnsembleSDEResult(NamedTuple):

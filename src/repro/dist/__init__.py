@@ -1,0 +1,5 @@
+# Distributed-training support: gradient compression/bucketing collectives
+# and fault-tolerance (checkpoint supervision, straggler work queues).
+from . import collectives, fault
+
+__all__ = ["collectives", "fault"]

@@ -1,0 +1,86 @@
+"""Gradient-compression collectives: int8 quantization with error feedback
+and fixed-size gradient bucketing.
+
+These are the communication-volume levers for the distributed training loop:
+int8 all-reduce payloads are 4x smaller than f32, error feedback (EF) carries
+the quantization residual forward so the *sum* of updates stays unbiased, and
+bucketing packs a parameter pytree into equal-size flat segments so collective
+launches amortize over many small leaves.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+class EFState(NamedTuple):
+    """Error-feedback residual, one leaf per parameter leaf."""
+    residual: Any
+
+
+def ef_init(params: Any) -> EFState:
+    """Zero residuals shaped like `params`."""
+    return EFState(residual=jax.tree.map(jnp.zeros_like, params))
+
+
+def _quant_int8(x: Array) -> Tuple[Array, Array]:
+    """Symmetric round-to-nearest int8 quantization.
+
+    Returns (q int8, scale) with x ≈ q * scale and max error ≤ scale/2
+    (the round-to-nearest bound the tests assert).
+    """
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, jnp.asarray(1.0, x.dtype))
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(x.dtype)
+
+
+def ef_compress(grads: Any, state: EFState) -> Tuple[Any, EFState]:
+    """Quantize (grads + residual) leafwise; return dequantized updates and the
+    new residual state. sum(updates) over steps converges to sum(grads)."""
+    def one(g, r):
+        x = g + r
+        q, s = _quant_int8(x)
+        deq = q.astype(x.dtype) * s
+        return deq, x - deq
+
+    flat = jax.tree.map(one, grads, state.residual)
+    deq = jax.tree.map(lambda pr: pr[0], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda pr: pr[1], flat,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, EFState(residual=res)
+
+
+def bucketize(tree: Any, bucket_bytes: int
+              ) -> Tuple[List[Array], Callable[[List[Array]], Any]]:
+    """Pack a pytree into ~`bucket_bytes` flat 1-D buckets.
+
+    Returns (buckets, unpack) where `unpack(buckets)` restores the original
+    tree structure/shapes/dtypes. Buckets split on element boundaries of the
+    flattened concatenation (a leaf may span buckets), so every bucket except
+    the last has exactly `bucket_bytes // itemsize` elements — the fixed-size
+    payload a fused all-reduce wants.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    ctype = jnp.result_type(*dtypes)
+    flat = jnp.concatenate([jnp.ravel(l).astype(ctype) for l in leaves])
+    per = max(1, bucket_bytes // flat.dtype.itemsize)
+    buckets = [flat[i:i + per] for i in range(0, flat.shape[0], per)]
+
+    def unpack(bs: List[Array]) -> Any:
+        whole = jnp.concatenate(list(bs))
+        out, off = [], 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            out.append(whole[off:off + size].reshape(shape).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return buckets, unpack

@@ -1,0 +1,90 @@
+"""Fault tolerance: checkpoint supervision and straggler work reassignment.
+
+`TrainSupervisor` wraps the atomic step-addressed checkpointer
+(`repro.checkpoint.ckpt`) with the restart contract: crash-and-rerun resumes
+from the newest complete checkpoint, and periodic saves are one call in the
+training loop.  `WorkQueue` is the ensemble-tile analogue of a straggler-
+tolerant scheduler: tiles of the trajectory axis are leased to workers and
+become reassignable when a lease times out (a dead worker never wedges the
+sweep — the same tile-local-termination property the fused kernel has on
+device, at the job level).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+
+class TrainSupervisor:
+    """Periodic-checkpoint + resume-from-latest supervision for a train loop."""
+
+    def __init__(self, ckpt_dir: str, save_every: int = 1000,
+                 async_save: bool = False):
+        self.ckpt_dir = ckpt_dir
+        self.save_every = int(save_every)
+        self.async_save = async_save
+        self._pending = None
+
+    def resume_or_init(self, init_fn: Callable[[], Any], like_tree: Any
+                       ) -> Tuple[int, Any, Dict]:
+        """Restore the newest checkpoint into `like_tree`'s structure, or call
+        `init_fn` for a fresh start. Returns (step, state, extra)."""
+        latest = ckpt_lib.restore_latest(self.ckpt_dir, like_tree)
+        if latest is None:
+            return 0, init_fn(), {}
+        step, state, extra = latest
+        return step, state, extra
+
+    def maybe_save(self, step: int, state: Any,
+                   extra: Optional[Dict] = None) -> bool:
+        """Checkpoint when `step` lands on the save_every grid."""
+        if step % self.save_every != 0:
+            return False
+        self.flush()
+        self._pending = ckpt_lib.save(self.ckpt_dir, step, state, extra=extra,
+                                      async_write=self.async_save)
+        return True
+
+    def flush(self):
+        """Join any in-flight async write (call before exit/restore)."""
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+
+class WorkQueue:
+    """Lease-based tile queue with straggler reassignment.
+
+    `n_items` units are split into `tile`-sized work units. `claim()` leases
+    the first tile that is unfinished and either unclaimed or past its lease
+    `timeout` (seconds) — a crashed/straggling worker's tile is simply handed
+    to the next claimer. `complete(idx)` retires a tile.
+    """
+
+    def __init__(self, n_items: int, tile: int, timeout: float = 60.0):
+        self.tiles: List[Tuple[int, int]] = [
+            (lo, min(lo + tile, n_items)) for lo in range(0, n_items, tile)]
+        self.timeout = float(timeout)
+        self._done = [False] * len(self.tiles)
+        self._leased_at: List[Optional[float]] = [None] * len(self.tiles)
+
+    def claim(self) -> Optional[Tuple[int, Tuple[int, int]]]:
+        now = time.monotonic()
+        for idx, done in enumerate(self._done):
+            if done:
+                continue
+            leased = self._leased_at[idx]
+            if leased is None or now - leased >= self.timeout:
+                self._leased_at[idx] = now
+                return idx, self.tiles[idx]
+        return None
+
+    def complete(self, idx: int):
+        self._done[idx] = True
+        self._leased_at[idx] = None
+
+    @property
+    def finished(self) -> bool:
+        return all(self._done)

@@ -1,121 +1,19 @@
-"""GPUEM / GPUSIEA: fixed-step SDE ensemble Pallas kernel (paper §5.2.2, §6.8).
+"""GPUEM / GPUSIEA: fixed-step SDE ensemble kernel (paper §5.2.2, §6.8).
 
-Same TPU mapping as the tsit5 kernel (lane = trajectory, whole integration in
-one grid cell, VMEM-resident state). Noise is generated *inside* the kernel
-from a counter-based Threefry RNG keyed by (seed; step, noise-row, global
-lane) — the kernel needs no noise storage and any step is replayable (the
-paper's per-thread cuRAND design). A pre-drawn noise table can be passed
-instead for pathwise validation against the oracle.
+The bespoke `pallas_call` plumbing that used to live here (grid, BlockSpecs,
+padding, table wiring) is now the generic factory
+`repro.kernels.ensemble_kernel`; the SDE loop body (`sde_body`) keeps the
+exact same semantics:
 
-Steppers are the shared `repro.core.sde` definitions — the kernel is the same
-math as the XLA path, specialized and tiled.
+  * steppers are the shared `repro.core.sde` definitions — the kernel is the
+    same math as the XLA path, specialized and tiled;
+  * noise is generated *inside* the kernel from a counter-based Threefry RNG
+    keyed by (seed; step, noise-row, global lane) — no noise storage, any
+    step replayable (the paper's per-thread cuRAND design);
+  * a pre-drawn noise table can be passed instead for pathwise validation.
+
+See `ops.solve_sde_ensemble_pallas` for the public entry point.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from repro.core.sde import SDE_STEPPERS
-from repro.kernels.rng import counter_normals_threefry
-
-
-def build_em_kernel(f, g, noise: str, method: str, *, t0: float, dt: float,
-                    n_steps: int, save_every: int, n_state: int, m_noise: int,
-                    lane_tile: int, seed: int, use_table: bool):
-    stepper = SDE_STEPPERS[method]
-    S = n_steps // save_every
-    B = lane_tile
-
-    def body_with(noise_fn, u0_ref, p_ref, us_ref, uf_ref):
-        u0 = u0_ref[...]                  # (n, B)
-        p = p_ref[...]
-        dtype = u0.dtype
-        sdt = jnp.sqrt(jnp.asarray(dt, dtype))
-        tile = pl.program_id(0)
-        lane = (jnp.uint32(tile) * jnp.uint32(B)
-                + jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 1))
-        rows = jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 0)
-
-        def step(k, carry):
-            u, us = carry
-            z = noise_fn(k, lane, rows, dtype)
-            t = t0 + k * jnp.asarray(dt, dtype)
-            u = stepper(f, g, u, p, t, jnp.asarray(dt, dtype), z * sdt, noise)
-            s = (k + 1) // save_every - 1
-            write = (k + 1) % save_every == 0
-            us = jax.lax.cond(
-                write,
-                lambda us: jax.lax.dynamic_update_slice(us, u[None], (s, 0, 0)),
-                lambda us: us, us)
-            return (u, us)
-
-        us0 = jnp.zeros((S, n_state, B), dtype)
-        u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
-        us_ref[...] = us
-        uf_ref[...] = u_f
-
-    if use_table:
-        def kernel(u0_ref, p_ref, table_ref, us_ref, uf_ref):
-            def noise_fn(k, lane, rows, dtype):
-                return jax.lax.dynamic_slice(
-                    table_ref[...], (k, 0, 0),
-                    (1, m_noise, B))[0].astype(dtype)
-            body_with(noise_fn, u0_ref, p_ref, us_ref, uf_ref)
-    else:
-        def kernel(u0_ref, p_ref, us_ref, uf_ref):
-            def noise_fn(k, lane, rows, dtype):
-                return counter_normals_threefry(seed, k, lane, rows, dtype)
-            body_with(noise_fn, u0_ref, p_ref, us_ref, uf_ref)
-
-    return kernel
-
-
-def em_pallas_call(f, g, u0_lanes, p_lanes, *, noise="diagonal", method="em",
-                   t0=0.0, dt=1e-3, n_steps=1000, save_every=1000,
-                   m_noise=None, seed=0, noise_table=None, lane_tile=128,
-                   interpret=None):
-    """u0_lanes (n, N), p_lanes (m, N); N % lane_tile == 0 (ops.py pads).
-    noise_table: optional (n_steps, m_noise, N) pre-drawn N(0,1)."""
-    n, N = u0_lanes.shape
-    mp = p_lanes.shape[0]
-    if m_noise is None:
-        m_noise = n
-    assert N % lane_tile == 0
-    assert n_steps % save_every == 0
-    S = n_steps // save_every
-    T = N // lane_tile
-    B = lane_tile
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    dtype = u0_lanes.dtype
-
-    kernel = build_em_kernel(
-        f, g, noise, method, t0=float(t0), dt=float(dt), n_steps=n_steps,
-        save_every=save_every, n_state=n, m_noise=m_noise, lane_tile=B,
-        seed=seed, use_table=noise_table is not None)
-
-    in_specs = [
-        pl.BlockSpec((n, B), lambda i: (0, i)),
-        pl.BlockSpec((mp, B), lambda i: (0, i)),
-    ]
-    args = [u0_lanes, p_lanes]
-    if noise_table is not None:
-        in_specs.append(pl.BlockSpec((n_steps, m_noise, B),
-                                     lambda i: (0, 0, i)))
-        args.append(noise_table)
-    out_shape = [
-        jax.ShapeDtypeStruct((S, n, N), dtype),
-        jax.ShapeDtypeStruct((n, N), dtype),
-    ]
-    out_specs = [
-        pl.BlockSpec((S, n, B), lambda i: (0, 0, i)),
-        pl.BlockSpec((n, B), lambda i: (0, i)),
-    ]
-    fn = pl.pallas_call(kernel, grid=(T,), in_specs=in_specs,
-                        out_specs=out_specs, out_shape=out_shape,
-                        interpret=interpret)
-    us, uf = fn(*args)
-    return us, uf
+from repro.kernels.ensemble_kernel import sde_body, sde_work_words  # noqa: F401

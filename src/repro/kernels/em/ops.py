@@ -1,37 +1,54 @@
-"""Jit'd wrapper for the SDE ensemble Pallas kernel."""
+"""Public wrapper for the fused SDE ensemble Pallas kernel.
+
+Padding / grid / stats plumbing lives in the generic factory
+(`repro.kernels.ensemble_kernel.run_ensemble_kernel`); this wrapper
+instantiates the SDE loop body (counter-RNG or noise-table flavour) on the
+problem and adapts the unified EnsembleResult to the SDE-facing result type.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.sde import EnsembleSDEResult
-
-
-def _pad_lanes(x, B):
-    N = x.shape[-1]
-    pad = (-N) % B
-    if pad == 0:
-        return x, N
-    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], mode="edge"), N
+from repro.core.sde import (SDE_STEPPERS, EnsembleSDEResult, sde_nf_per_step,
+                            sde_save_grid)
+from repro.kernels.ensemble_kernel import (run_ensemble_kernel, sde_body,
+                                           sde_work_words)
 
 
 def solve_sde_ensemble_pallas(prob, u0s, ps, key, t0, dt, n_steps,
-                              method="em", save_every=1, lane_tile=128,
+                              method="em", save_every=1, lane_tile=None,
                               seed=None, noise_table=None,
                               interpret=None) -> EnsembleSDEResult:
-    from .kernel import em_pallas_call
     if seed is None:
         seed = int(jnp.asarray(key)[-1]) if key is not None else 0
-    u0_l, N = _pad_lanes(u0s.T, lane_tile)
-    p_l, _ = _pad_lanes(ps.T, lane_tile)
+    res = solve_sde_ensemble_kernel(
+        prob, u0s, ps, t0=t0, dt=dt, n_steps=n_steps, method=method,
+        save_every=save_every, lane_tile=lane_tile, seed=seed,
+        noise_table=noise_table, interpret=interpret)
+    return EnsembleSDEResult(ts=res.ts, us=res.us, u_final=res.u_final,
+                             nf=res.nf)
+
+
+def solve_sde_ensemble_kernel(prob, u0s, ps, *, t0, dt, n_steps,
+                              method="em", save_every=1, lane_tile=None,
+                              seed=0, noise_table=None, interpret=None):
+    """Unified-result SDE kernel entry (returns an EnsembleResult).
+
+    noise_table: optional (n_steps, m, N) pre-drawn N(0,1), tiled over the
+    trajectory axis alongside the state. lane_tile=None derives the tile from
+    the §5.2 VMEM formula."""
+    assert n_steps % save_every == 0
+    m_noise = prob.noise_dim()
+    body = sde_body(prob.f, prob.g, SDE_STEPPERS[method], prob.noise,
+                    t0=float(t0), dt=float(dt), n_steps=n_steps,
+                    save_every=save_every, m_noise=m_noise, seed=seed,
+                    use_table=noise_table is not None,
+                    nf_per_step=sde_nf_per_step(method))
+    ts = sde_save_grid(t0, dt, n_steps, save_every, u0s.dtype)
+    extras = []
     if noise_table is not None:
-        noise_table, _ = _pad_lanes(noise_table, lane_tile)
-    us, uf = em_pallas_call(
-        prob.f, prob.g, u0_l, p_l, noise=prob.noise, method=method, t0=t0,
-        dt=dt, n_steps=n_steps, save_every=save_every,
-        m_noise=prob.noise_dim(), seed=seed, noise_table=noise_table,
-        lane_tile=lane_tile, interpret=interpret)
-    ts = jnp.asarray(t0, u0s.dtype) + dt * save_every * jnp.arange(
-        1, n_steps // save_every + 1, dtype=u0s.dtype)
-    return EnsembleSDEResult(ts=ts, us=jnp.moveaxis(us, -1, 0)[:N],
-                             u_final=uf.T[:N],
-                             nf=jnp.asarray(n_steps * N))
+        extras.append(("lanes", noise_table))
+    return run_ensemble_kernel(
+        body, u0s, ps, ts=ts, extras=extras, lane_tile=lane_tile,
+        work_words=sde_work_words(u0s.shape[1], ps.shape[1], m_noise),
+        interpret=interpret)

@@ -6,7 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sde import SDE_STEPPERS
+from repro.core.sde import SDE_STEPPERS, sde_step_and_save
 from repro.kernels.rng import counter_normals_threefry
 
 
@@ -21,7 +21,6 @@ def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
     n, N = u0.shape
     m = prob.noise_dim()
     dtype = u0.dtype
-    sdt = jnp.sqrt(jnp.asarray(dt, dtype))
     S = n_steps // save_every
     lane = jnp.broadcast_to(jnp.arange(N, dtype=jnp.uint32)[None], (m, N))
     rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[:, None], (m, N))
@@ -33,15 +32,8 @@ def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
             z = z.astype(dtype)
         else:
             z = counter_normals_threefry(seed, k, lane, rows, dtype)
-        t = t0 + k * jnp.asarray(dt, dtype)
-        u = stepper(prob.f, prob.g, u, p, t, jnp.asarray(dt, dtype), z * sdt,
-                    prob.noise)
-        s = (k + 1) // save_every - 1
-        us = jax.lax.cond(
-            (k + 1) % save_every == 0,
-            lambda us: jax.lax.dynamic_update_slice(us, u[None], (s, 0, 0)),
-            lambda us: us, us)
-        return (u, us)
+        return sde_step_and_save(stepper, prob.f, prob.g, prob.noise, u, us,
+                                 p, t0, dt, k, z, save_every)
 
     us0 = jnp.zeros((S, n, N), dtype)
     u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))

@@ -1,0 +1,293 @@
+"""Generic fused-ensemble Pallas kernel factory (paper §5.2, all families).
+
+One factory replaces the per-method kernels (the old tsit5-only
+`build_ode_kernel` and the bespoke EM kernel): the TPU mapping —
+
+  VREG lane <- 1 trajectory
+  pallas grid over lane tiles (LANES); tiles retire independently
+  loop-carried VMEM values (never HBM inside the integration)
+  whole integration in one grid cell; one HBM flush at kernel end
+
+— is method-independent, so it lives HERE exactly once: BlockSpec/grid
+construction, trajectory-axis padding, output/stats assembly, and the
+VMEM-budget-aware `lane_tile` selection (§5.2's occupancy formula).  What
+varies per method family is only the *loop body*, supplied as a callback:
+
+  body(ctx, u0 (n, B), p (m, B), extras) ->
+      (us (S, n, B), u_final (n, B), t_final (B,), stats (4, B) int32)
+
+with stats rows (naccept, nreject, status, nf).  Bodies for the three
+registered families (erk / rosenbrock / sde) are provided below; they reuse
+the shared numerical engines (`core.solvers`, `core.rosenbrock`, `core.sde`)
+unchanged — the paper's "automated translation": the same user RHS and the
+same stepper run vmapped, lane-fused in XLA, and inside the device kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = Any
+
+# ---------------------------------------------------------------------------
+# VMEM-aware lane-tile selection (paper §5.2 occupancy formula)
+# ---------------------------------------------------------------------------
+
+# ~16 MB VMEM/core on current TPUs; budget half of it for the kernel's
+# loop-carried state + output block, leaving headroom for pipelining/spills.
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+DEFAULT_VMEM_BUDGET = VMEM_BYTES_PER_CORE // 2
+
+# TPU vector-lane width: tiles should be multiples of this.
+LANE_WIDTH = 128
+
+
+def auto_lane_tile(n_state: int, n_param: int, n_save: int, *,
+                   itemsize: int = 4, work_words: Optional[int] = None,
+                   vmem_budget: Optional[int] = None,
+                   max_tile: int = 4096) -> int:
+    """Largest 128-multiple tile whose per-lane VMEM footprint fits the budget.
+
+    Per-lane bytes ≈ itemsize * (2*S*n  [output block + loop-carried copy]
+                                 + work_words [state, stages, params, control]).
+    `work_words` defaults to a generic ERK estimate; family-specific callers
+    (Rosenbrock carries an n×n Jacobian per lane) pass their own.
+    """
+    if work_words is None:
+        work_words = 12 * n_state + n_param + 16
+    per_lane = itemsize * (2 * n_save * n_state + work_words)
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    tile = (budget // per_lane) // LANE_WIDTH * LANE_WIDTH
+    return int(max(LANE_WIDTH, min(tile, max_tile)))
+
+
+def erk_work_words(n_state: int, n_param: int, stages: int) -> int:
+    return (stages + 4) * n_state + n_param + 16
+
+
+def rosenbrock_work_words(n_state: int, n_param: int) -> int:
+    # J and W are (n, n) PER LANE — the dominant term for stiff kernels.
+    return 2 * n_state * n_state + 8 * n_state + n_param + 16
+
+
+def sde_work_words(n_state: int, n_param: int, m_noise: int) -> int:
+    return 4 * n_state + m_noise + n_param + 8
+
+
+# ---------------------------------------------------------------------------
+# shared trajectory-axis padding / layout helpers (single home; the ops
+# wrappers and the XLA lanes path all use these)
+# ---------------------------------------------------------------------------
+
+def pad_lanes(x: Array, lane_tile: int) -> Tuple[Array, int]:
+    """Pad the trailing (lane) axis to a multiple of `lane_tile` (edge mode
+    keeps padded lanes numerically well-behaved). Returns (padded, orig_N)."""
+    N = x.shape[-1]
+    pad = (-N) % lane_tile
+    if pad == 0:
+        return x, N
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], mode="edge"), N
+
+
+def lanes_to_traj(us: Array, N: int) -> Array:
+    """(..., LANES_padded) lane-major solution block -> (N, ...) trajectory-major."""
+    return jnp.moveaxis(us, -1, 0)[:N]
+
+
+class KernelContext(NamedTuple):
+    """Static + grid information handed to the family loop body."""
+    tile: Array        # pl.program_id(0) — this grid cell's tile index
+    lane_tile: int     # B
+    n_state: int
+    n_param: int
+    n_save: int
+
+
+# extras are (kind, array) with kind:
+#   "broadcast" — (K,) array identical for every tile (e.g. the saveat grid)
+#   "lanes"     — (..., N) array tiled over the trajectory axis (noise tables)
+Extra = Tuple[str, Array]
+
+
+def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
+                        extras: Sequence[Extra] = (),
+                        lane_tile: Optional[int] = None,
+                        work_words: Optional[int] = None,
+                        vmem_budget: Optional[int] = None,
+                        interpret: Optional[bool] = None):
+    """Launch `body` over the ensemble and assemble an EnsembleResult.
+
+    u0s (N, n), ps (N, m) trajectory-major; ts (S,) save-time grid for the
+    result. All grid/BlockSpec plumbing, padding and stats assembly for every
+    method family happens here — once.
+    """
+    from repro.core.ensemble import EnsembleResult
+
+    N, n = u0s.shape
+    m = ps.shape[1]
+    S = int(ts.shape[0])
+    dtype = u0s.dtype
+    if lane_tile is None:
+        lane_tile = auto_lane_tile(n, m, S, itemsize=dtype.itemsize,
+                                   work_words=work_words,
+                                   vmem_budget=vmem_budget)
+        # no point padding a small ensemble up to the VMEM-optimal tile
+        lane_tile = min(lane_tile, -(-N // LANE_WIDTH) * LANE_WIDTH)
+    # clamp to the ensemble size so pallas and the XLA lanes path run the SAME
+    # vector width (bitwise-comparable trajectories, no wasted padded lanes)
+    B = int(min(lane_tile, N))
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    u0_l, _ = pad_lanes(u0s.T, B)
+    p_l, _ = pad_lanes(ps.T, B)
+    Np = u0_l.shape[-1]
+    T = Np // B
+
+    in_specs = [pl.BlockSpec((n, B), lambda i: (0, i)),
+                pl.BlockSpec((m, B), lambda i: (0, i))]
+    args = [u0_l, p_l]
+    unwrap = []  # how the kernel recovers each extra's natural shape
+    for kind, arr in extras:
+        if kind == "broadcast":
+            args.append(jnp.asarray(arr)[None, :])
+            K = args[-1].shape[1]
+            in_specs.append(pl.BlockSpec((1, K), lambda i: (0, 0)))
+            unwrap.append(lambda v: v[0])
+        elif kind == "lanes":
+            padded, _ = pad_lanes(jnp.asarray(arr), B)
+            args.append(padded)
+            blk = padded.shape[:-1] + (B,)
+            nd = padded.ndim
+            in_specs.append(pl.BlockSpec(
+                blk, lambda i, _nd=nd: (0,) * (_nd - 1) + (i,)))
+            unwrap.append(lambda v: v)
+        else:
+            raise ValueError(f"unknown extra kind {kind!r}")
+
+    out_shape = [
+        jax.ShapeDtypeStruct((S, n, Np), dtype),      # us
+        jax.ShapeDtypeStruct((n, Np), dtype),         # u_final
+        jax.ShapeDtypeStruct((1, Np), dtype),         # t_final
+        jax.ShapeDtypeStruct((4, Np), jnp.int32),     # naccept/nreject/status/nf
+    ]
+    out_specs = [
+        pl.BlockSpec((S, n, B), lambda i: (0, 0, i)),
+        pl.BlockSpec((n, B), lambda i: (0, i)),
+        pl.BlockSpec((1, B), lambda i: (0, i)),
+        pl.BlockSpec((4, B), lambda i: (0, i)),
+    ]
+
+    n_in = len(args)
+
+    def kernel(*refs):
+        u0 = refs[0][...]
+        p = refs[1][...]
+        ex = tuple(fn(r[...]) for fn, r in zip(unwrap, refs[2:n_in]))
+        us_ref, uf_ref, tfin_ref, stats_ref = refs[n_in:]
+        ctx = KernelContext(tile=pl.program_id(0), lane_tile=B, n_state=n,
+                            n_param=m, n_save=S)
+        us, uf, t_final, stats = body(ctx, u0, p, ex)
+        us_ref[...] = us                  # (S, n, B): one HBM flush
+        uf_ref[...] = uf
+        tfin_ref[...] = t_final[None]
+        stats_ref[...] = stats.astype(jnp.int32)
+
+    fn = pl.pallas_call(kernel, grid=(T,), in_specs=in_specs,
+                        out_specs=out_specs, out_shape=out_shape,
+                        interpret=interpret)
+    us, uf, t_fin, stats = fn(*args)
+    return EnsembleResult(
+        ts=jnp.asarray(ts, dtype), us=lanes_to_traj(us, N),
+        u_final=uf.T[:N], t_final=t_fin[0, :N],
+        naccept=stats[0, :N], nreject=stats[1, :N],
+        nf=jnp.sum(stats[3, :N]), status=jnp.max(stats[2, :N]))
+
+
+# ---------------------------------------------------------------------------
+# family loop bodies — each is the shared numerical engine in lanes mode,
+# specialized (closure/JIT) on the problem, exactly as the paper's kernel
+# generator compiles the problem definition into the device kernel.
+# ---------------------------------------------------------------------------
+
+def erk_body(f, tab, *, t0: float, tf: float, dt0: float, rtol: float,
+             atol: float, adaptive: bool, max_iters: int, event=None):
+    """Adaptive embedded-RK integration; extras[0] = saveat grid (S,)."""
+    from repro.core.solvers import AdaptiveOptions, solve_adaptive
+
+    def body(ctx, u0, p, extras):
+        saveat_v = extras[0]
+        opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
+                               adaptive=adaptive)
+        res = solve_adaptive(f, tab, u0, p, t0, tf, dt0, saveat=saveat_v,
+                             opts=opts, event=event, lanes=True)
+        if event is not None:
+            res, _ = res
+        stats = jnp.stack([res.naccept, res.nreject,
+                           res.status * jnp.ones_like(res.naccept), res.nf])
+        return res.us, res.u_final, res.t_final, stats
+
+    return body
+
+
+def rosenbrock_body(f, *, t0: float, tf: float, dt0: float, rtol: float,
+                    atol: float, max_iters: int):
+    """Rosenbrock23 stiff integration with the batched-LU W-solves *inlined*
+    (linsolve="lanes": paper §5.1.3 inside the fused kernel).
+    extras[0] = saveat grid (S,)."""
+    from repro.core.rosenbrock import solve_rosenbrock23
+
+    def body(ctx, u0, p, extras):
+        saveat_v = extras[0]
+        res = solve_rosenbrock23(f, u0, p, t0, tf, dt0, rtol=rtol, atol=atol,
+                                 saveat=saveat_v, max_iters=max_iters,
+                                 lanes=True, linsolve="lanes")
+        stats = jnp.stack([res.naccept, res.nreject, res.status, res.nf])
+        return res.us, res.u_final, res.t_final, stats
+
+    return body
+
+
+def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
+             n_steps: int, save_every: int, m_noise: int, seed: int,
+             use_table: bool, nf_per_step: int = 1):
+    """Fixed-dt SDE integration with in-kernel counter RNG (threefry keyed by
+    (seed; step, noise-row, global lane) — replayable, no noise storage), or a
+    pre-drawn table via extras[-1] ("lanes" kind, (n_steps, m, N))."""
+    from repro.core.sde import sde_step_and_save
+    from repro.kernels.rng import counter_normals_threefry
+
+    S = n_steps // save_every
+
+    def body(ctx, u0, p, extras):
+        B = ctx.lane_tile
+        dtype = u0.dtype
+        lane = (jnp.uint32(ctx.tile) * jnp.uint32(B)
+                + jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 1))
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 0)
+        table = extras[-1] if use_table else None
+
+        def noise_fn(k):
+            if use_table:
+                return jax.lax.dynamic_slice(
+                    table, (k, 0, 0), (1, m_noise, B))[0].astype(dtype)
+            return counter_normals_threefry(seed, k, lane, rows, dtype)
+
+        def step(k, carry):
+            u, us = carry
+            return sde_step_and_save(stepper, f, g, noise, u, us, p, t0, dt,
+                                     k, noise_fn(k), save_every)
+
+        us0 = jnp.zeros((S, ctx.n_state, B), dtype)
+        u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+        t_final = jnp.full((B,), t0 + n_steps * dt, dtype)
+        i32 = lambda v: jnp.full((B,), v, jnp.int32)
+        stats = jnp.stack([i32(n_steps), i32(0), i32(0),
+                           i32(n_steps * nf_per_step)])
+        return us, u_f, t_final, stats
+
+    return body

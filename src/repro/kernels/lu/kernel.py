@@ -16,27 +16,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def lu_solve_lanes(W, b):
+    """Pure lanes-mode LU solve: W (n, n, B), b (n, B) -> x (n, B).
+
+    Unrolled no-pivot Gaussian elimination; every scalar op is a (B,)-wide
+    vector op.  This is the kernel *body* — it runs both under `pallas_call`
+    (below) and inlined inside other fused kernels (the Rosenbrock ensemble
+    kernel calls it per step for the W = I - γh·J solves, paper §5.1.3).
+    """
+    n = W.shape[0]
+    rows = [W[i] for i in range(n)]   # each (n, B)
+    rhs = [b[i] for i in range(n)]    # each (B,)
+    # forward elimination (unrolled; every op is lane-vectorized)
+    for k in range(n):
+        inv = 1.0 / rows[k][k]
+        for i in range(k + 1, n):
+            m = rows[i][k] * inv
+            rows[i] = rows[i] - m * rows[k]
+            rhs[i] = rhs[i] - m * rhs[k]
+    # back substitution
+    xs = [None] * n
+    for i in reversed(range(n)):
+        acc = rhs[i]
+        for j in range(i + 1, n):
+            acc = acc - rows[i][j] * xs[j]
+        xs[i] = acc / rows[i][i]
+    return jnp.stack(xs)
+
+
 def build_lu_kernel(n: int):
     def kernel(W_ref, b_ref, x_ref):
-        W = W_ref[...]                 # (n, n, B)
-        b = b_ref[...]                 # (n, B)
-        rows = [W[i] for i in range(n)]   # each (n, B)
-        rhs = [b[i] for i in range(n)]    # each (B,)
-        # forward elimination (unrolled; every op is lane-vectorized)
-        for k in range(n):
-            inv = 1.0 / rows[k][k]
-            for i in range(k + 1, n):
-                m = rows[i][k] * inv
-                rows[i] = rows[i] - m * rows[k]
-                rhs[i] = rhs[i] - m * rhs[k]
-        # back substitution
-        xs = [None] * n
-        for i in reversed(range(n)):
-            acc = rhs[i]
-            for j in range(i + 1, n):
-                acc = acc - rows[i][j] * xs[j]
-            xs[i] = acc / rows[i][i]
-        x_ref[...] = jnp.stack(xs)
+        x_ref[...] = lu_solve_lanes(W_ref[...], b_ref[...])
 
     return kernel
 

@@ -1,115 +1,19 @@
-"""EnsembleGPUKernel for TPU: whole-ODE-integration Pallas kernel (paper §5.2).
+"""EnsembleGPUKernel for TPU: whole-ODE-integration kernel (paper §5.2).
 
-Mapping of the paper's CUDA design onto the TPU:
+This module used to own a bespoke `pallas_call` factory (`build_ode_kernel`:
+grid/BlockSpec plumbing, padding, stats assembly) specialized to explicit-RK
+tableaus.  All of that plumbing now lives exactly once in the generic factory
+`repro.kernels.ensemble_kernel`; the ERK loop body (`erk_body`) IS the shared
+lanes-mode solver engine (`repro.core.solvers.solve_adaptive(lanes=True)`),
+specialized (closure/JIT) on the user's RHS and tableau — the paper's
+"automated translation" of one problem definition into a device kernel.
 
-  CUDA thread <- 1 trajectory          =>  VREG lane <- 1 trajectory
-  grid of thread blocks                =>  pallas grid over lane tiles (LANES)
-  registers / stack-allocated arrays   =>  loop-carried VMEM values (never HBM)
-  whole `while t < tf` in one launch   =>  whole lax.while_loop in one grid cell
-  per-thread divergent adaptive dt     =>  per-lane dt + accept masks
-  coalesced writes of the solution     =>  (S, n, LANES) VMEM output block,
-                                           flushed once at kernel end
+TPU mapping (unchanged): VREG lane <- 1 trajectory; pallas grid over lane
+tiles; loop-carried VMEM state; whole `while t < tf` in one grid cell with
+per-lane dt/accept masks; (S, n, LANES) output block flushed once at the end.
 
-The kernel body *is* the shared lanes-mode solver engine
-(`repro.core.solvers.solve_adaptive(lanes=True)`): the paper's "automated
-translation" — the same user RHS and the same numerical engine are instantiated
-inside the device kernel, specialized (JIT) on the problem. BlockSpecs tile the
-trajectory axis; each tile's integration runs to completion independently
-(tile-local termination — no global synchronization, §5.1.4's drawback removed).
-
-VMEM budget per tile:  4B * LANES * (S*n [output] + ~3n [state+stages]
-+ m [params] + ~8 [control]) — e.g. S=100, n=3, m=3, LANES=256 ≈ 0.4 MB.
+See `ops.solve_ensemble_pallas` for the public entry point.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from repro.core.controller import PIController
-from repro.core.solvers import AdaptiveOptions, Event, solve_adaptive
-from repro.core.tableaus import Tableau
-
-
-def build_ode_kernel(f, tab: Tableau, *, n_state: int, n_param: int,
-                     t0: float, tf: float, dt0: float, saveat, rtol: float,
-                     atol: float, adaptive: bool, max_iters: int,
-                     event: Optional[Event] = None):
-    """Return the Pallas kernel body specialized on (f, tableau, constants).
-
-    Constants are baked into the kernel (closure specialization) exactly as the
-    paper's kernel generator compiles the problem definition into the kernel.
-    """
-    def kernel(u0_ref, p_ref, saveat_ref, us_ref, uf_ref, tfin_ref,
-               stats_ref):
-        u0 = u0_ref[...]                       # (n, LANES) VMEM block
-        p = p_ref[...]                         # (m, LANES)
-        dtype = u0.dtype
-        saveat_v = saveat_ref[0]               # (S,) broadcast to every tile
-        opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
-                               adaptive=adaptive)
-        res = solve_adaptive(f, tab, u0, p, t0, tf, dt0, saveat=saveat_v,
-                             opts=opts, event=event, lanes=True)
-        if event is not None:
-            res, _ = res
-        us_ref[...] = res.us                   # (S, n, LANES): one HBM flush
-        uf_ref[...] = res.u_final
-        tfin_ref[...] = res.t_final[None]
-        stats_ref[...] = jnp.stack([res.naccept, res.nreject,
-                                    res.status * jnp.ones_like(res.naccept),
-                                    res.nf])
-
-    return kernel
-
-
-def tsit5_pallas_call(f, tab: Tableau, u0_lanes, p_lanes, *, t0, tf, dt0,
-                      saveat, rtol=1e-6, atol=1e-6, adaptive=True,
-                      max_iters=100_000, lane_tile=128, event=None,
-                      interpret=None):
-    """pallas_call wrapper: grid over trajectory tiles with explicit BlockSpecs.
-
-    u0_lanes: (n, N), p_lanes: (m, N); N must be a multiple of lane_tile
-    (ops.py pads). Returns (us (S,n,N), uf (n,N), t_final (N,), stats (4,N)).
-    """
-    n, N = u0_lanes.shape
-    m = p_lanes.shape[0]
-    S = len(saveat)
-    assert N % lane_tile == 0, "pad N to a multiple of lane_tile"
-    T = N // lane_tile
-    B = lane_tile
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
-    dtype = u0_lanes.dtype
-
-    kernel = build_ode_kernel(
-        f, tab, n_state=n, n_param=m, t0=float(t0), tf=float(tf),
-        dt0=float(dt0), saveat=saveat, rtol=float(rtol), atol=float(atol),
-        adaptive=adaptive, max_iters=max_iters, event=event)
-
-    out_shape = [
-        jax.ShapeDtypeStruct((S, n, N), dtype),         # us
-        jax.ShapeDtypeStruct((n, N), dtype),            # u_final
-        jax.ShapeDtypeStruct((1, N), dtype),            # t_final
-        jax.ShapeDtypeStruct((4, N), jnp.int32),        # naccept/nreject/status/nf
-    ]
-    grid = (T,)
-    in_specs = [
-        pl.BlockSpec((n, B), lambda i: (0, i)),
-        pl.BlockSpec((m, B), lambda i: (0, i)),
-        pl.BlockSpec((1, S), lambda i: (0, 0)),   # saveat: same for all tiles
-    ]
-    out_specs = [
-        pl.BlockSpec((S, n, B), lambda i: (0, 0, i)),
-        pl.BlockSpec((n, B), lambda i: (0, i)),
-        pl.BlockSpec((1, B), lambda i: (0, i)),
-        pl.BlockSpec((4, B), lambda i: (0, i)),
-    ]
-    fn = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
-                        out_specs=out_specs, out_shape=out_shape,
-                        interpret=interpret)
-    saveat_arr = jnp.asarray(saveat, dtype)[None, :]
-    us, uf, t_fin, stats = fn(u0_lanes, p_lanes, saveat_arr)
-    return us, uf, t_fin[0], stats
+from repro.kernels.ensemble_kernel import erk_body, erk_work_words  # noqa: F401

@@ -1,38 +1,32 @@
-"""Jit'd public wrapper for the fused-integration Pallas kernel."""
+"""Public wrapper for the fused explicit-RK ensemble Pallas kernel.
+
+All padding / grid / stats plumbing lives in the generic factory
+(`repro.kernels.ensemble_kernel.run_ensemble_kernel`); this wrapper only
+instantiates the ERK loop body on the problem.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.ensemble import EnsembleResult
 from repro.core.tableaus import Tableau
-
-from .kernel import tsit5_pallas_call
-
-
-def _pad_lanes(x, B):
-    N = x.shape[-1]
-    pad = (-N) % B
-    if pad == 0:
-        return x, N
-    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], mode="edge"), N
+from repro.kernels.ensemble_kernel import (erk_body, erk_work_words,
+                                           run_ensemble_kernel)
 
 
 def solve_ensemble_pallas(prob, u0s, ps, tab: Tableau, t0, tf, dt0, saveat,
-                          rtol, atol, adaptive, lane_tile=128,
+                          rtol, atol, adaptive, lane_tile=None,
                           max_iters=100_000, event=None,
                           interpret=None) -> EnsembleResult:
     """EnsembleGPUKernel entry point (called via ensemble="kernel",
-    backend="pallas"). Pads the trajectory axis to the lane tile, launches the
-    grid, unpads, and returns the standard EnsembleResult."""
-    u0_l, N = _pad_lanes(u0s.T, lane_tile)
-    p_l, _ = _pad_lanes(ps.T, lane_tile)
-    us, uf, t_fin, stats = tsit5_pallas_call(
-        prob.f, tab, u0_l, p_l, t0=t0, tf=tf, dt0=dt0, saveat=saveat,
-        rtol=rtol, atol=atol, adaptive=adaptive, max_iters=max_iters,
-        lane_tile=lane_tile, event=event, interpret=interpret)
-    us = jnp.moveaxis(us, -1, 0)[:N]          # (N, S, n)
-    return EnsembleResult(
-        ts=jnp.asarray(saveat, u0s.dtype), us=us, u_final=uf.T[:N],
-        t_final=t_fin[:N], naccept=stats[0, :N], nreject=stats[1, :N],
-        nf=jnp.sum(stats[3, :N]), status=jnp.max(stats[2, :N]))
+    backend="pallas"). lane_tile=None derives the tile from the §5.2 VMEM
+    formula."""
+    saveat = jnp.asarray(saveat, u0s.dtype)
+    body = erk_body(prob.f, tab, t0=float(t0), tf=float(tf), dt0=float(dt0),
+                    rtol=float(rtol), atol=float(atol), adaptive=adaptive,
+                    max_iters=max_iters, event=event)
+    return run_ensemble_kernel(
+        body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
+        lane_tile=lane_tile,
+        work_words=erk_work_words(u0s.shape[1], ps.shape[1], tab.stages),
+        interpret=interpret)

@@ -1,6 +1,11 @@
 """PI controller + error-norm invariants (hypothesis property tests)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional property-test dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PIController, hairer_norm

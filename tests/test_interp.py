@@ -1,6 +1,11 @@
 """Texture-memory analogue (§6.7): uniform-grid interpolation, both TPU modes."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional property-test dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.interp import (UniformTable1D, UniformTable2D, interp1d,

@@ -1,0 +1,113 @@
+"""Method registry + unified front-door dispatch mechanics."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (EnsembleProblem, MethodSpec, get_method, get_tableau,
+                        list_methods, register_method, solve_ensemble_local)
+from repro.core.methods import _REGISTRY
+from repro.configs.de_problems import gbm_problem, lorenz_ensemble, sho_problem
+
+
+def test_builtin_families_registered():
+    fams = {s.family for s in list_methods()}
+    assert fams == {"erk", "rosenbrock", "sde"}
+    assert get_method("tsit5").family == "erk"
+    assert get_method("rosenbrock23").stiff
+    assert get_method("em").family == "sde"
+    assert not get_method("em").adaptive
+
+
+def test_aliases_resolve_to_same_spec():
+    assert get_method("siea") is get_method("platen_w2")
+    assert get_method("ode23s") is get_method("rosenbrock23")
+    assert get_method("gputsit5") is get_method("tsit5")
+
+
+def test_bare_tableau_wrapped_as_erk():
+    spec = get_method(get_tableau("dopri5"))
+    assert spec.family == "erk" and spec.tableau is get_tableau("dopri5")
+    # rk4 has no embedded error estimate => not adaptive
+    assert not get_method(get_tableau("rk4")).adaptive
+
+
+def test_unknown_method_raises_with_inventory():
+    with pytest.raises(KeyError, match="registered"):
+        get_method("nope5")
+
+
+def test_register_rejects_duplicates_and_bad_family():
+    with pytest.raises(ValueError, match="already registered"):
+        register_method(get_method("tsit5"))
+    with pytest.raises(ValueError, match="family"):
+        MethodSpec(name="x", family="dae", order=1)
+    # custom registration reaches the front door, then clean up
+    spec = register_method(MethodSpec(
+        name="my_dopri", family="erk", order=5,
+        tableau=get_tableau("dopri5")))
+    try:
+        ens = lorenz_ensemble(4, dtype=jnp.float64)
+        res = solve_ensemble_local(ens, alg="my_dopri", ensemble="vmap",
+                                   t0=0.0, tf=0.5, dt0=1e-3)
+        assert int(res.status) == 0
+    finally:
+        del _REGISTRY["my_dopri"]
+
+
+def test_sde_method_on_ode_problem_rejected():
+    ens = lorenz_ensemble(4, dtype=jnp.float64)
+    with pytest.raises(TypeError, match="SDE stepper"):
+        solve_ensemble_local(ens, alg="em")
+
+
+def test_ode_method_on_sde_problem_rejected():
+    ens = EnsembleProblem(gbm_problem(dtype=jnp.float64), 4)
+    with pytest.raises(TypeError, match="stochastic"):
+        solve_ensemble_local(ens, alg="tsit5")
+
+
+def test_noise_kind_capability_checked():
+    from repro.configs.de_problems import crn_problem
+    ens = EnsembleProblem(crn_problem(tspan=(0.0, 1.0), dtype=jnp.float64), 4)
+    with pytest.raises(ValueError, match="noise"):
+        solve_ensemble_local(ens, alg="platen_w2", dt0=0.1)  # diagonal-only
+
+
+def test_unsupported_strategy_raises_not_silently_ignores():
+    ens = lorenz_ensemble(4, dtype=jnp.float64)
+    with pytest.raises(NotImplementedError, match="rosenbrock"):
+        solve_ensemble_local(ens, alg="rosenbrock23", ensemble="array",
+                             t0=0.0, tf=0.5, dt0=1e-3)
+    sde_ens = EnsembleProblem(gbm_problem(dtype=jnp.float64), 4)
+    with pytest.raises(NotImplementedError, match="sde"):
+        solve_ensemble_local(sde_ens, alg="em", ensemble="array", dt0=0.1)
+    from repro.core.solvers import Event
+    ev = Event(condition=lambda u, p, t: u[0])
+    with pytest.raises(NotImplementedError, match="event"):
+        solve_ensemble_local(sde_ens, alg="em", dt0=0.1, event=ev)
+
+
+def test_auto_lane_tile_vmem_formula():
+    from repro.kernels.ensemble_kernel import (DEFAULT_VMEM_BUDGET,
+                                               auto_lane_tile,
+                                               rosenbrock_work_words)
+    # tiles are 128-multiples, shrink as per-lane state grows, stay in budget
+    small = auto_lane_tile(3, 3, 10, itemsize=4)
+    big_state = auto_lane_tile(64, 8, 500, itemsize=4)
+    assert small % 128 == 0 and big_state % 128 == 0
+    assert big_state < small
+    per_lane = 4 * (2 * 500 * 64 + 12 * 64 + 8 + 16)
+    assert big_state * per_lane <= DEFAULT_VMEM_BUDGET or big_state == 128
+    # rosenbrock carries an n x n Jacobian per lane => smaller tiles
+    rb = auto_lane_tile(64, 8, 500, itemsize=4,
+                        work_words=rosenbrock_work_words(64, 8))
+    assert rb <= big_state
+
+
+def test_auto_tile_pallas_path_runs_without_explicit_tile():
+    prob = sho_problem(dtype=jnp.float32)
+    ens = EnsembleProblem(prob, 5)
+    res = solve_ensemble_local(ens, alg="tsit5", ensemble="kernel",
+                               backend="pallas", t0=0.0, tf=1.0, dt0=1e-2,
+                               rtol=1e-5, atol=1e-5)
+    assert res.u_final.shape == (5, 2)
+    assert int(res.status) == 0

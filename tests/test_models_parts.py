@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional property-test dependency (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.ssm import ssd_chunked
