@@ -1,0 +1,94 @@
+"""Adaptive vs fixed-dt SDE stepping (this repo's beyond-paper feature).
+
+Measures the cost/benefit of embedded step-doubling control with
+virtual-Brownian-tree noise against the paper's fixed-dt kernels on the GBM
+ensemble: wall time, RHS-evaluation work (nf), and pathwise strong error
+against the closed-form GBM solution driven by the SAME Brownian path.
+
+Writes a machine-readable record to results/BENCH_adaptive_sde.json so CI
+and future PRs can diff the numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnsembleProblem, solve_ensemble_local
+from repro.configs.de_problems import gbm_problem
+from repro.core.sde import default_bridge_depth
+from repro.kernels.rng import brownian_bridge_point
+
+from .common import HEADER, bench, row
+
+R, V, N, SEED = 1.5, 0.2, 1024, 7
+
+
+def _exact_endpoint(depth, dtype):
+    n = 3
+    lanes = jnp.broadcast_to(jnp.arange(N, dtype=jnp.uint32)[None], (n, N))
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.uint32)[:, None], (n, N))
+    WT = brownian_bridge_point(SEED, jnp.full((n, N), 2 ** depth), lanes,
+                               rows, depth=depth, t_total=1.0, dtype=dtype)
+    return 0.1 * np.exp((R - 0.5 * V * V) + V * np.asarray(WT)).T  # (N, n)
+
+
+def main() -> None:
+    print(HEADER)
+    prob = gbm_problem(r=R, v=V, dtype=jnp.float32)
+    ep = EnsembleProblem(prob, N)
+    records = {}
+
+    def fixed(n_steps):
+        return solve_ensemble_local(ep, alg="em", ensemble="kernel",
+                                    backend="xla", t0=0.0, tf=1.0,
+                                    dt0=1.0 / n_steps, n_steps=n_steps,
+                                    save_every=n_steps, seed=SEED)
+
+    def adaptive(rtol):
+        return solve_ensemble_local(ep, alg="em", ensemble="kernel",
+                                    backend="xla", t0=0.0, tf=1.0, dt0=0.02,
+                                    adaptive=True, rtol=rtol, atol=rtol * 1e-2,
+                                    seed=SEED)
+
+    for n_steps in (200, 1000):
+        f = jax.jit(lambda ns=n_steps: fixed(ns).u_final)
+        t = bench(f)
+        print(row(f"adaptive_sde/fixed/n={n_steps}", t,
+                  f"nf={int(fixed(n_steps).nf)}"))
+        records[f"fixed_n{n_steps}"] = {
+            "seconds": t, "nf": int(fixed(n_steps).nf)}
+
+    depth = default_bridge_depth(0.0, 1.0, 0.02)
+    exact = _exact_endpoint(depth, jnp.float32)
+    for rtol in (1e-2, 1e-3, 1e-4):
+        f = jax.jit(lambda r=rtol: adaptive(r).u_final)
+        t = bench(f)
+        res = adaptive(rtol)
+        strong = float(np.sqrt(np.mean(
+            (np.asarray(res.u_final) - exact) ** 2)))
+        print(row(f"adaptive_sde/adaptive/rtol={rtol:g}", t,
+                  f"nf={int(res.nf)} strong_rmse={strong:.2e} "
+                  f"naccept_mean={float(np.mean(np.asarray(res.naccept))):.0f}"))
+        records[f"adaptive_rtol{rtol:g}"] = {
+            "seconds": t, "nf": int(res.nf), "strong_rmse": strong,
+            "naccept_mean": float(np.mean(np.asarray(res.naccept))),
+            "nreject_total": int(np.sum(np.asarray(res.nreject))),
+            "brownian_depth": depth}
+
+    os.makedirs("results", exist_ok=True)
+    out = os.path.join("results", "BENCH_adaptive_sde.json")
+    with open(out, "w") as fp:
+        json.dump({"N": N, "problem": "gbm(r=1.5,v=0.2)", "seed": SEED,
+                   "records": records}, fp, indent=2, sort_keys=True)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

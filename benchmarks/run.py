@@ -21,6 +21,7 @@ MODULES = [
     ("fig56", "benchmarks.bench_fig56_vs_vmap"),
     ("fig7", "benchmarks.bench_fig7_backends"),
     ("fig9", "benchmarks.bench_fig9_gbm"),
+    ("adaptive_sde", "benchmarks.bench_adaptive_sde"),
     ("fig11", "benchmarks.bench_fig11_crn"),
     ("texture", "benchmarks.bench_texture_interp"),
     ("mpi", "benchmarks.bench_mpi_scale"),

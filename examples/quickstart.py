@@ -82,3 +82,27 @@ res = solve_ensemble_local(sde_ens, alg="em", ensemble="kernel", dt0=1e-3,
                            save_every=1000, seed=7)
 print(f"em kernel: E[X(1)] = {float(res.u_final[:, 0].mean()):.4f} "
       f"(exact {0.1 * jnp.exp(1.5):.4f})")
+
+# --- SDE with events + adaptive dt (this PR's tentpole) --------------------
+# Barrier-hitting with per-trajectory adaptive steps: each path integrates
+# with its own embedded-error-controlled dt (rejection-safe virtual-Brownian-
+# tree noise, bitwise-identical on every strategy/backend) and terminates the
+# moment it crosses the barrier; t_final records the located hitting time.
+from repro.core import Event
+
+barrier = Event(condition=lambda u, p, t: u[0] - 0.25, terminal=True,
+                direction=1)
+gbm64 = SDEProblem(lambda u, p, t: p[0] * u, lambda u, p, t: p[1] * u,
+                   jnp.asarray([0.1] * 3, jnp.float64),
+                   jnp.asarray([1.5, 0.3], jnp.float64), (0.0, 1.0))
+hit_ens = EnsembleProblem(gbm64, 512)
+res = solve_ensemble_local(hit_ens, alg="em", ensemble="kernel",
+                           backend="xla", dt0=0.02, adaptive=True,
+                           rtol=1e-3, atol=1e-5, seed=7, event=barrier,
+                           saveat=jnp.linspace(0.1, 1.0, 10))
+hit = res.t_final < 1.0
+t_hit = jnp.where(hit, res.t_final, 0).sum() / jnp.maximum(hit.sum(), 1)
+print(f"\nadaptive em + barrier event: {int(hit.sum())}/512 paths hit X=0.25,"
+      f"\n  mean hitting time {float(t_hit):.3f},"
+      f"\n  per-path steps min/max = {int(res.naccept.min())}/{int(res.naccept.max())}"
+      f" (per-trajectory adaptive dt), rejects = {int(res.nreject.sum())}")

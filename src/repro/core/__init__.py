@@ -1,12 +1,14 @@
 # The paper's primary contribution — massively-parallel ensemble ODE/SDE
 # solving with two strategies (array lock-step vs fused whole-integration
-# kernel), adaptive embedded RK with dense output, events, SDE steppers,
-# sensitivity analysis and a distributed front door (api.solve_ensemble).
+# kernel), adaptive embedded RK with dense output, family-agnostic events,
+# fixed-dt AND adaptive SDE steppers, sensitivity analysis and a distributed
+# front door (api.solve_ensemble).  See docs/architecture.md for the map.
 from .problem import EnsembleProblem, ODEProblem, SDEProblem
 from .tableaus import TABLEAUS, get_tableau
 from .controller import PIController, hairer_norm, initial_dt
 from .methods import MethodSpec, get_method, list_methods, register_method
-from .solvers import (AdaptiveOptions, Event, SolveResult, interp_step,
+from .events import Event
+from .solvers import (AdaptiveOptions, SolveResult, interp_step,
                       rk_step, solve_adaptive, solve_fixed, solve_one)
 from .ensemble import EnsembleResult, solve_ensemble_local
 

@@ -40,8 +40,13 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     `solve_ensemble_local`. Trajectories are split over `shard_axes` (default:
     every ensemble-capable axis present — "pod" and "data"); each device runs
     the fused kernel path on its local chunk. N must divide by the total shard
-    count. (SDE counter-RNG lanes are local to each shard's chunk; use
-    distinct `seed`s per run, not per shard.)
+    count.
+
+    SDE counter-RNG streams are GLOBAL: each shard's `lane_offset` (its first
+    trajectory's global index) is threaded into the local solve, so shard k
+    draws the (seed; step, row, k*n_local + i) stream — sharded and local
+    solves produce bitwise-identical trajectories, and distinct shards never
+    replay each other's noise.
     """
     if mesh is None:
         return solve_ensemble_local(eprob, **kw)
@@ -54,12 +59,20 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     N = u0s.shape[0]
     assert N % nshards == 0, (
         f"trajectories {N} must divide over {nshards} shards")
+    n_local = N // nshards
     prob = eprob.prob
     spec = P(axes)
+    base_offset = kw.pop("lane_offset", 0)
 
     def local(u0c, pc):
+        # linear shard index in the same axis order the PartitionSpec uses,
+        # -> this shard's first global trajectory index
+        idx = jnp.asarray(0, jnp.uint32)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a).astype(jnp.uint32)
         sub = EnsembleProblem(prob, u0c.shape[0], u0s=u0c, ps=pc)
-        res = solve_ensemble_local(sub, **kw)
+        res = solve_ensemble_local(sub, lane_offset=base_offset + idx * n_local,
+                                   **kw)
         # per-shard scalars -> global via psum (lightweight stats only)
         nf = res.nf
         for a in axes:

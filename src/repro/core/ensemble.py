@@ -27,17 +27,22 @@ Strategies (``ensemble=``):
                                    state; the deployment path. lane_tile=None
                                    derives the tile from the §5.2 VMEM formula.
 
-Method families (``alg=`` resolves via the registry):
+Method families (``alg=`` resolves via the registry; full matrix in
+docs/architecture.md):
 
   erk         — all strategies/backends; adaptive or fixed dt; events.
-  rosenbrock  — "vmap" and "kernel" (xla/pallas); the W = I - γh·J solves
-                (paper §5.1.3) run batched per lane, inlined inside the Pallas
-                kernel. No events yet.
-  sde         — "vmap" and "kernel" (xla/pallas); fixed-dt counter-RNG
-                steppers (§5.2.2). Pass `seed=` (or `key=`) — the SAME
-                (seed; step, row, lane) Threefry stream is replayed on every
-                strategy/backend, so paths agree bitwise across dispatch
-                targets; or inject `noise_table=` (n_steps, m, N).
+  rosenbrock  — "vmap", "array" (one lanes tile) and "kernel" (xla/pallas);
+                the W = I - γh·J solves (paper §5.1.3) run batched per lane,
+                inlined inside the Pallas kernel; events on every path.
+  sde         — "vmap", "array" and "kernel" (xla/pallas); fixed-dt
+                counter-RNG steppers (§5.2.2) or, with adaptive=True,
+                embedded step-doubling control driven by a virtual Brownian
+                tree (rejection-safe noise). Pass `seed=` (or `key=`) — the
+                SAME (seed; step, row, GLOBAL lane) Threefry stream is
+                replayed on every strategy/backend, so paths agree bitwise
+                across dispatch targets (and across mesh shards via
+                `lane_offset`); or inject `noise_table=` (n_steps, m, N).
+                Events run with per-lane termination on every path.
 
 Distribution over a mesh (the paper's MPI composition, §6.3) lives in
 `repro.core.api.solve_ensemble` via shard_map over the trajectory axis.
@@ -269,6 +274,8 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
                dt0, saveat, rtol, atol, adaptive, n_steps, save_every,
                lane_tile, max_iters, event):
     tab = spec.tableau
+    if adaptive is None:
+        adaptive = True   # family default: embedded-error stepping
     if not spec.adaptive:
         adaptive = False  # e.g. rk4: no embedded error estimate
     explicit_saveat = saveat is not None
@@ -326,9 +333,6 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                       linsolve, event):
     from .rosenbrock import solve_rosenbrock23
 
-    if event is not None:
-        raise NotImplementedError(
-            "events are not supported for rosenbrock methods yet")
     if saveat is None:
         saveat = jnp.asarray([tf], u0s.dtype)
     saveat = jnp.asarray(saveat, u0s.dtype)
@@ -338,100 +342,204 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
         def one(u0, p):
             return solve_rosenbrock23(prob.f, u0, p, t0, tf, dt0, rtol=rtol,
                                       atol=atol, saveat=saveat,
-                                      max_iters=max_iters)
+                                      max_iters=max_iters, event=event)
 
         res = jax.vmap(one)(u0s, ps)
+        if event is not None:
+            res, _ = res
         return EnsembleResult(ts=saveat, us=res.us, u_final=res.u_final,
                               t_final=res.t_final, naccept=res.naccept,
                               nreject=res.nreject, nf=jnp.sum(res.nf),
                               status=jnp.max(res.status))
 
-    if ensemble == "kernel":
-        if backend == "pallas":
+    if ensemble in ("array", "kernel"):
+        if ensemble == "kernel" and backend == "pallas":
             from repro.kernels.ensemble_kernel import (rosenbrock_body,
                                                        rosenbrock_work_words,
                                                        run_ensemble_kernel)
             body = rosenbrock_body(prob.f, t0=float(t0), tf=float(tf),
                                    dt0=float(dt0), rtol=float(rtol),
-                                   atol=float(atol), max_iters=max_iters)
+                                   atol=float(atol), max_iters=max_iters,
+                                   event=event)
             return run_ensemble_kernel(
                 body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
                 lane_tile=lane_tile,
                 work_words=rosenbrock_work_words(n, ps.shape[1]))
 
-        u0p, psp, T, B = _tile_lanes(u0s, ps, lane_tile or XLA_LANE_TILE)
+        # "array": whole ensemble as ONE lanes tile. A lock-step scalar-dt
+        # Rosenbrock would need an (N·n)-sized Jacobian per global step, so
+        # the array strategy keeps the one-state-matrix memory layout but
+        # per-lane step control — preserving the cross-strategy trajectory
+        # parity contract (identical per-trajectory dt sequences).
+        tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
+        u0p, psp, T, B = _tile_lanes(u0s, ps, tile_n)
 
         def tile(args):
             u0t, pt = args
-            return solve_rosenbrock23(prob.f, u0t.T, pt.T, t0, tf, dt0,
-                                      rtol=rtol, atol=atol, saveat=saveat,
-                                      max_iters=max_iters, lanes=True,
-                                      linsolve=linsolve, lane_tile=B)
+            res = solve_rosenbrock23(prob.f, u0t.T, pt.T, t0, tf, dt0,
+                                     rtol=rtol, atol=atol, saveat=saveat,
+                                     max_iters=max_iters, lanes=True,
+                                     linsolve=linsolve, lane_tile=B,
+                                     event=event)
+            if event is not None:
+                res, _ = res
+            return res
 
         return _untile(jax.lax.map(tile, (u0p, psp)), N, n)
 
     raise NotImplementedError(
         f"rosenbrock methods do not support ensemble={ensemble!r} "
-        "(use 'vmap' or 'kernel')")
+        "(use 'vmap', 'array' or 'kernel')")
 
 
 # ----------------------------------------------------------------------------
 # family dispatch: sde (fixed-dt counter-RNG steppers, paper §5.2.2)
 # ----------------------------------------------------------------------------
 
+def _concrete_seed(seed):
+    try:
+        return int(seed)
+    except (TypeError, jax.errors.TracerIntegerConversionError,
+            jax.errors.ConcretizationTypeError):
+        raise ValueError(
+            "backend='pallas' specializes the RNG seed into the kernel; "
+            "pass a concrete `seed=` (python int) outside of jit")
+
+
 def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                backend, t0, tf, dt0, saveat, n_steps, save_every, lane_tile,
-               key, seed, noise_table, event):
-    from .sde import (SDE_STEPPERS, sde_nf_per_step, sde_save_grid,
-                      sde_step_and_save)
+               key, seed, noise_table, event, adaptive, rtol, atol, max_iters,
+               lane_offset, brownian_depth):
+    from .sde import (SDE_STEPPERS, default_bridge_depth, sde_event_state0,
+                      sde_nf_per_step, sde_save_grid, sde_solve_adaptive,
+                      sde_step_and_save, sde_step_save_event)
 
-    if event is not None:
-        raise NotImplementedError("events are not supported for SDE methods")
-    if saveat is not None:
-        raise NotImplementedError(
-            "SDE methods are fixed-dt: snapshots land on the save_every grid; "
-            "pass n_steps/save_every instead of saveat")
     if prob.noise not in spec.noise:
         raise ValueError(
             f"method {spec.name!r} supports noise {spec.noise}, "
             f"problem has {prob.noise!r}")
-    if n_steps is None:
-        n_steps = int(round((tf - t0) / dt0))
-    assert n_steps % save_every == 0
+    if adaptive is None:
+        adaptive = False  # family default: the paper's kernels are fixed-dt
+    if adaptive and not spec.adaptive:
+        raise ValueError(
+            f"method {spec.name!r} has no adaptive step control; "
+            "pass adaptive=False or pick an adaptive-capable stepper")
     if seed is None:
         # keep the seed traceable (jit-able) on the XLA paths; the Pallas
         # kernel bakes it into the kernel closure and concretizes below
         seed = jnp.asarray(key)[-1] if key is not None else 0
     N, n = u0s.shape
     m = prob.noise_dim()
+    stepper = SDE_STEPPERS[spec.name]
+    nf_per_step = sde_nf_per_step(spec.name)
+
+    # ---- adaptive: embedded step-doubling error + virtual Brownian tree ----
+    if adaptive:
+        if noise_table is not None:
+            raise NotImplementedError(
+                "adaptive SDE draws from the virtual Brownian tree; "
+                "noise_table injection is fixed-dt only")
+        depth = (brownian_depth if brownian_depth is not None
+                 else default_bridge_depth(t0, tf, dt0))
+        if saveat is None:
+            saveat = [tf]
+        saveat = jnp.asarray(saveat, u0s.dtype)
+        kw = dict(seed=seed, m_noise=m, saveat=saveat, rtol=rtol, atol=atol,
+                  max_iters=max_iters, event=event, depth=depth,
+                  order=spec.order, nf_per_step=nf_per_step)
+
+        if ensemble == "vmap":
+            def one(u0, p, lane):
+                res = sde_solve_adaptive(prob.f, prob.g, stepper, prob.noise,
+                                         u0, p, t0, tf, dt0, lane_idx=lane,
+                                         lanes=False, **kw)
+                if event is not None:
+                    res, _ = res
+                return res
+
+            lanes_ix = (jnp.arange(N, dtype=jnp.uint32)
+                        + jnp.asarray(lane_offset, jnp.uint32))
+            res = jax.vmap(one)(u0s, ps, lanes_ix)
+            return EnsembleResult(ts=saveat, us=res.us, u_final=res.u_final,
+                                  t_final=res.t_final, naccept=res.naccept,
+                                  nreject=res.nreject, nf=jnp.sum(res.nf),
+                                  status=jnp.max(res.status))
+
+        if ensemble == "kernel" and backend == "pallas":
+            from repro.kernels.ensemble_kernel import (run_ensemble_kernel,
+                                                       sde_adaptive_body,
+                                                       sde_work_words)
+            body = sde_adaptive_body(
+                prob.f, prob.g, stepper, prob.noise, t0=float(t0),
+                tf=float(tf), dt0=float(dt0), rtol=float(rtol),
+                atol=float(atol), max_iters=max_iters, m_noise=m,
+                seed=_concrete_seed(seed), depth=depth, order=spec.order,
+                nf_per_step=nf_per_step, event=event)
+            off = jnp.asarray([lane_offset], jnp.uint32)
+            return run_ensemble_kernel(
+                body, u0s, ps, ts=saveat,
+                extras=[("broadcast", saveat), ("broadcast", off)],
+                lane_tile=lane_tile,
+                work_words=2 * sde_work_words(n, ps.shape[1], m) + 8 * m)
+
+        if ensemble in ("array", "kernel"):
+            # "array": the whole ensemble as ONE lanes tile (one state
+            # matrix); per-lane step control is kept so trajectories agree
+            # bitwise with the vmap/kernel strategies.
+            tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
+            u0p, psp, T, B = _tile_lanes(u0s, ps, tile_n)
+            lanes_all = ((jnp.arange(T * B, dtype=jnp.uint32)
+                          + jnp.asarray(lane_offset, jnp.uint32))
+                         .reshape(T, B))
+
+            def tile(args):
+                u0t, pt, lt = args
+                res = sde_solve_adaptive(prob.f, prob.g, stepper, prob.noise,
+                                         u0t.T, pt.T, t0, tf, dt0, lane_idx=lt,
+                                         lanes=True, **kw)
+                if event is not None:
+                    res, _ = res
+                return res
+
+            return _untile(jax.lax.map(tile, (u0p, psp, lanes_all)), N, n)
+
+        raise NotImplementedError(
+            f"sde methods do not support ensemble={ensemble!r} "
+            "(use 'vmap', 'array' or 'kernel')")
+
+    # ---- fixed-dt: the paper's counter-RNG kernels -------------------------
+    if saveat is not None:
+        raise NotImplementedError(
+            "fixed-dt SDE snapshots land on the save_every grid (pass "
+            "n_steps/save_every); use adaptive=True for saveat-grid output")
+    if n_steps is None:
+        n_steps = int(round((tf - t0) / dt0))
+    assert n_steps % save_every == 0
 
     if ensemble == "kernel" and backend == "pallas":
         from repro.kernels.em.ops import solve_sde_ensemble_kernel
-        try:
-            seed_c = int(seed)
-        except (TypeError, jax.errors.TracerIntegerConversionError,
-                jax.errors.ConcretizationTypeError):
-            raise ValueError(
-                "backend='pallas' specializes the RNG seed into the kernel; "
-                "pass a concrete `seed=` (python int) outside of jit")
         return solve_sde_ensemble_kernel(
             prob, u0s, ps, t0=t0, dt=dt0, n_steps=n_steps, method=spec.name,
-            save_every=save_every, lane_tile=lane_tile, seed=seed_c,
-            noise_table=noise_table)
+            save_every=save_every, lane_tile=lane_tile,
+            seed=_concrete_seed(seed), noise_table=noise_table, event=event,
+            lane_offset=lane_offset)
 
-    stepper = SDE_STEPPERS[spec.name]
-    nf_per_step = sde_nf_per_step(spec.name)
     ts = sde_save_grid(t0, dt0, n_steps, save_every, u0s.dtype)
 
-    if ensemble == "kernel":
+    if ensemble in ("array", "kernel"):
         # XLA lanes path replaying the kernel's exact Threefry counter stream
         # (global lane indices) — the Pallas oracle, bitwise on every backend.
+        # "array" is the same lock-step state matrix over the WHOLE ensemble
+        # (for fixed dt the §5.1 array semantics and per-lane stepping agree).
         from repro.kernels.em.ref import ref_solve
-        us, uf = ref_solve(prob, u0s, ps, t0=t0, dt=dt0, n_steps=n_steps,
-                           method=spec.name, save_every=save_every, seed=seed,
-                           noise_table=noise_table)
+        us, uf, estate = ref_solve(prob, u0s, ps, t0=t0, dt=dt0,
+                                   n_steps=n_steps, method=spec.name,
+                                   save_every=save_every, seed=seed,
+                                   noise_table=noise_table, event=event,
+                                   lane_offset=lane_offset)
         return _assemble_sde_result(ts, jnp.moveaxis(us, -1, 0), uf.T, N,
-                                    n_steps, nf_per_step, t0, dt0, u0s.dtype)
+                                    n_steps, nf_per_step, t0, dt0, u0s.dtype,
+                                    estate)
 
     if ensemble == "vmap":
         from repro.kernels.rng import counter_normals_threefry
@@ -441,40 +549,59 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
             rows = jnp.arange(m, dtype=jnp.uint32)
             S = n_steps // save_every
 
-            def step(k, carry):
-                u, us = carry
+            def noise_fn(k, udtype):
                 if noise_table is not None:
-                    z = jax.lax.dynamic_slice(table_col, (k, 0), (1, m))[0]
-                    z = z.astype(u.dtype)
-                else:
-                    z = counter_normals_threefry(seed, k, lane_v, rows,
-                                                 u.dtype)
-                return sde_step_and_save(stepper, prob.f, prob.g, prob.noise,
-                                         u, us, p, t0, dt0, k, z, save_every)
+                    return jax.lax.dynamic_slice(
+                        table_col, (k, 0), (1, m))[0].astype(udtype)
+                return counter_normals_threefry(seed, k, lane_v, rows, udtype)
 
             us0 = jnp.zeros((S, n), u0.dtype)
-            return jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+            if event is None:
+                def step(k, carry):
+                    u, us = carry
+                    return sde_step_and_save(
+                        stepper, prob.f, prob.g, prob.noise, u, us, p, t0,
+                        dt0, k, noise_fn(k, u.dtype), save_every)
 
-        lanes = jnp.arange(N, dtype=jnp.uint32)
+                return jax.lax.fori_loop(0, n_steps, step, (u0, us0)) + (None,)
+
+            def step(k, carry):
+                u, us, estate = carry
+                return sde_step_save_event(
+                    stepper, prob.f, prob.g, prob.noise, event, u, us, estate,
+                    p, t0, dt0, k, noise_fn(k, u.dtype), save_every)
+
+            estate0 = sde_event_state0((), t0, u0.dtype)
+            return jax.lax.fori_loop(0, n_steps, step, (u0, us0, estate0))
+
+        lanes = (jnp.arange(N, dtype=jnp.uint32)
+                 + jnp.asarray(lane_offset, jnp.uint32))
         if noise_table is not None:
             table_cols = jnp.moveaxis(noise_table, -1, 0)    # (N, steps, m)
-            uf, us = jax.vmap(one)(u0s, ps, lanes, table_cols)
+            uf, us, estate = jax.vmap(one)(u0s, ps, lanes, table_cols)
         else:
-            uf, us = jax.vmap(partial(one, table_col=None))(u0s, ps, lanes)
+            uf, us, estate = jax.vmap(
+                partial(one, table_col=None))(u0s, ps, lanes)
         return _assemble_sde_result(ts, us, uf, N, n_steps, nf_per_step,
-                                    t0, dt0, u0s.dtype)
+                                    t0, dt0, u0s.dtype, estate)
 
     raise NotImplementedError(
         f"sde methods do not support ensemble={ensemble!r} "
-        "(use 'vmap' or 'kernel')")
+        "(use 'vmap', 'array' or 'kernel')")
 
 
 def _assemble_sde_result(ts, us, uf, N, n_steps, nf_per_step, t0, dt,
-                         dtype) -> EnsembleResult:
+                         dtype, estate=None) -> EnsembleResult:
+    if estate is None:
+        t_final = jnp.full((N,), t0 + n_steps * dt, dtype)
+        naccept = jnp.full((N,), n_steps, jnp.int32)
+    else:
+        # terminal events freeze lanes early: report the true per-lane step
+        # count and the located event time, not the nominal grid end
+        t_final = jnp.broadcast_to(estate["t_out"], (N,)).astype(dtype)
+        naccept = jnp.broadcast_to(estate["naccept"], (N,))
     return EnsembleResult(
-        ts=ts, us=us, u_final=uf,
-        t_final=jnp.full((N,), t0 + n_steps * dt, dtype),
-        naccept=jnp.full((N,), n_steps, jnp.int32),
+        ts=ts, us=us, u_final=uf, t_final=t_final, naccept=naccept,
         nreject=jnp.zeros((N,), jnp.int32),
         nf=jnp.asarray(n_steps * nf_per_step * N),
         status=jnp.asarray(0, jnp.int32))
@@ -487,18 +614,67 @@ def _assemble_sde_result(ts, us, uf, N, n_steps, nf_per_step, t0, dt,
 def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                          ensemble: str = "kernel", backend: str = "xla",
                          t0=None, tf=None, dt0=1e-2, saveat=None,
-                         rtol=1e-6, atol=1e-6, adaptive=True,
+                         rtol=1e-6, atol=1e-6, adaptive=None,
                          n_steps=None, save_every=1, lane_tile=None,
                          max_iters=100_000, event=None, key=None, seed=None,
-                         noise_table=None, linsolve="jnp") -> EnsembleResult:
+                         noise_table=None, linsolve="jnp", lane_offset=0,
+                         brownian_depth=None) -> EnsembleResult:
     """Single-device ensemble solve — ANY registered method through ANY
-    strategy/backend. See the module docstring for the matrix; `alg` may be a
-    registry name, a MethodSpec, or a bare Tableau."""
+    strategy and backend (the unified front door; see docs/architecture.md).
+
+    Args:
+      eprob: `EnsembleProblem` wrapping an ODEProblem or SDEProblem with the
+        per-trajectory (u0s, ps) variations materialized.
+      alg: a registry name (``"tsit5"``, ``"rosenbrock23"``, ``"em"``, ...),
+        a `MethodSpec`, or a bare `Tableau` (auto-wrapped as an erk method).
+      ensemble: execution strategy — ``"vmap"`` (per-trajectory baseline),
+        ``"array"`` (one ensemble state matrix, paper §5.1),
+        ``"array_eager"`` (un-jitted dispatch-overhead reproduction, erk
+        only) or ``"kernel"`` (fused whole-integration tiles, paper §5.2).
+      backend: ``"xla"`` (fused lax loops) or ``"pallas"`` (the generic
+        ensemble Pallas kernel) — kernel strategy only.
+      t0, tf, dt0: time span (defaults from ``prob.tspan``) and initial step.
+      saveat: snapshot time grid (S,). Adaptive paths interpolate dense
+        output onto it; fixed-dt SDE uses ``n_steps``/``save_every`` instead.
+      rtol, atol: adaptive error-control tolerances.
+      adaptive: None picks the family default (erk/rosenbrock: embedded
+        adaptive stepping; sde: the paper's fixed-dt kernels).  Explicit
+        ``True`` on an SDE method enables embedded step-doubling control with
+        rejection-safe virtual-Brownian-tree noise; explicit ``False`` forces
+        fixed-dt stepping.
+      n_steps, save_every: fixed-dt step count and snapshot stride.
+      lane_tile: trajectories per fused tile (kernel strategy).  None derives
+        the Pallas tile from the §5.2 VMEM formula (see docs/kernels.md).
+      max_iters: adaptive-loop iteration cap (status=1 when exhausted).
+      event: `repro.core.events.Event` — zero-crossing detection, bisection
+        refinement and per-lane termination on EVERY family/strategy/backend.
+      key, seed: SDE noise stream key — the same (seed; step, row, lane)
+        Threefry stream is replayed on every strategy/backend, so SDE paths
+        agree bitwise across dispatch targets.
+      noise_table: optional pre-drawn (n_steps, m, N) N(0,1) table (fixed-dt
+        SDE only), bypassing the counter RNG.
+      linsolve: Rosenbrock W-solve mode ("jnp" | "pallas" | "lanes").
+      lane_offset: GLOBAL index of this shard's first trajectory — keeps
+        counter-RNG streams disjoint when `repro.core.api.solve_ensemble`
+        splits an SDE ensemble over a mesh.  Local solves leave it 0.
+      brownian_depth: dyadic resolution of the adaptive-SDE Brownian tree
+        (default: `repro.core.sde.default_bridge_depth`).
+
+    Returns:
+      `EnsembleResult` with trajectory-major ``us (N, S, n)``, per-trajectory
+      final states/times and step statistics.  Terminal events record the
+      located event time in ``t_final``.
+    """
     spec = get_method(alg)
     prob = eprob.prob
     u0s, ps = eprob.materialize()
     t0 = prob.tspan[0] if t0 is None else t0
     tf = prob.tspan[1] if tf is None else tf
+
+    if event is not None and not spec.events:
+        raise ValueError(
+            f"method {spec.name!r} declares events=False; pick a method whose "
+            "MethodSpec supports event handling")
 
     if spec.family == "sde":
         if not isinstance(prob, SDEProblem):
@@ -509,7 +685,10 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                           backend=backend, t0=t0, tf=tf, dt0=dt0,
                           saveat=saveat, n_steps=n_steps,
                           save_every=save_every, lane_tile=lane_tile, key=key,
-                          seed=seed, noise_table=noise_table, event=event)
+                          seed=seed, noise_table=noise_table, event=event,
+                          adaptive=adaptive, rtol=rtol, atol=atol,
+                          max_iters=max_iters, lane_offset=lane_offset,
+                          brownian_depth=brownian_depth)
 
     if isinstance(prob, SDEProblem):
         raise TypeError(

@@ -1,0 +1,162 @@
+"""Family-agnostic event handling (paper §6.6) — shared by every solver family.
+
+The paper's feature matrix claims event handling on every backend.  PR 1 only
+wired events through the explicit-RK engine; this module is the extraction
+that makes events a *capability of the dispatch layer* instead of an ERK
+special: detection (sign change of the condition over an accepted step),
+refinement (bisection on a dense-output closure), and application (affect +
+per-lane termination masks) are written once, against an abstract interpolant,
+and reused by
+
+  * `repro.core.solvers.solve_adaptive`      (ERK: tableau dense output),
+  * `repro.core.rosenbrock.solve_rosenbrock23` (Hermite-cubic dense output),
+  * `repro.core.sde.sde_solve_adaptive` and the fixed-dt SDE loop body
+    (piecewise-linear dense output — the standard strong-order-consistent
+    output for SDE paths).
+
+Everything is shape-polymorphic over the control shape: scalar control for
+per-trajectory solves, `(B,)` per-lane masks for the fused-kernel paths — the
+same polymorphism contract as the step controllers, so any future family gets
+events for free by providing a `theta -> state` closure.
+
+The condition g(u, p, t) must return one value per control element (scalar in
+scalar mode, `(B,)` in lanes mode); a zero crossing of g triggers the event.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+class Event(NamedTuple):
+    """condition g(u,p,t) crossing zero triggers affect h (paper §6.6).
+
+    direction: -1 (+ -> -), +1 (- -> +), 0 (any crossing).
+    terminal:  stop integration (the lane) at the event.
+    affect:    (u, p, t) -> u_new  applied at the event point.
+    bisect_iters: bisection refinement steps for the event time.
+
+    Example — the paper's bouncing ball (Fig. 8): bounce when the height
+    u[0] crosses zero downwards, flipping the velocity::
+
+        Event(condition=lambda u, p, t: u[0],
+              affect=lambda u, p, t: jnp.stack([u[0] * 0, -p[1] * u[1]]),
+              direction=-1)
+    """
+    condition: Callable[[Array, Array, Array], Array]
+    affect: Optional[Callable[[Array, Array, Array], Array]] = None
+    terminal: bool = False
+    direction: int = 0
+    bisect_iters: int = 30
+
+
+def event_crossing(ev: Event, g_old: Array, g_new: Array) -> Array:
+    """Directional sign-change mask for g over one step (per control element)."""
+    sgn_change = jnp.sign(g_old) * jnp.sign(g_new) < 0
+    if ev.direction == -1:
+        sgn_change &= g_new < g_old
+    elif ev.direction == 1:
+        sgn_change &= g_new > g_old
+    return sgn_change
+
+
+def bisect_event(ev: Event, interp_fn: Callable[[Array], Array], p, t_old,
+                 dt_step, g_old):
+    """Bisection for g=0 inside an accepted step using a dense-output closure.
+
+    interp_fn(theta) must return the interpolated state at t_old +
+    theta*dt_step, with theta shaped like g_old (one value per control
+    element).  Returns (theta_star, u_star); only meaningful where the
+    caller's `hit` mask is true.
+    """
+    lo = jnp.zeros_like(g_old)
+    hi = jnp.ones_like(g_old)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        g_mid = ev.condition(interp_fn(mid), p, t_old + mid * dt_step)
+        # root in [lo, mid] iff sign change between g_old and g_mid
+        left = jnp.sign(g_old) * jnp.sign(g_mid) <= 0
+        lo = jnp.where(left, lo, mid)
+        hi = jnp.where(left, mid, hi)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, ev.bisect_iters, body, (lo, hi))
+    theta = hi  # first point past the root: g has crossed
+    return theta, interp_fn(theta)
+
+
+def handle_event(ev: Event, interp_fn: Callable[[Array], Array], u_old, u_cand,
+                 p, t_old, dt_step, t_new, accept, event_t, event_count, *,
+                 lanes: bool = False):
+    """Detect, locate, and apply `ev` over one accepted step — all families.
+
+    interp_fn(theta) -> state at t_old + theta*dt_step (dense output closure;
+    theta is control-shaped: scalar or (B,)).  accept is the step's acceptance
+    mask; event_t/event_count are the running per-control-element logs.
+
+    Returns (u_next, t_next, event_t, event_count, term) where `term` is the
+    per-control-element termination mask (true only for terminal hits) the
+    caller ORs into its `done` mask.
+    """
+    dtype = jnp.result_type(dt_step)
+    g_old = ev.condition(u_old, p, t_old)
+    g_new = ev.condition(u_cand, p, t_new)
+    # an affect applied exactly at a root leaves g_old == 0 and would mask
+    # every later crossing; re-anchor the sign just inside the step
+    # (theta = 1e-4) in that case.
+    theta_eps = (jnp.full_like(g_old, 1e-4) if lanes
+                 else jnp.asarray(1e-4, dtype))
+    g_eps = ev.condition(interp_fn(theta_eps), p, t_old + 1e-4 * dt_step)
+    g_old = jnp.where(g_old == 0, g_eps, g_old)
+    hit = event_crossing(ev, g_old, g_new) & accept
+    theta_star, u_star = bisect_event(ev, interp_fn, p, t_old, dt_step, g_old)
+    t_star = t_old + theta_star * dt_step
+    if ev.affect is not None:
+        u_aff = ev.affect(u_star, p, t_star)
+    else:
+        u_aff = u_star
+    hit_e = hit[None] if lanes else hit
+    u_next = jnp.where(hit_e, u_aff, u_cand)
+    t_next = jnp.where(hit, t_star, t_new)
+    ev_t = jnp.where(hit, t_star, event_t)
+    ev_n = event_count + hit.astype(jnp.int32)
+    term = hit if ev.terminal else jnp.zeros_like(hit)
+    return u_next, t_next, ev_t, ev_n, term
+
+
+# ---------------------------------------------------------------------------
+# dense-output closures for families without a tableau interpolant
+# ---------------------------------------------------------------------------
+
+def hermite_interp(u_old, f_old, u_new, f_new, dt, theta, lanes: bool = False):
+    """Cubic Hermite dense output on one step — u(t_old + theta*dt).
+
+    The interpolant used by the Rosenbrock family (paper §5.1.3 methods carry
+    the step-endpoint derivatives F0, F2 anyway).  theta control-shaped:
+    scalar, or (B,) against u (n, B) in lanes mode.
+    """
+    if lanes:
+        th = theta[None]
+        dtb = dt[None]
+    else:
+        th = theta
+        dtb = dt
+    h00 = (1 + 2 * th) * (1 - th) ** 2
+    h10 = th * (1 - th) ** 2
+    h01 = th ** 2 * (3 - 2 * th)
+    h11 = th ** 2 * (th - 1)
+    return (h00 * u_old + h10 * dtb * f_old + h01 * u_new + h11 * dtb * f_new)
+
+
+def linear_interp(u_old, u_new, theta, lanes: bool = False):
+    """Piecewise-linear dense output — the standard SDE path output (linear
+    interpolation is strong-order-1/2 consistent; higher-order interpolants
+    would claim accuracy the Brownian path does not have)."""
+    th = theta[None] if lanes else theta
+    return u_old + th * (u_new - u_old)

@@ -37,11 +37,29 @@ class MethodSpec:
     family:    one of FAMILIES.
     tableau:   Butcher tableau (erk only).
     stepper:   stepper fn `(f, g, u, p, t, dt, dW, noise) -> u_new` (sde only).
-    order:     order of the propagated solution.
-    adaptive:  the method supports embedded-error adaptive stepping.
+    order:     order of the propagated solution (strong order for sde).
+    adaptive:  the method supports adaptive stepping — an embedded error pair
+               (erk/rosenbrock) or step-doubling with virtual-Brownian-tree
+               noise (sde).
+    events:    the method's engines support zero-crossing event handling with
+               per-lane termination (`repro.core.events`).  True for every
+               built-in family; a capability flag so the front door can reject
+               unsupported combinations up front instead of deep in dispatch.
     stiff:     suitable for stiff problems (implicit/semi-implicit).
     noise:     supported SDEProblem.noise kinds (sde only).
     aliases:   alternative lookup names (paper-facing spellings).
+
+    Capability checks are data, not code paths: `solve_ensemble_local`
+    consults these flags, so a newly registered method states what it supports
+    and immediately gets the matching dispatch behaviour on every
+    strategy/backend (see docs/adding-a-method.md).
+
+    >>> get_method("tsit5").family
+    'erk'
+    >>> get_method("em").adaptive       # step-doubling + Brownian tree
+    True
+    >>> sorted(get_method("gpuem").noise)
+    ['diagonal', 'general']
     """
 
     name: str
@@ -50,6 +68,7 @@ class MethodSpec:
     tableau: Optional[Tableau] = None
     stepper: Optional[Callable] = None
     adaptive: bool = True
+    events: bool = True
     stiff: bool = False
     noise: Tuple[str, ...] = ()
     aliases: Tuple[str, ...] = ()
@@ -108,31 +127,36 @@ def list_methods(family: Optional[str] = None):
 # ---------------------------------------------------------------------------
 
 def _register_builtins():
-    # every shipped tableau is an erk method (RK4 has btilde == 0: fixed-only)
+    # every shipped tableau is an erk method (RK4 has btilde == 0: fixed-only);
+    # paper-facing "gpu<name>" aliases for the methods the paper benchmarks
+    paper_alias = {"tsit5": ("gputsit5",), "vern7": ("gpuvern7",)}
     for tab in TABLEAUS.values():
         register_method(MethodSpec(
             name=tab.name, family="erk", order=tab.order, tableau=tab,
             adaptive=bool((tab.btilde != 0).any()),
-            aliases=("gpu" + tab.name,) if tab.name == "tsit5" else ()))
+            aliases=paper_alias.get(tab.name, ())))
 
     register_method(MethodSpec(
         name="rosenbrock23", family="rosenbrock", order=2, adaptive=True,
         stiff=True, aliases=("rb23", "ode23s")))
 
-    # SDE steppers (fixed-dt, as the paper's GPU kernel set)
+    # SDE steppers. Fixed-dt by default (the paper's GPU kernel set);
+    # adaptive=True records that EVERY stepper gains embedded step-doubling
+    # error control through the shared engine (`core.sde.sde_solve_adaptive`)
+    # when the caller opts in with adaptive=True — no per-method pair needed.
     from .sde import (em_step, heun_strat_step, milstein_step, platen_w2_step)
     register_method(MethodSpec(
-        name="em", family="sde", order=0.5, stepper=em_step, adaptive=False,
+        name="em", family="sde", order=0.5, stepper=em_step, adaptive=True,
         noise=("diagonal", "general"), aliases=("gpuem", "euler_maruyama")))
     register_method(MethodSpec(
         name="platen_w2", family="sde", order=2.0, stepper=platen_w2_step,
-        adaptive=False, noise=("diagonal",), aliases=("siea", "gpusiea")))
+        adaptive=True, noise=("diagonal",), aliases=("siea", "gpusiea")))
     register_method(MethodSpec(
         name="heun_strat", family="sde", order=0.5, stepper=heun_strat_step,
-        adaptive=False, noise=("diagonal", "general")))
+        adaptive=True, noise=("diagonal", "general")))
     register_method(MethodSpec(
         name="milstein", family="sde", order=1.0, stepper=milstein_step,
-        adaptive=False, noise=("diagonal",)))
+        adaptive=True, noise=("diagonal",)))
 
 
 _register_builtins()

@@ -1,0 +1,134 @@
+"""Butcher order conditions via rooted trees — the tableau verifier.
+
+A Runge-Kutta pair (A, b, c) has order p iff for every rooted tree t with
+order r(t) <= p the elementary weight matches the tree density:
+
+    Phi(t) = b . u(t) = 1 / gamma(t),   u([t1..tk])_i = prod_j (A u(tj))_i,
+    u(tau) = 1,   gamma(tau) = 1,   gamma(t) = r(t) * prod_j gamma(tj).
+
+(Butcher 1963; Hairer-Norsett-Wanner I.II.2.)  This module enumerates the
+trees (1, 1, 2, 4, 9, 20, 48, 115, 286 trees for orders 1..9) and evaluates
+every condition numerically, which is how the shipped high-order tableaus
+(the 10-stage Vern7 and the 26-stage extrapolation pair GBS10) are
+*verified* rather than trusted: a single wrong coefficient breaks dozens of
+the nonlinear conditions at once.
+
+The same machinery doubles as a data-driven consistency check for user
+tableaus registered through `repro.core.methods.register_method`.
+
+>>> from repro.core.tableaus import TSIT5
+>>> max_order_condition_residual(TSIT5, 5) < 1e-12
+True
+>>> count_trees(7)      # number of order conditions for a 7th-order method
+85
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+# A rooted tree is a canonical (sorted) tuple of its root's subtrees; the
+# single-node tree is the empty tuple ().
+Tree = Tuple[Any, ...]
+
+
+@lru_cache(maxsize=None)
+def _forests(total: int) -> Tuple[Tree, ...]:
+    """All multisets of rooted trees whose orders sum to `total` (each multiset
+    sorted canonically so duplicates collapse)."""
+    if total == 0:
+        return ((),)
+    out = set()
+    for k in range(1, total + 1):
+        for t in rooted_trees(k):
+            for rest in _forests(total - k):
+                out.add(tuple(sorted((t,) + rest)))
+    return tuple(sorted(out))
+
+
+@lru_cache(maxsize=None)
+def rooted_trees(order: int) -> Tuple[Tree, ...]:
+    """All rooted trees with exactly `order` nodes (canonical form)."""
+    if order < 1:
+        return ()
+    return tuple(_forests(order - 1))
+
+
+def count_trees(max_order: int) -> int:
+    """Total number of order conditions for a method of order `max_order`."""
+    return sum(len(rooted_trees(r)) for r in range(1, max_order + 1))
+
+
+def tree_order(t: Tree) -> int:
+    return 1 + sum(tree_order(s) for s in t)
+
+
+def tree_density(t: Tree) -> int:
+    g = tree_order(t)
+    for s in t:
+        g *= tree_density(s)
+    return g
+
+
+def _stage_vector(t: Tree, A: np.ndarray,
+                  cache: Dict[Tree, np.ndarray]) -> np.ndarray:
+    """u(t): the per-stage elementary-weight vector (Phi(t) = b . u(t)).
+    Only A enters — the nodes c appear implicitly as A's row sums."""
+    if t in cache:
+        return cache[t]
+    u = np.ones(A.shape[0])
+    for s in t:
+        u = u * (A @ _stage_vector(s, A, cache))
+    cache[t] = u
+    return u
+
+
+def order_condition_residuals(A, b, c, order: int):
+    """[(tree, b.u(t) - 1/gamma(t))] for every tree of order <= `order`."""
+    A = np.asarray(A, np.float64)
+    b = np.asarray(b, np.float64)
+    cache: Dict[Tree, np.ndarray] = {}
+    out = []
+    for r in range(1, order + 1):
+        for t in rooted_trees(r):
+            phi = float(b @ _stage_vector(t, A, cache))
+            out.append((t, phi - 1.0 / tree_density(t)))
+    return out
+
+
+def max_order_condition_residual(tab, order: int, embedded: bool = False):
+    """Largest |Phi(t) - 1/gamma(t)| over all trees of order <= `order`.
+
+    embedded=True checks the lower-order weights bhat = b - btilde instead
+    (the error-estimator solution of the pair).
+    """
+    b = tab.b - tab.btilde if embedded else tab.b
+    res = order_condition_residuals(tab.a, b, tab.c, order)
+    return max(abs(r) for _, r in res)
+
+
+def stage_consistency_residual(tab) -> float:
+    """max_i |c_i - sum_j a_ij|: the row-sum (internal consistency) condition
+    every shipped tableau satisfies by construction."""
+    return float(np.max(np.abs(np.asarray(tab.c)
+                               - np.asarray(tab.a).sum(axis=1))))
+
+
+def elementary_weight_matrix(A, c, order: int) -> Tuple[np.ndarray, np.ndarray,
+                                                        List[Tree]]:
+    """(U, rhs, trees) with U[k] = u(t_k) and rhs[k] = 1/gamma(t_k) for every
+    tree of order <= `order` — the order conditions as a LINEAR system in the
+    quadrature weights b.  Used to cross-validate shipped b/btilde data: with
+    A and c fixed, `U b = rhs` pins b down completely (least squares residual
+    ~0 iff (A, c) genuinely admit a method of that order)."""
+    A = np.asarray(A, np.float64)
+    cache: Dict[Tree, np.ndarray] = {}
+    rows, rhs, ts = [], [], []
+    for r in range(1, order + 1):
+        for t in rooted_trees(r):
+            rows.append(_stage_vector(t, A, cache))
+            rhs.append(1.0 / tree_density(t))
+            ts.append(t)
+    return np.asarray(rows), np.asarray(rhs), ts

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .controller import PIController, hairer_norm, pi_propose
+from .events import Event, handle_event, hermite_interp
 from .solvers import SolveResult
 
 _D = 1.0 / (2.0 + 2.0 ** 0.5)
@@ -85,8 +86,17 @@ def rosenbrock23_step(f, u, p, t, dt, *, lanes=False, linsolve="jnp",
 def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
                        saveat=None, max_iters=100_000, lanes=False,
                        linsolve="jnp", lane_tile=128,
-                       controller: Optional[PIController] = None):
-    """Adaptive Rosenbrock23 with Hermite-cubic dense output."""
+                       controller: Optional[PIController] = None,
+                       event: Optional[Event] = None):
+    """Adaptive Rosenbrock23 with Hermite-cubic dense output.
+
+    `event` threads the shared event machinery (`repro.core.events`) through
+    the stiff family: detection + bisection refinement run on the
+    Hermite-cubic interpolant the method's dense output already uses, with
+    per-lane termination masks in lanes mode.  When an event is supplied the
+    return value is ``(SolveResult, {"event_t", "event_count"})`` — the same
+    contract as `solve_adaptive`.
+    """
     dtype = u0.dtype
     ctrl = controller or PIController.for_order(3)
     cshape = (u0.shape[-1],) if lanes else ()
@@ -108,7 +118,9 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
         done=jnp.zeros(cshape, bool), us=us0,
         naccept=jnp.zeros(cshape, jnp.int32),
         nreject=jnp.zeros(cshape, jnp.int32),
-        iters=jnp.asarray(0, jnp.int32))
+        iters=jnp.asarray(0, jnp.int32),
+        event_t=jnp.full(cshape, jnp.inf, dtype),
+        event_count=jnp.zeros(cshape, jnp.int32))
 
     def _bc(v):
         return v if jnp.ndim(v) == 0 else v[None]
@@ -131,7 +143,22 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
         dt_next, enorm_prev = pi_propose(ctrl, dt, enorm, c["enorm_prev"],
                                          accept)
         t_new = jnp.where(accept, t + dt_step, t)
-        u_new = jnp.where(_bc(accept), u_cand, u)
+
+        # ---- events: shared machinery on the Hermite-cubic interpolant -----
+        if event is not None:
+            def interp_fn(theta):
+                return hermite_interp(u, F0, u_cand, F2, dt_step, theta,
+                                      lanes=lanes)
+
+            u_next, t_new, ev_t, ev_n, term = handle_event(
+                event, interp_fn, u, u_cand, p, t, dt_step, t_new, accept,
+                c["event_t"], c["event_count"], lanes=lanes)
+        else:
+            u_next = u_cand
+            ev_t, ev_n = c["event_t"], c["event_count"]
+            term = jnp.zeros(cshape, bool)
+
+        u_new = jnp.where(_bc(accept), u_next, u)
 
         # Hermite-cubic grid save
         eps = 1e-7 * jnp.maximum(jnp.abs(t_new), 1.0)
@@ -159,16 +186,21 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
                 + h01 * u_cand[None] + h11 * dtb * F2[None])
         us = jnp.where(mask, vals, c["us"])
 
-        done = c["done"] | (t_new >= tf - 1e-7 * jnp.maximum(jnp.abs(tf), 1.0))
+        done = (c["done"] | term
+                | (t_new >= tf - 1e-7 * jnp.maximum(jnp.abs(tf), 1.0)))
         return dict(t=t_new, u=u_new, dt=dt_next, enorm_prev=enorm_prev,
                     done=done, us=us,
                     naccept=c["naccept"] + accept.astype(jnp.int32),
                     nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
-                    iters=c["iters"] + 1)
+                    iters=c["iters"] + 1,
+                    event_t=ev_t, event_count=ev_n)
 
     out = jax.lax.while_loop(cond, body, carry0)
-    return SolveResult(
+    res = SolveResult(
         ts=saveat, us=out["us"], t_final=out["t"], u_final=out["u"],
         naccept=out["naccept"], nreject=out["nreject"],
         status=jnp.where(out["done"], 0, 1).astype(jnp.int32),
         nf=(out["naccept"] + out["nreject"]) * 3)
+    if event is not None:
+        return res, dict(event_t=out["event_t"], event_count=out["event_count"])
+    return res

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from .controller import PIController, hairer_norm, pi_propose
+from .events import Event, handle_event
 from .tableaus import Tableau
 
 Array = Any
@@ -41,20 +42,6 @@ class SolveResult(NamedTuple):
     nreject: Array
     status: Array    # 0 = success, 1 = max_iters exhausted
     nf: Array        # number of RHS evaluations (per control element)
-
-
-class Event(NamedTuple):
-    """condition g(u,p,t) crossing zero triggers affect h (paper §6.6).
-
-    direction: -1 (+ -> -), +1 (- -> +), 0 (any crossing).
-    terminal:  stop integration at the event.
-    affect:    (u, p, t) -> u_new  applied at the event point.
-    """
-    condition: Callable[[Array, Array, Array], Array]
-    affect: Optional[Callable[[Array, Array, Array], Array]] = None
-    terminal: bool = False
-    direction: int = 0
-    bisect_iters: int = 30
 
 
 # ----------------------------------------------------------------------------
@@ -235,35 +222,6 @@ def _grid_save(f, tab, us, saveat, u_old, u_new, ks, p, t_old, dt_step,
         return jnp.where(cross_e, vals, us)
 
 
-def _event_locate(f, tab, ev: Event, u_old, u_new, ks, p, t_old, dt_step,
-                  g_old, g_new, lanes=False):
-    """Bisection for g=0 inside an accepted step using the dense output.
-
-    Returns (theta_star, u_star) per control element; only meaningful where the
-    caller's `hit` mask is true.
-    """
-    lo = jnp.zeros_like(g_old)
-    hi = jnp.ones_like(g_old)
-
-    def body(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        u_mid = interp_step(f, tab, u_old, u_new, ks, p, t_old, dt_step, mid,
-                            lanes=lanes)
-        g_mid = ev.condition(u_mid, p, t_old + mid * dt_step)
-        # root in [lo, mid] iff sign change between g_old and g_mid
-        left = jnp.sign(g_old) * jnp.sign(g_mid) <= 0
-        lo = jnp.where(left, lo, mid)
-        hi = jnp.where(left, mid, hi)
-        return lo, hi
-
-    lo, hi = jax.lax.fori_loop(0, ev.bisect_iters, body, (lo, hi))
-    theta = hi  # first point past the root: g has crossed
-    u_star = interp_step(f, tab, u_old, u_new, ks, p, t_old, dt_step, theta,
-                         lanes=lanes)
-    return theta, u_star
-
-
 def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
                    saveat: Optional[Array] = None,
                    opts: AdaptiveOptions = AdaptiveOptions(),
@@ -341,38 +299,15 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
         accept = accept & active
         t_new = jnp.where(accept, t + dt_step, t)
 
-        # ---- events: detect sign change of g over the accepted step --------
+        # ---- events: detect/locate/apply via the shared machinery ----------
         if event is not None:
-            g_old = event.condition(u, p, t)
-            g_new = event.condition(u_cand, p, t_new)
-            # an affect applied exactly at a root leaves g_old == 0 and would
-            # mask every later crossing; re-anchor the sign just inside the
-            # step (theta = 1e-4) in that case.
-            u_eps = interp_step(f, tab, u, u_cand, ks, p, t, dt_step,
-                                jnp.full_like(g_old, 1e-4) if lanes
-                                else jnp.asarray(1e-4, dtype), lanes=lanes)
-            g_eps = event.condition(u_eps, p, t + 1e-4 * dt_step)
-            g_old = jnp.where(g_old == 0, g_eps, g_old)
-            sgn_change = jnp.sign(g_old) * jnp.sign(g_new) < 0
-            if event.direction == -1:
-                sgn_change &= g_new < g_old
-            elif event.direction == 1:
-                sgn_change &= g_new > g_old
-            hit = sgn_change & accept
-            theta_star, u_star = _event_locate(f, tab, event, u, u_cand, ks, p,
-                                               t, dt_step, g_old, g_new,
-                                               lanes=lanes)
-            t_star = t + theta_star * dt_step
-            if event.affect is not None:
-                u_aff = event.affect(u_star, p, t_star)
-            else:
-                u_aff = u_star
-            hit_e = _bc(hit, u) if lanes else hit
-            u_next = jnp.where(hit_e, u_aff, u_cand)
-            t_new = jnp.where(hit, t_star, t_new)
-            ev_t = jnp.where(hit, t_star, c["event_t"])
-            ev_n = c["event_count"] + hit.astype(jnp.int32)
-            term = hit if event.terminal else jnp.zeros(cshape, bool)
+            def interp_fn(theta):
+                return interp_step(f, tab, u, u_cand, ks, p, t, dt_step,
+                                   theta, lanes=lanes)
+
+            u_next, t_new, ev_t, ev_n, term = handle_event(
+                event, interp_fn, u, u_cand, p, t, dt_step, t_new, accept,
+                c["event_t"], c["event_count"], lanes=lanes)
         else:
             u_next = u_cand
             ev_t, ev_n = c["event_t"], c["event_count"]

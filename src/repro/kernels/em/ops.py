@@ -31,21 +31,23 @@ def solve_sde_ensemble_pallas(prob, u0s, ps, key, t0, dt, n_steps,
 
 def solve_sde_ensemble_kernel(prob, u0s, ps, *, t0, dt, n_steps,
                               method="em", save_every=1, lane_tile=None,
-                              seed=0, noise_table=None, interpret=None):
+                              seed=0, noise_table=None, interpret=None,
+                              event=None, lane_offset=0):
     """Unified-result SDE kernel entry (returns an EnsembleResult).
 
     noise_table: optional (n_steps, m, N) pre-drawn N(0,1), tiled over the
     trajectory axis alongside the state. lane_tile=None derives the tile from
-    the §5.2 VMEM formula."""
+    the §5.2 VMEM formula.  lane_offset shifts the counter-RNG lane indices to
+    this shard's GLOBAL trajectory indices (mesh-sharded ensembles)."""
     assert n_steps % save_every == 0
     m_noise = prob.noise_dim()
     body = sde_body(prob.f, prob.g, SDE_STEPPERS[method], prob.noise,
                     t0=float(t0), dt=float(dt), n_steps=n_steps,
                     save_every=save_every, m_noise=m_noise, seed=seed,
                     use_table=noise_table is not None,
-                    nf_per_step=sde_nf_per_step(method))
+                    nf_per_step=sde_nf_per_step(method), event=event)
     ts = sde_save_grid(t0, dt, n_steps, save_every, u0s.dtype)
-    extras = []
+    extras = [("broadcast", jnp.asarray([lane_offset], jnp.uint32))]
     if noise_table is not None:
         extras.append(("lanes", noise_table))
     return run_ensemble_kernel(

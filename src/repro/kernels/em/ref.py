@@ -6,15 +6,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sde import SDE_STEPPERS, sde_step_and_save
+from repro.core.sde import (SDE_STEPPERS, sde_event_state0, sde_step_and_save,
+                            sde_step_save_event)
 from repro.kernels.rng import counter_normals_threefry
 
 
 def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
-              seed=0, noise_table=None):
+              seed=0, noise_table=None, event=None, lane_offset=0):
     """u0s (N, n), ps (N, m). Replays the kernel's exact noise stream
-    (threefry counters over global lane indices) or a supplied table.
-    Returns (us (S, n, N), uf (n, N))."""
+    (threefry counters over GLOBAL lane indices: local index + lane_offset)
+    or a supplied table.  With an event, runs the shared event-aware loop
+    body (per-lane termination masks).
+    Returns (us (S, n, N), uf (n, N), estate-or-None)."""
     stepper = SDE_STEPPERS[method]
     u0 = u0s.T
     p = ps.T
@@ -22,19 +25,32 @@ def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
     m = prob.noise_dim()
     dtype = u0.dtype
     S = n_steps // save_every
-    lane = jnp.broadcast_to(jnp.arange(N, dtype=jnp.uint32)[None], (m, N))
+    gl = jnp.arange(N, dtype=jnp.uint32) + jnp.asarray(lane_offset, jnp.uint32)
+    lane = jnp.broadcast_to(gl[None], (m, N))
     rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[:, None], (m, N))
 
-    def step(k, carry):
-        u, us = carry
+    def noise(k):
         if noise_table is not None:
             z = jax.lax.dynamic_slice(noise_table, (k, 0, 0), (1, m, N))[0]
-            z = z.astype(dtype)
-        else:
-            z = counter_normals_threefry(seed, k, lane, rows, dtype)
-        return sde_step_and_save(stepper, prob.f, prob.g, prob.noise, u, us,
-                                 p, t0, dt, k, z, save_every)
+            return z.astype(dtype)
+        return counter_normals_threefry(seed, k, lane, rows, dtype)
 
     us0 = jnp.zeros((S, n, N), dtype)
-    u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
-    return us, u_f
+    if event is None:
+        def step(k, carry):
+            u, us = carry
+            return sde_step_and_save(stepper, prob.f, prob.g, prob.noise, u,
+                                     us, p, t0, dt, k, noise(k), save_every)
+
+        u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+        return us, u_f, None
+
+    def step(k, carry):
+        u, us, estate = carry
+        return sde_step_save_event(stepper, prob.f, prob.g, prob.noise, event,
+                                   u, us, estate, p, t0, dt, k, noise(k),
+                                   save_every)
+
+    estate0 = sde_event_state0((N,), t0, dtype)
+    u_f, us, estate = jax.lax.fori_loop(0, n_steps, step, (u0, us0, estate0))
+    return us, u_f, estate

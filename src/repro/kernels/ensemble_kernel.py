@@ -235,9 +235,10 @@ def erk_body(f, tab, *, t0: float, tf: float, dt0: float, rtol: float,
 
 
 def rosenbrock_body(f, *, t0: float, tf: float, dt0: float, rtol: float,
-                    atol: float, max_iters: int):
+                    atol: float, max_iters: int, event=None):
     """Rosenbrock23 stiff integration with the batched-LU W-solves *inlined*
-    (linsolve="lanes": paper §5.1.3 inside the fused kernel).
+    (linsolve="lanes": paper §5.1.3 inside the fused kernel).  Events run the
+    shared per-lane machinery (`repro.core.events`) inside the fused loop.
     extras[0] = saveat grid (S,)."""
     from repro.core.rosenbrock import solve_rosenbrock23
 
@@ -245,7 +246,9 @@ def rosenbrock_body(f, *, t0: float, tf: float, dt0: float, rtol: float,
         saveat_v = extras[0]
         res = solve_rosenbrock23(f, u0, p, t0, tf, dt0, rtol=rtol, atol=atol,
                                  saveat=saveat_v, max_iters=max_iters,
-                                 lanes=True, linsolve="lanes")
+                                 lanes=True, linsolve="lanes", event=event)
+        if event is not None:
+            res, _ = res
         stats = jnp.stack([res.naccept, res.nreject, res.status, res.nf])
         return res.us, res.u_final, res.t_final, stats
 
@@ -254,11 +257,16 @@ def rosenbrock_body(f, *, t0: float, tf: float, dt0: float, rtol: float,
 
 def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
              n_steps: int, save_every: int, m_noise: int, seed: int,
-             use_table: bool, nf_per_step: int = 1):
+             use_table: bool, nf_per_step: int = 1, event=None):
     """Fixed-dt SDE integration with in-kernel counter RNG (threefry keyed by
-    (seed; step, noise-row, global lane) — replayable, no noise storage), or a
-    pre-drawn table via extras[-1] ("lanes" kind, (n_steps, m, N))."""
-    from repro.core.sde import sde_step_and_save
+    (seed; step, noise-row, GLOBAL lane) — replayable, no noise storage), or a
+    pre-drawn table via extras[-1] ("lanes" kind, (n_steps, m, N)).
+
+    extras[0] ("broadcast", (1,)) is the shard's global lane offset; events
+    run the shared per-lane machinery (`repro.core.events`) inside the fused
+    loop, with termination masks freezing finished lanes."""
+    from repro.core.sde import (sde_event_state0, sde_step_and_save,
+                                sde_step_save_event)
     from repro.kernels.rng import counter_normals_threefry
 
     S = n_steps // save_every
@@ -266,7 +274,8 @@ def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
     def body(ctx, u0, p, extras):
         B = ctx.lane_tile
         dtype = u0.dtype
-        lane = (jnp.uint32(ctx.tile) * jnp.uint32(B)
+        offset = jnp.asarray(extras[0], jnp.uint32)[0]
+        lane = (offset + jnp.uint32(ctx.tile) * jnp.uint32(B)
                 + jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 1))
         rows = jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 0)
         table = extras[-1] if use_table else None
@@ -277,17 +286,63 @@ def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
                     table, (k, 0, 0), (1, m_noise, B))[0].astype(dtype)
             return counter_normals_threefry(seed, k, lane, rows, dtype)
 
-        def step(k, carry):
-            u, us = carry
-            return sde_step_and_save(stepper, f, g, noise, u, us, p, t0, dt,
-                                     k, noise_fn(k), save_every)
-
         us0 = jnp.zeros((S, ctx.n_state, B), dtype)
-        u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
-        t_final = jnp.full((B,), t0 + n_steps * dt, dtype)
         i32 = lambda v: jnp.full((B,), v, jnp.int32)
-        stats = jnp.stack([i32(n_steps), i32(0), i32(0),
+        if event is None:
+            def step(k, carry):
+                u, us = carry
+                return sde_step_and_save(stepper, f, g, noise, u, us, p, t0,
+                                         dt, k, noise_fn(k), save_every)
+
+            u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+            t_final = jnp.full((B,), t0 + n_steps * dt, dtype)
+            naccept = i32(n_steps)
+        else:
+            def step(k, carry):
+                u, us, estate = carry
+                return sde_step_save_event(stepper, f, g, noise, event, u, us,
+                                           estate, p, t0, dt, k, noise_fn(k),
+                                           save_every)
+
+            estate0 = sde_event_state0((B,), t0, dtype)
+            u_f, us, estate = jax.lax.fori_loop(0, n_steps, step,
+                                                (u0, us0, estate0))
+            t_final = estate["t_out"].astype(dtype)
+            naccept = estate["naccept"]
+        stats = jnp.stack([naccept, i32(0), i32(0),
                            i32(n_steps * nf_per_step)])
         return us, u_f, t_final, stats
+
+    return body
+
+
+def sde_adaptive_body(f, g, stepper, noise: str, *, t0: float, tf: float,
+                      dt0: float, rtol: float, atol: float, max_iters: int,
+                      m_noise: int, seed: int, depth: int, order: float,
+                      nf_per_step: int, event=None):
+    """Adaptive SDE integration fused into the kernel: embedded step-doubling
+    error control with virtual-Brownian-tree noise (rejection-safe: the SAME
+    (seed; lane, row, dyadic-time) stream on every strategy/backend — see
+    `repro.core.sde.sde_solve_adaptive`).  extras[0] = saveat grid (S,),
+    extras[1] = ("broadcast", (1,)) global lane offset."""
+    from repro.core.sde import sde_solve_adaptive
+
+    def body(ctx, u0, p, extras):
+        B = ctx.lane_tile
+        saveat_v = extras[0]
+        offset = jnp.asarray(extras[1], jnp.uint32)[0]
+        lane = (offset + jnp.uint32(ctx.tile) * jnp.uint32(B)
+                + jax.lax.broadcasted_iota(jnp.uint32, (B,), 0))
+        res = sde_solve_adaptive(f, g, stepper, noise, u0, p, t0, tf, dt0,
+                                 seed=seed, lane_idx=lane, m_noise=m_noise,
+                                 saveat=saveat_v, rtol=rtol, atol=atol,
+                                 max_iters=max_iters, event=event, lanes=True,
+                                 depth=depth, order=order,
+                                 nf_per_step=nf_per_step)
+        if event is not None:
+            res, _ = res
+        stats = jnp.stack([res.naccept, res.nreject,
+                           res.status * jnp.ones_like(res.naccept), res.nf])
+        return res.us, res.u_final, res.t_final, stats
 
     return body

@@ -10,6 +10,7 @@ hardware PRNG on real TPUs.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 _ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
@@ -43,6 +44,78 @@ def threefry2x32(k0, k1, c0, c1):
 def _to_unit(bits):
     """uint32 -> float in (0, 1): (bits + 0.5) / 2^32, exact in f32 range."""
     return (bits.astype(jnp.float32) + 0.5) * jnp.float32(2.0 ** -32)
+
+
+def bridge_normals(seed, node, lane_idx, row_idx, dtype=jnp.float32):
+    """N(0,1) draws for the virtual Brownian bridge, indexed by
+    (seed; tree-node, noise-row, lane).
+
+    Same Threefry core as `counter_normals_threefry` but keyed with a
+    different second key word, so the bridge stream is independent of the
+    fixed-dt per-step stream under the same seed.
+    """
+    c0 = (jnp.asarray(node, jnp.uint32) * jnp.uint32(0x9E3779B9)
+          + jnp.asarray(row_idx, jnp.uint32))
+    c1 = jnp.asarray(lane_idx, jnp.uint32)
+    x0, x1 = threefry2x32(jnp.uint32(seed), jnp.uint32(0x85A308D3), c0, c1)
+    u1 = _to_unit(x0)
+    u2 = _to_unit(x1)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return z.astype(dtype)
+
+
+def brownian_bridge_point(seed, idx, lane_idx, row_idx, *, depth, t_total,
+                          dtype=jnp.float32):
+    """W(idx * t_total / 2**depth) of a standard Wiener path on [0, t_total].
+
+    The path is a *virtual Brownian tree* (Levy bridge construction, cf.
+    RSwM / torchsde's BrownianTree): W is a pure function of
+    (seed; lane, row, dyadic index), evaluated by descending `depth` levels of
+    midpoint-conditioned draws.  Because the value at a grid point never
+    depends on the *step sequence* that queried it, a rejected step replays
+    exactly the same increments when retried with a smaller dt — bitwise, on
+    every strategy and backend.  That is the property that makes adaptive SDE
+    stepping cross-backend deterministic.
+
+    idx: integer array (broadcastable against lane_idx/row_idx) in
+         [0, 2**depth]; each element may name a different grid point (per-lane
+         adaptive dt).
+    Cost: `depth` Threefry evaluations per point.
+    """
+    idx = jnp.asarray(idx, jnp.uint32)
+    shape = jnp.broadcast_shapes(jnp.shape(idx), jnp.shape(lane_idx),
+                                 jnp.shape(row_idx))
+    idx = jnp.broadcast_to(idx, shape)
+    lane_idx = jnp.broadcast_to(jnp.asarray(lane_idx, jnp.uint32), shape)
+    row_idx = jnp.broadcast_to(jnp.asarray(row_idx, jnp.uint32), shape)
+    t_total = jnp.asarray(t_total, dtype)
+    h_res = t_total / (2 ** depth)           # grid resolution in time units
+    # endpoint draw: W(t_total) ~ N(0, t_total), tree node 0
+    w_l = jnp.zeros(shape, dtype)
+    w_r = jnp.sqrt(t_total) * bridge_normals(seed, jnp.zeros(shape, jnp.uint32),
+                                             lane_idx, row_idx, dtype)
+    l = jnp.zeros(shape, jnp.uint32)
+    r = jnp.full(shape, 2 ** depth, jnp.uint32)
+    nid = jnp.ones(shape, jnp.uint32)        # heap id of the interval [l, r)
+
+    def body(_, carry):
+        l, r, nid, w_l, w_r = carry
+        mid = (l + r) >> 1
+        h = (r - l).astype(dtype) * h_res
+        z = bridge_normals(seed, nid, lane_idx, row_idx, dtype)
+        # midpoint conditioned on the endpoints: var = h/4
+        w_mid = 0.5 * (w_l + w_r) + (0.5 * jnp.sqrt(h)) * z
+        go_left = idx <= mid
+        w_r = jnp.where(go_left, w_mid, w_r)
+        w_l = jnp.where(go_left, w_l, w_mid)
+        r = jnp.where(go_left, mid, r)
+        l = jnp.where(go_left, l, mid)
+        nid = 2 * nid + (~go_left).astype(jnp.uint32)
+        return l, r, nid, w_l, w_r
+
+    l, r, nid, w_l, w_r = jax.lax.fori_loop(0, depth, body,
+                                            (l, r, nid, w_l, w_r))
+    return jnp.where(idx == l, w_l, w_r)
 
 
 def counter_normals_threefry(seed, step, lane_idx, row_idx, dtype=jnp.float32):

@@ -1,0 +1,169 @@
+"""Cross-backend event parity — the acceptance bar of the family-agnostic
+event machinery (`repro.core.events`): the SAME termination time and final
+state on every strategy (vmap / array / kernel) and backend (xla / pallas),
+for every method family.  Terminal events record the located event time in
+`EnsembleResult.t_final`, so t_final parity IS event-time parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnsembleProblem, solve_ensemble_local
+from repro.core.events import Event
+from repro.core.problem import ODEProblem
+from repro.configs.de_problems import (bouncing_ball_event,
+                                       bouncing_ball_problem, gbm_problem)
+
+
+def decay_ensemble(N=6, dtype=jnp.float64):
+    """u' = -lam*u, u0 = 1: crossing u = 1/2 at t* = ln2/lam, per lane."""
+    prob = ODEProblem(lambda u, p, t: -p[0] * u, jnp.asarray([1.0], dtype),
+                      jnp.asarray([1.0], dtype), (0.0, 3.0))
+    lams = jnp.linspace(0.5, 2.0, N, dtype=dtype)
+    return EnsembleProblem(prob, N, ps=lams[:, None]), np.log(2.0) / np.asarray(lams)
+
+
+HALF_EVENT = Event(condition=lambda u, p, t: u[0] - 0.5, terminal=True,
+                   direction=-1)
+
+
+# ---------------------------------------------------------------------------
+# erk: terminal events on all four dispatch targets
+# ---------------------------------------------------------------------------
+
+def test_erk_terminal_event_parity_all_strategies():
+    ens, exact = decay_ensemble()
+    kw = dict(alg="tsit5", t0=0.0, tf=3.0, dt0=1e-3,
+              saveat=jnp.asarray([3.0]), rtol=1e-9, atol=1e-9,
+              event=HALF_EVENT)
+    rv = solve_ensemble_local(ens, ensemble="vmap", **kw)
+    np.testing.assert_allclose(np.asarray(rv.t_final), exact, atol=1e-7)
+    rx = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                              lane_tile=3, **kw)
+    rp = solve_ensemble_local(ens, ensemble="kernel", backend="pallas",
+                              lane_tile=3, **kw)
+    for name, r in (("xla", rx), ("pallas", rp)):
+        np.testing.assert_allclose(np.asarray(rv.t_final),
+                                   np.asarray(r.t_final), rtol=1e-9,
+                                   err_msg=name)
+        np.testing.assert_allclose(np.asarray(rv.u_final),
+                                   np.asarray(r.u_final), rtol=1e-7,
+                                   atol=1e-9, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# rosenbrock: events were an ERK special before this PR
+# ---------------------------------------------------------------------------
+
+def test_rosenbrock_terminal_event_parity_and_exactness():
+    ens, exact = decay_ensemble()
+    kw = dict(alg="rosenbrock23", t0=0.0, tf=3.0, dt0=1e-3,
+              saveat=jnp.asarray([3.0]), rtol=1e-9, atol=1e-9,
+              event=HALF_EVENT)
+    rv = solve_ensemble_local(ens, ensemble="vmap", **kw)
+    np.testing.assert_allclose(np.asarray(rv.t_final), exact, atol=1e-6)
+    ra = solve_ensemble_local(ens, ensemble="array", **kw)
+    rx = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                              lane_tile=3, **kw)
+    rp = solve_ensemble_local(ens, ensemble="kernel", backend="pallas",
+                              lane_tile=3, **kw)
+    for name, r in (("array", ra), ("xla", rx), ("pallas", rp)):
+        np.testing.assert_allclose(np.asarray(rv.t_final),
+                                   np.asarray(r.t_final), rtol=1e-9,
+                                   atol=1e-9, err_msg=name)
+        np.testing.assert_allclose(np.asarray(rv.u_final),
+                                   np.asarray(r.u_final), rtol=1e-6,
+                                   atol=1e-8, err_msg=name)
+
+
+def test_rosenbrock_nonterminal_affect_bounces():
+    """Non-terminal affect through the stiff family: bouncing ball on
+    rosenbrock23 keeps the ball above the floor on every backend."""
+    prob = bouncing_ball_problem(e=0.9, dtype=jnp.float64)
+    ens = EnsembleProblem(prob, 4)
+    kw = dict(alg="rosenbrock23", t0=0.0, tf=2.0, dt0=1e-3,
+              saveat=jnp.linspace(0.5, 2.0, 4), rtol=1e-8, atol=1e-8,
+              event=bouncing_ball_event())
+    rv = solve_ensemble_local(ens, ensemble="vmap", **kw)
+    rx = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                              lane_tile=4, **kw)
+    assert float(jnp.min(rx.us[:, :, 0])) > -1e-6   # bounced, never sank
+    np.testing.assert_allclose(np.asarray(rv.us), np.asarray(rx.us),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# sde: events with per-lane termination, fixed-dt AND adaptive — bitwise
+# ---------------------------------------------------------------------------
+
+SDE_EV = Event(condition=lambda u, p, t: u[0] - 0.18, terminal=True,
+               direction=1)
+
+
+@pytest.fixture(scope="module")
+def sde_ens():
+    return EnsembleProblem(gbm_problem(r=1.5, v=0.2, dtype=jnp.float64), 10)
+
+
+def _all_four(ens, **kw):
+    rv = solve_ensemble_local(ens, ensemble="vmap", **kw)
+    ra = solve_ensemble_local(ens, ensemble="array", **kw)
+    rx = solve_ensemble_local(ens, ensemble="kernel", backend="xla", **kw)
+    rp = solve_ensemble_local(ens, ensemble="kernel", backend="pallas",
+                              lane_tile=4, **kw)
+    return rv, [("array", ra), ("xla", rx), ("pallas", rp)]
+
+
+def test_sde_fixed_dt_event_parity_bitwise(sde_ens):
+    rv, others = _all_four(sde_ens, alg="em", t0=0.0, tf=1.0, dt0=0.025,
+                           save_every=8, seed=11, event=SDE_EV)
+    # events actually fired (GBM with r=1.5 grows through the barrier)
+    assert np.all(np.asarray(rv.t_final) < 1.0)
+    for name, r in others:
+        np.testing.assert_array_equal(np.asarray(rv.t_final),
+                                      np.asarray(r.t_final), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(rv.u_final),
+                                      np.asarray(r.u_final), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(rv.us), np.asarray(r.us),
+                                      err_msg=name)
+
+
+def test_sde_adaptive_event_parity_bitwise(sde_ens):
+    """The ISSUE acceptance bar: SDE + event + adaptive=True is
+    bitwise-identical (trajectories AND event times) across
+    vmap/array/kernel x xla/pallas."""
+    rv, others = _all_four(sde_ens, alg="em", t0=0.0, tf=1.0, dt0=0.05,
+                           adaptive=True, rtol=1e-3, atol=1e-5,
+                           saveat=jnp.linspace(0.25, 1.0, 4), seed=11,
+                           event=SDE_EV)
+    assert np.all(np.asarray(rv.t_final) < 1.0)
+    for name, r in others:
+        np.testing.assert_array_equal(np.asarray(rv.t_final),
+                                      np.asarray(r.t_final), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(rv.u_final),
+                                      np.asarray(r.u_final), err_msg=name)
+        np.testing.assert_array_equal(np.asarray(rv.us), np.asarray(r.us),
+                                      err_msg=name)
+
+
+def test_sde_terminal_event_state_near_threshold(sde_ens):
+    """Bisection refinement: the frozen state sits at the barrier (to the
+    linear-interpolant tolerance), not at a whole-step overshoot."""
+    res = solve_ensemble_local(sde_ens, alg="em", ensemble="kernel",
+                               backend="xla", t0=0.0, tf=1.0, dt0=0.05,
+                               adaptive=True, rtol=1e-3, atol=1e-5, seed=11,
+                               event=SDE_EV)
+    np.testing.assert_allclose(np.asarray(res.u_final)[:, 0], 0.18,
+                               atol=1e-6)
+
+
+def test_event_capability_flag_enforced():
+    from repro.core.methods import MethodSpec
+    from repro.core.tableaus import TSIT5
+    from repro.configs.de_problems import lorenz_ensemble
+    spec = MethodSpec(name="noev", family="erk", order=5, tableau=TSIT5,
+                      events=False)
+    ens = lorenz_ensemble(2, dtype=jnp.float64)
+    with pytest.raises(ValueError, match="events"):
+        solve_ensemble_local(ens, alg=spec, t0=0.0, tf=0.1, dt0=1e-3,
+                             event=HALF_EVENT)

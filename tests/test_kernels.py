@@ -85,7 +85,7 @@ def test_em_kernel_pathwise_vs_ref_counter_rng(method):
     rp = solve_sde_ensemble_pallas(prob, u0s, ps, key=None, t0=0.0, dt=dt,
                                    n_steps=n_steps, method=method,
                                    save_every=10, lane_tile=4, seed=7)
-    us_ref, uf_ref = ref_solve(prob, u0s, ps, t0=0.0, dt=dt, n_steps=n_steps,
+    us_ref, uf_ref, _ = ref_solve(prob, u0s, ps, t0=0.0, dt=dt, n_steps=n_steps,
                                method=method, save_every=10, seed=7)
     np.testing.assert_allclose(np.asarray(rp.u_final), np.asarray(uf_ref.T),
                                rtol=1e-6)

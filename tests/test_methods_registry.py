@@ -14,7 +14,8 @@ def test_builtin_families_registered():
     assert get_method("tsit5").family == "erk"
     assert get_method("rosenbrock23").stiff
     assert get_method("em").family == "sde"
-    assert not get_method("em").adaptive
+    # every sde stepper supports step-doubling adaptive control + events
+    assert get_method("em").adaptive and get_method("em").events
 
 
 def test_aliases_resolve_to_same_spec():
@@ -75,15 +76,22 @@ def test_noise_kind_capability_checked():
 def test_unsupported_strategy_raises_not_silently_ignores():
     ens = lorenz_ensemble(4, dtype=jnp.float64)
     with pytest.raises(NotImplementedError, match="rosenbrock"):
-        solve_ensemble_local(ens, alg="rosenbrock23", ensemble="array",
+        solve_ensemble_local(ens, alg="rosenbrock23", ensemble="array_eager",
                              t0=0.0, tf=0.5, dt0=1e-3)
     sde_ens = EnsembleProblem(gbm_problem(dtype=jnp.float64), 4)
     with pytest.raises(NotImplementedError, match="sde"):
-        solve_ensemble_local(sde_ens, alg="em", ensemble="array", dt0=0.1)
-    from repro.core.solvers import Event
-    ev = Event(condition=lambda u, p, t: u[0])
-    with pytest.raises(NotImplementedError, match="event"):
-        solve_ensemble_local(sde_ens, alg="em", dt0=0.1, event=ev)
+        solve_ensemble_local(sde_ens, alg="em", ensemble="array_eager",
+                             dt0=0.1)
+    # adaptive SDE draws noise from the Brownian tree; tables are fixed-dt
+    import jax.numpy as jnp2
+    Z = jnp2.zeros((10, 3, 4))
+    with pytest.raises(NotImplementedError, match="Brownian tree"):
+        solve_ensemble_local(sde_ens, alg="em", dt0=0.1, adaptive=True,
+                             noise_table=Z)
+    # fixed-dt SDE snapshots land on the save_every grid, not saveat
+    with pytest.raises(NotImplementedError, match="save_every"):
+        solve_ensemble_local(sde_ens, alg="em", dt0=0.1,
+                             saveat=jnp2.asarray([1.0]))
 
 
 def test_auto_lane_tile_vmem_formula():
