@@ -1,0 +1,100 @@
+"""Stiff work-precision: Rodas4 / Rodas5P / Rosenbrock23 on ROBER (§5.1.3).
+
+The paper's stiff story (GPURosenbrock23 / GPURodas4 / GPURodas5P) measured
+here as a work-precision sweep on Robertson's kinetics: for each method and
+tolerance, wall time, RHS-evaluation work (nf), accepted/rejected steps, and
+the final-state relative error against a tight Rodas5P reference solve.  The
+fused-kernel lanes strategy is compared against the vmap-XLA baseline (the
+paper's Fig. 5/6 axis, restricted to the stiff family), and the analytic-
+Jacobian hook (`ODEProblem.jac`) against the jacfwd fallback.
+
+ROBER spans ~9 orders of magnitude in its rate constants, so the benchmark
+force-enables float64 (jax_enable_x64) — in f32 the sweep is meaningless.
+
+Writes a machine-readable record to results/BENCH_stiff.json
+(`benchmarks/run.py --only stiff`; `--dry` just imports and checks this
+entry point).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+
+N, TSPAN, DT0 = 32, (0.0, 1e4), 1e-6
+RTOLS = (1e-4, 1e-6, 1e-8)
+METHODS = ("rosenbrock23", "rodas4", "rodas5p")
+
+
+def main() -> None:
+    # force f64 for the sweep, but restore the previous setting on exit so
+    # later modules in a full `benchmarks/run.py` pass keep their f32 baseline
+    prev_x64 = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    try:
+        _main_x64()
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
+
+
+def _main_x64() -> None:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.de_problems import rober_ensemble
+    from repro.core import solve_ensemble_local
+
+    from .common import HEADER, bench, row
+
+    print(HEADER)
+    ens = rober_ensemble(N, tspan=TSPAN)
+    ens_ad = rober_ensemble(N, tspan=TSPAN, analytic_jac=False)
+
+    def solve(alg, strategy, rtol, ep=ens):
+        return solve_ensemble_local(
+            ep, alg=alg, ensemble=strategy, backend="xla", dt0=DT0,
+            rtol=rtol, atol=rtol * 1e-2)
+
+    ref = np.asarray(solve("rodas5p", "kernel", 1e-10).u_final)
+    scale = np.abs(ref) + 1e-30
+    records = {}
+
+    def record(tag, alg, strategy, rtol, ep=ens):
+        fn = jax.jit(lambda: solve(alg, strategy, rtol, ep).u_final)
+        secs = bench(fn)
+        res = solve(alg, strategy, rtol, ep)
+        err = float(np.max(np.abs(np.asarray(res.u_final) - ref) / scale))
+        print(row(f"stiff/{tag}", secs,
+                  f"err={err:.2e} nf={int(res.nf)} "
+                  f"naccept={int(np.max(np.asarray(res.naccept)))}"))
+        records[tag] = {
+            "seconds": secs, "err": err, "nf": int(res.nf),
+            "naccept_max": int(np.max(np.asarray(res.naccept))),
+            "nreject_total": int(np.sum(np.asarray(res.nreject)))}
+
+    for alg in METHODS:
+        for rtol in RTOLS:
+            record(f"{alg}/kernel/rtol={rtol:g}", alg, "kernel", rtol)
+    # the vmap-XLA baseline axis (masked lock-step over the whole batch)
+    for rtol in RTOLS:
+        record(f"rodas4/vmap/rtol={rtol:g}", "rodas4", "vmap", rtol)
+    # analytic-Jacobian hook vs the jacfwd fallback (same method/tolerance)
+    record("rodas4/kernel/jacfwd/rtol=1e-6", "rodas4", "kernel", 1e-6,
+           ep=ens_ad)
+
+    os.makedirs("results", exist_ok=True)
+    out = os.path.join("results", "BENCH_stiff.json")
+    with open(out, "w") as fp:
+        json.dump({"N": N, "problem": f"rober(tspan={TSPAN})",
+                   "reference": "rodas5p kernel rtol=1e-10",
+                   "records": records}, fp, indent=2, sort_keys=True)
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -22,6 +22,7 @@ MODULES = [
     ("fig7", "benchmarks.bench_fig7_backends"),
     ("fig9", "benchmarks.bench_fig9_gbm"),
     ("adaptive_sde", "benchmarks.bench_adaptive_sde"),
+    ("stiff", "benchmarks.bench_stiff"),
     ("fig11", "benchmarks.bench_fig11_crn"),
     ("texture", "benchmarks.bench_texture_interp"),
     ("mpi", "benchmarks.bench_mpi_scale"),

@@ -177,12 +177,86 @@ def crn_problem(S=10.0, D=10.0, tau=10.0, v0=0.1, n=3.0, eta=0.01,
                       noise="general", n_noise=8, name="crn")
 
 
+# ---------------------------------------------------------------------------
+# ROBER — Robertson's chemical kinetics, THE classic stiff benchmark
+# (paper §5.1.3's GPURodas4/GPURodas5P target; rate constants span 9 orders
+# of magnitude, so it is meaningless in float32 — run with jax_enable_x64).
+# Ships an analytic Jacobian to exercise the ODEProblem.jac hook; drop the
+# jac= argument and every solver falls back to jacfwd with identical results.
+# ---------------------------------------------------------------------------
+
+def rober_rhs(u, p, t):
+    k1, k2, k3 = p[0], p[1], p[2]
+    y1, y2, y3 = u[0], u[1], u[2]
+    return jnp.stack([
+        -k1 * y1 + k3 * y2 * y3,
+        k1 * y1 - k2 * y2 * y2 - k3 * y2 * y3,
+        k2 * y2 * y2,
+    ])
+
+
+def rober_jac(u, p, t):
+    """Analytic ∂f/∂u in component style: (3, 3) scalar / (3, 3, B) lanes."""
+    k1, k2, k3 = p[0], p[1], p[2]
+    y1, y2, y3 = u[0], u[1], u[2]
+    z = jnp.zeros_like(y1)
+    return jnp.stack([
+        jnp.stack([-k1 + z, k3 * y3, k3 * y2]),
+        jnp.stack([k1 + z, -2.0 * k2 * y2 - k3 * y3, -k3 * y2]),
+        jnp.stack([z, 2.0 * k2 * y2, z]),
+    ])
+
+
+def rober_problem(k1=0.04, k2=3e7, k3=1e4, tspan=(0.0, 1e5),
+                  dtype=jnp.float64, analytic_jac=True) -> ODEProblem:
+    u0 = jnp.asarray([1.0, 0.0, 0.0], dtype)
+    p = jnp.asarray([k1, k2, k3], dtype)
+    return ODEProblem(rober_rhs, u0, p, tspan, name="rober",
+                      jac=rober_jac if analytic_jac else None)
+
+
+def rober_ensemble(n_trajectories: int, k1_range=(0.01, 0.1),
+                   tspan=(0.0, 1e5), dtype=jnp.float64,
+                   analytic_jac=True) -> EnsembleProblem:
+    """Rate-constant sweep: k1 log-uniform over k1_range (k2, k3 fixed)."""
+    prob = rober_problem(tspan=tspan, dtype=dtype, analytic_jac=analytic_jac)
+    k1s = jnp.exp(jnp.linspace(jnp.log(k1_range[0]), jnp.log(k1_range[1]),
+                               n_trajectories)).astype(dtype)
+    ps = jnp.stack([k1s, jnp.full_like(k1s, 3e7), jnp.full_like(k1s, 1e4)],
+                   axis=1)
+    return EnsembleProblem(prob, n_trajectories, ps=ps)
+
+
+# ---------------------------------------------------------------------------
+# OREGO — the Oregonator (Belousov-Zhabotinsky reaction), a stiff limit-cycle
+# oscillator (Hairer-Wanner's second standard stiff benchmark).
+# ---------------------------------------------------------------------------
+
+def orego_rhs(u, p, t):
+    s, q, w = p[0], p[1], p[2]
+    y1, y2, y3 = u[0], u[1], u[2]
+    return jnp.stack([
+        s * (y2 + y1 * (1.0 - q * y1 - y2)),
+        (y3 - (1.0 + y1) * y2) / s,
+        w * (y1 - y3),
+    ])
+
+
+def orego_problem(s=77.27, q=8.375e-6, w=0.161, tspan=(0.0, 360.0),
+                  dtype=jnp.float64) -> ODEProblem:
+    u0 = jnp.asarray([1.0, 2.0, 3.0], dtype)
+    p = jnp.asarray([s, q, w], dtype)
+    return ODEProblem(orego_rhs, u0, p, tspan, name="orego")
+
+
 DE_PROBLEMS = {
     "lorenz": lorenz_problem,
     "bouncing_ball": bouncing_ball_problem,
     "linear_decay": linear_decay_problem,
     "sho": sho_problem,
     "vdp": vdp_problem,
+    "rober": rober_problem,
+    "orego": orego_problem,
     "gbm": gbm_problem,
     "crn": crn_problem,
 }

@@ -4,7 +4,8 @@
 # fixed-dt AND adaptive SDE steppers, sensitivity analysis and a distributed
 # front door (api.solve_ensemble).  See docs/architecture.md for the map.
 from .problem import EnsembleProblem, ODEProblem, SDEProblem
-from .tableaus import TABLEAUS, get_tableau
+from .tableaus import (ROSENBROCK_TABLEAUS, TABLEAUS, RosenbrockTableau,
+                       get_rosenbrock_tableau, get_tableau)
 from .controller import PIController, hairer_norm, initial_dt
 from .methods import MethodSpec, get_method, list_methods, register_method
 from .events import Event
@@ -14,7 +15,8 @@ from .ensemble import EnsembleResult, solve_ensemble_local
 
 __all__ = [
     "EnsembleProblem", "ODEProblem", "SDEProblem",
-    "TABLEAUS", "get_tableau", "PIController", "hairer_norm", "initial_dt",
+    "TABLEAUS", "get_tableau", "ROSENBROCK_TABLEAUS", "RosenbrockTableau",
+    "get_rosenbrock_tableau", "PIController", "hairer_norm", "initial_dt",
     "MethodSpec", "get_method", "list_methods", "register_method",
     "AdaptiveOptions", "Event", "SolveResult", "interp_step", "rk_step",
     "solve_adaptive", "solve_fixed", "solve_one",

@@ -69,12 +69,23 @@ def initial_dt(f, u0, p, t0, tf, order, atol, rtol):
 
     Cheap two-evaluation heuristic; the controller recovers quickly from a
     conservative guess, so we favour robustness.
+
+    Stiff problems stress this heuristic: ROBER's f(u0) mixes component
+    magnitudes across ~9 orders, so d0/d1 ratios can underflow h0 toward 0 or
+    (for vanishing derivatives) blow h1 up past the horizon.  The result is
+    therefore clamped to [1e-12·span, span] and any non-finite intermediate
+    collapses to the conservative 1e-6·span fallback — the heuristic may be
+    *suboptimal* under extreme norm ratios, but it can never return 0, inf or
+    NaN (regression: tests/test_stiff.py::test_initial_dt_guard).
     """
+    span = tf - t0
     sc = atol + jnp.abs(u0) * rtol
     f0 = f(u0, p, t0)
     d0 = jnp.sqrt(jnp.mean((u0 / sc) ** 2))
     d1 = jnp.sqrt(jnp.mean((f0 / sc) ** 2))
     h0 = jnp.where((d0 < 1e-5) | (d1 < 1e-5), 1e-6, 0.01 * d0 / d1)
+    # the probe step itself must stay usable under huge |f0| / tiny h0
+    h0 = jnp.clip(h0, 1e-12 * span, span)
     u1 = u0 + h0 * f0
     f1 = f(u1, p, t0 + h0)
     d2 = jnp.sqrt(jnp.mean(((f1 - f0) / sc) ** 2)) / h0
@@ -82,4 +93,6 @@ def initial_dt(f, u0, p, t0, tf, order, atol, rtol):
     h1 = jnp.where(dmax <= 1e-15,
                    jnp.maximum(1e-6, h0 * 1e-3),
                    (0.01 / dmax) ** (1.0 / order))
-    return jnp.minimum(100.0 * h0, jnp.minimum(h1, tf - t0))
+    dt = jnp.minimum(100.0 * h0, jnp.minimum(h1, span))
+    dt = jnp.where(jnp.isfinite(dt) & (dt > 0), dt, 1e-6 * span)
+    return jnp.clip(dt, 1e-12 * span, span)

@@ -331,8 +331,17 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
 def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                       t0, tf, dt0, saveat, rtol, atol, lane_tile, max_iters,
                       linsolve, event):
-    from .rosenbrock import solve_rosenbrock23
+    from .rosenbrock import solve_rosenbrock
 
+    rtab = spec.rtableau
+    if not spec.adaptive:
+        # btilde == 0: no embedded error estimate.  The stiff engine has no
+        # fixed-dt path, and running the PI controller on err ≡ 0 would
+        # accept every step at max growth — reject loudly instead.
+        raise ValueError(
+            f"rosenbrock method {spec.name!r} has no embedded error weights "
+            "(btilde == 0); the stiff engine requires an adaptive pair")
+    jac = getattr(prob, "jac", None)  # analytic-Jacobian hook (jacfwd if None)
     if saveat is None:
         saveat = jnp.asarray([tf], u0s.dtype)
     saveat = jnp.asarray(saveat, u0s.dtype)
@@ -340,9 +349,9 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
 
     if ensemble == "vmap":
         def one(u0, p):
-            return solve_rosenbrock23(prob.f, u0, p, t0, tf, dt0, rtol=rtol,
-                                      atol=atol, saveat=saveat,
-                                      max_iters=max_iters, event=event)
+            return solve_rosenbrock(prob.f, rtab, u0, p, t0, tf, dt0,
+                                    rtol=rtol, atol=atol, saveat=saveat,
+                                    max_iters=max_iters, jac=jac, event=event)
 
         res = jax.vmap(one)(u0s, ps)
         if event is not None:
@@ -357,14 +366,15 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
             from repro.kernels.ensemble_kernel import (rosenbrock_body,
                                                        rosenbrock_work_words,
                                                        run_ensemble_kernel)
-            body = rosenbrock_body(prob.f, t0=float(t0), tf=float(tf),
-                                   dt0=float(dt0), rtol=float(rtol),
-                                   atol=float(atol), max_iters=max_iters,
-                                   event=event)
+            body = rosenbrock_body(prob.f, rtab, jac=jac, t0=float(t0),
+                                   tf=float(tf), dt0=float(dt0),
+                                   rtol=float(rtol), atol=float(atol),
+                                   max_iters=max_iters, event=event)
             return run_ensemble_kernel(
                 body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
                 lane_tile=lane_tile,
-                work_words=rosenbrock_work_words(n, ps.shape[1]))
+                work_words=rosenbrock_work_words(n, ps.shape[1],
+                                                 stages=rtab.stages))
 
         # "array": whole ensemble as ONE lanes tile. A lock-step scalar-dt
         # Rosenbrock would need an (N·n)-sized Jacobian per global step, so
@@ -376,11 +386,11 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
 
         def tile(args):
             u0t, pt = args
-            res = solve_rosenbrock23(prob.f, u0t.T, pt.T, t0, tf, dt0,
-                                     rtol=rtol, atol=atol, saveat=saveat,
-                                     max_iters=max_iters, lanes=True,
-                                     linsolve=linsolve, lane_tile=B,
-                                     event=event)
+            res = solve_rosenbrock(prob.f, rtab, u0t.T, pt.T, t0, tf, dt0,
+                                   rtol=rtol, atol=atol, saveat=saveat,
+                                   max_iters=max_iters, lanes=True,
+                                   linsolve=linsolve, lane_tile=B, jac=jac,
+                                   event=event)
             if event is not None:
                 res, _ = res
             return res

@@ -24,7 +24,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
-from .tableaus import TABLEAUS, Tableau
+from .tableaus import (ROSENBROCK_TABLEAUS, TABLEAUS, RosenbrockTableau,
+                       Tableau)
 
 FAMILIES = ("erk", "rosenbrock", "sde")
 
@@ -36,6 +37,9 @@ class MethodSpec:
     name:      canonical registry key.
     family:    one of FAMILIES.
     tableau:   Butcher tableau (erk only).
+    rtableau:  Rosenbrock W-method tableau (rosenbrock only) — drives the
+               s-stage stiff engine (`repro.core.rosenbrock`) on every
+               strategy/backend, including the fused Pallas body.
     stepper:   stepper fn `(f, g, u, p, t, dt, dW, noise) -> u_new` (sde only).
     order:     order of the propagated solution (strong order for sde).
     adaptive:  the method supports adaptive stepping — an embedded error pair
@@ -66,6 +70,7 @@ class MethodSpec:
     family: str
     order: float
     tableau: Optional[Tableau] = None
+    rtableau: Optional[RosenbrockTableau] = None
     stepper: Optional[Callable] = None
     adaptive: bool = True
     events: bool = True
@@ -79,6 +84,9 @@ class MethodSpec:
                 f"family {self.family!r} not one of {FAMILIES}")
         if self.family == "erk" and self.tableau is None:
             raise ValueError(f"erk method {self.name!r} needs a tableau")
+        if self.family == "rosenbrock" and self.rtableau is None:
+            raise ValueError(
+                f"rosenbrock method {self.name!r} needs an rtableau")
         if self.family == "sde" and self.stepper is None:
             raise ValueError(f"sde method {self.name!r} needs a stepper")
 
@@ -106,6 +114,10 @@ def get_method(alg: Any) -> MethodSpec:
     if isinstance(alg, Tableau):
         return MethodSpec(name=alg.name, family="erk", order=alg.order,
                           tableau=alg, adaptive=bool((alg.btilde != 0).any()))
+    if isinstance(alg, RosenbrockTableau):
+        return MethodSpec(name=alg.name, family="rosenbrock", order=alg.order,
+                          rtableau=alg, stiff=True,
+                          adaptive=bool((alg.btilde != 0).any()))
     try:
         return _REGISTRY[alg]
     except (KeyError, TypeError):
@@ -136,9 +148,17 @@ def _register_builtins():
             adaptive=bool((tab.btilde != 0).any()),
             aliases=paper_alias.get(tab.name, ())))
 
-    register_method(MethodSpec(
-        name="rosenbrock23", family="rosenbrock", order=2, adaptive=True,
-        stiff=True, aliases=("rb23", "ode23s")))
+    # Rosenbrock stiff family: every tableau in ROSENBROCK_TABLEAUS reaches
+    # every strategy/backend through the same s-stage W-method engine
+    # (paper §5.1.3 — GPURosenbrock23 / GPURodas4 / GPURodas5P).
+    rb_alias = {"rosenbrock23": ("rb23", "ode23s", "gpurosenbrock23"),
+                "rodas4": ("gpurodas4",),
+                "rodas5p": ("gpurodas5p", "rodas5")}
+    for rtab in ROSENBROCK_TABLEAUS.values():
+        register_method(MethodSpec(
+            name=rtab.name, family="rosenbrock", order=rtab.order,
+            rtableau=rtab, adaptive=bool((rtab.btilde != 0).any()),
+            stiff=True, aliases=rb_alias.get(rtab.name, ())))
 
     # SDE steppers. Fixed-dt by default (the paper's GPU kernel set);
     # adaptive=True records that EVERY stepper gains embedded step-doubling

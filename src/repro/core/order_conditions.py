@@ -116,6 +116,99 @@ def stage_consistency_residual(tab) -> float:
                                - np.asarray(tab.a).sum(axis=1))))
 
 
+# ---------------------------------------------------------------------------
+# Rosenbrock (W-method) order conditions — the stiff-family verifier.
+#
+# A Rosenbrock method in k-form,
+#
+#     k_i = h f(y0 + Σ_j α_ij k_j) + h J Σ_j Γ_ij k_j + h² γ_i f_t,
+#     y1  = y0 + Σ_i b_i k_i,          J = f'(y0),   Γ_ii = γ,
+#
+# has order p iff  b · φ(t) = 1/γ(t)  for every rooted tree of order ≤ p,
+# where the stage vectors φ follow the RK recursion EXCEPT that singly-
+# branched nodes also pick up the Jacobian term (Hairer-Wanner IV.7):
+#
+#     φ(τ) = 1
+#     φ([t1])        = (α + Γ) φ(t1)        (f'-chains see β = α + Γ)
+#     φ([t1..tk]), k≥2 = Π_l (α φ(t_l))     (higher derivatives: α only)
+#
+# Shipped tableaus are stored in the IMPLEMENTATION form (a, C, b, d) that
+# the engine executes (one factorization of W = I − γh·J per step); the
+# checker inverts that transform —  Γ = (I/γ − C)⁻¹, α = a Γ, b_k = b Γ —
+# so what is verified is exactly what runs.  Non-autonomous correctness
+# reduces to the autonomous conditions iff c = rowsum(α) and d = rowsum(Γ)
+# (autonomization invariance), checked by `rosenbrock_consistency_residual`.
+# ---------------------------------------------------------------------------
+
+
+def rosenbrock_kform(rtab) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]:
+    """Invert the implementation transform: returns (alpha, Gamma, b_k,
+    btilde_k) of the textbook k-form."""
+    a = np.asarray(rtab.a, np.float64)
+    C = np.asarray(rtab.C, np.float64)
+    s = a.shape[0]
+    Gamma = np.linalg.inv(np.eye(s) / rtab.gamma - C)
+    return (a @ Gamma, Gamma, np.asarray(rtab.b, np.float64) @ Gamma,
+            np.asarray(rtab.btilde, np.float64) @ Gamma)
+
+
+def _rb_stage_vector(t: Tree, alpha: np.ndarray, beta: np.ndarray,
+                     cache: Dict[Tree, np.ndarray]) -> np.ndarray:
+    if t in cache:
+        return cache[t]
+    if len(t) == 1:
+        u = beta @ _rb_stage_vector(t[0], alpha, beta, cache)
+    else:
+        u = np.ones(alpha.shape[0])
+        for s in t:
+            u = u * (alpha @ _rb_stage_vector(s, alpha, beta, cache))
+    cache[t] = u
+    return u
+
+
+def rosenbrock_order_condition_residuals(rtab, order: int,
+                                         embedded: bool = False):
+    """[(tree, b·φ(t) − 1/γ(t))] over every rooted tree of order ≤ `order`."""
+    alpha, Gamma, b_k, btilde_k = rosenbrock_kform(rtab)
+    b = b_k - btilde_k if embedded else b_k
+    beta = alpha + Gamma
+    cache: Dict[Tree, np.ndarray] = {}
+    out = []
+    for r in range(1, order + 1):
+        for t in rooted_trees(r):
+            phi = float(b @ _rb_stage_vector(t, alpha, beta, cache))
+            out.append((t, phi - 1.0 / tree_density(t)))
+    return out
+
+
+def max_rosenbrock_condition_residual(rtab, order: int,
+                                      embedded: bool = False) -> float:
+    """Largest Rosenbrock order-condition residual over trees of order ≤
+    `order` (embedded=True checks the error-estimator weights b − btilde).
+
+    >>> from repro.core.tableaus import RODAS4, RODAS5P
+    >>> max_rosenbrock_condition_residual(RODAS4, 4) < 1e-12
+    True
+    >>> max_rosenbrock_condition_residual(RODAS5P, 5) < 1e-12
+    True
+    >>> max_rosenbrock_condition_residual(RODAS4, 3, embedded=True) < 1e-12
+    True
+    """
+    res = rosenbrock_order_condition_residuals(rtab, order, embedded)
+    return max(abs(r) for _, r in res)
+
+
+def rosenbrock_consistency_residual(rtab) -> float:
+    """max of |c − rowsum(α)| and |d − rowsum(Γ)| — the autonomization
+    conditions that make the f_t/abscissae data consistent with the
+    autonomous order conditions."""
+    alpha, Gamma, _, _ = rosenbrock_kform(rtab)
+    return float(max(
+        np.max(np.abs(np.asarray(rtab.c) - alpha.sum(axis=1))),
+        np.max(np.abs(np.asarray(rtab.d) - Gamma.sum(axis=1)))))
+
+
 def elementary_weight_matrix(A, c, order: int) -> Tuple[np.ndarray, np.ndarray,
                                                         List[Tree]]:
     """(U, rhs, trees) with U[k] = u(t_k) and rhs[k] = 1/gamma(t_k) for every

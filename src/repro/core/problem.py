@@ -26,6 +26,12 @@ class ODEProblem:
     f: component-style RHS, shape-polymorphic over trailing lane dims.
     u0: (n,) initial condition template.
     p:  (m,) parameter template.
+    jac: optional analytic Jacobian ∂f/∂u, component-style like f: returns
+        (n, n) for u (n,) and broadcasts to (n, n, B) for u (n, B) (build
+        rows with jnp.stack exactly as in f).  Consumed by the stiff
+        (Rosenbrock) engines on every strategy/backend; None means the
+        solvers fall back to forward-mode AD (jacfwd) — the "automated
+        translation" default where users never write Jacobians.
     """
 
     f: Callable[[Array, Array, Array], Array]
@@ -33,6 +39,7 @@ class ODEProblem:
     p: Array
     tspan: Tuple[float, float]
     name: str = "ode"
+    jac: Optional[Callable[[Array, Array, Array], Array]] = None
 
     @property
     def n_states(self) -> int:

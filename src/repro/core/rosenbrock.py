@@ -1,20 +1,32 @@
-"""Rosenbrock23 stiff ensemble solver — beyond-paper feature.
+"""Rosenbrock stiff ensemble engine — tableau-generic W-methods (paper §5.1.3).
 
 The paper (§7) lists stiff ODEs as unsupported by EnsembleGPUKernel and
 describes the enabling primitive (§5.1.3): the block-diagonal W = I - γh·J
-solved as N independent small LU factorizations. We implement exactly that:
-a Rosenbrock-W 2(3) method (Shampine ode23s / OrdinaryDiffEq Rosenbrock23)
-whose per-trajectory Jacobian comes from forward-mode AD (jacfwd — the
-"automated translation" again: users never write Jacobians), and whose linear
-solves go through the batched-LU Pallas kernel in lanes mode
-(`linsolve="pallas"`) or vmapped LAPACK (`"jnp"`).
+solved as N independent small LU factorizations.  This module is the s-stage
+generalization of that idea: ONE engine, driven by a `RosenbrockTableau`
+(`repro.core.tableaus` — implementation-form γ, a, C, b, b̂, c, d), executes
+Rosenbrock23 (2 effective stages), Rodas4 (6) and Rodas5P (8) — and any
+future tableau that passes the Rosenbrock order-condition checker
+(`repro.core.order_conditions`).
+
+Per step the engine factors W = I − γh·J once and back-substitutes s times:
+
+    g_i   = u + Σ_{j<i} a_ij U_j
+    W U_i = γh f(g_i, t + c_i h) + γ Σ_{j<i} C_ij U_j + γ d_i h² f_t
+    u1    = u + Σ b_i U_i,    err = Σ btilde_i U_i
+
+The Jacobian comes from the analytic `jac(u, p, t)` hook when the problem
+supplies one (`ODEProblem.jac`, threaded through MethodSpec dispatch) and
+falls back to forward-mode AD (`jacfwd` — the "automated translation": users
+never *have* to write Jacobians).  Linear solves go through the batched-LU
+Pallas kernel in lanes mode (`linsolve="pallas"`), the kernel *body* inlined
+for fused kernels (`"lanes"`), or vmapped LAPACK (`"jnp"`).
 
 Shape-polymorphic like the RK engine: scalar mode u (n,), lanes mode u (n, B).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,83 +34,165 @@ import jax.numpy as jnp
 from .controller import PIController, hairer_norm, pi_propose
 from .events import Event, handle_event, hermite_interp
 from .solvers import SolveResult
-
-_D = 1.0 / (2.0 + 2.0 ** 0.5)
-_E32 = 6.0 + 2.0 ** 0.5
+from .tableaus import ROS23W, RosenbrockTableau
 
 
-def _jac_lanes(f, u, p, t):
-    """Per-lane Jacobian: u (n, B) -> J (B, n, n) via vmap(jacfwd)."""
-    def f1(u1, p1, t1):
-        return f(u1, p1, t1)
+def _jac_lanes(f, u, p, t, jac=None):
+    """Per-lane Jacobian: u (n, B) -> J (B, n, n).
 
-    return jax.vmap(jax.jacfwd(f1), in_axes=(-1, -1, None))(u, p, t)
+    Analytic hook: component-style `jac(u, p, t)` broadcasts over the lane
+    axis and returns (n, n, B); AD fallback is vmap(jacfwd)."""
+    if jac is not None:
+        return jnp.moveaxis(jac(u, p, t), -1, 0)
+    t_ax = 0 if jnp.ndim(t) else None
+    return jax.vmap(jax.jacfwd(f), in_axes=(-1, -1, t_ax))(u, p, t)
 
 
-def _linsolve(W, rhs, mode, lane_tile):
-    """W (B, n, n), rhs (n, B) -> (n, B) [lanes] or W (n,n), rhs (n,) [scalar].
+def _make_linsolver(W, mode, lane_tile):
+    """Factor W ONCE, return a rhs -> x closure for the s per-stage solves.
 
-    modes: "jnp" (vmapped LAPACK), "pallas" (batched-LU Pallas kernel launch),
-    "lanes" (the LU kernel *body* inlined — no nested pallas_call, used when
-    the whole Rosenbrock integration already runs inside a fused kernel).
-    """
-    if W.ndim == 2:
-        return jnp.linalg.solve(W, rhs)
+    W (n, n) scalar mode or (B, n, n) lanes mode; rhs/x are (n,) resp.
+    (n, B).  modes: "jnp" (LAPACK lu_factor, batched over B), "lanes" (the
+    pivoted LU kernel *body* factored in place — no nested pallas_call, used
+    when the whole Rosenbrock integration already runs inside a fused
+    kernel), "pallas" (batched-LU Pallas kernel launch; one launch per
+    stage — a kernel boundary cannot hold factored state)."""
+    if W.ndim == 2 or mode == "jnp" or mode is None:
+        lu_piv = jax.scipy.linalg.lu_factor(W)      # batched over leading dim
+        if W.ndim == 2:
+            return lambda rhs: jax.scipy.linalg.lu_solve(lu_piv, rhs)
+        return lambda rhs: jax.scipy.linalg.lu_solve(
+            lu_piv, rhs.T[..., None])[..., 0].T
+    if mode == "lanes":
+        from repro.kernels.lu.kernel import lu_factor_lanes, lu_resolve_lanes
+        fac = lu_factor_lanes(jnp.moveaxis(W, 0, -1))
+        return lambda rhs: lu_resolve_lanes(fac, rhs)
     if mode == "pallas":
         from repro.kernels.lu.ops import batched_solve
-        x = batched_solve(W, rhs.T, lane_tile=lane_tile)  # (B, n)
-        return x.T
-    if mode == "lanes":
-        from repro.kernels.lu.kernel import lu_solve_lanes
-        return lu_solve_lanes(jnp.moveaxis(W, 0, -1), rhs)
-    return jnp.linalg.solve(W, rhs.T[..., None])[..., 0].T
+        return lambda rhs: batched_solve(W, rhs.T, lane_tile=lane_tile).T
+    raise ValueError(f"unknown linsolve mode {mode!r}")
 
 
-def rosenbrock23_step(f, u, p, t, dt, *, lanes=False, linsolve="jnp",
-                      lane_tile=128):
-    """One Rosenbrock23 step. Returns (u_new, err, F0, F2)."""
+def rosenbrock_nf_per_step(rtab: RosenbrockTableau) -> int:
+    """RHS evaluations per step: one per stage, plus f(u1) for Hermite dense
+    output unless the tableau ships interpolation weights or its last stage
+    argument already IS u1 (ROS23W).  Jacobian/f_t AD passes are not counted
+    (same convention as the previous 2-stage engine)."""
+    extra = 0 if (rtab.interp_h is not None or rtab.fnew_from_last_stage) else 1
+    return rtab.stages + extra
+
+
+def rosenbrock_step(f, rtab: RosenbrockTableau, u, p, t, dt, *, lanes=False,
+                    linsolve="jnp", lane_tile=None, jac=None):
+    """One s-stage W-method step.
+
+    Returns (u_new, err, F0, F_new, kds): F_new is f(u_new, t+dt) (reused from
+    the last stage when the tableau is stiffly accurate with g_s = u1, or
+    None when the tableau interpolates from its own stages); kds are the
+    dense-output vectors kd_l = Σ_j interp_h[l, j] U_j (empty tuple if none).
+    """
     dtype = u.dtype
     n = u.shape[0]
+    s = rtab.stages
+    gam = rtab.gamma
+    a, C, d = rtab.a, rtab.C, rtab.d
     dtb = dt if jnp.ndim(dt) == 0 else dt[None]
-    # Jacobian and time-derivative via AD
     if lanes:
-        J = _jac_lanes(f, u, p, t)                      # (B, n, n)
+        J = _jac_lanes(f, u, p, t, jac)                 # (B, n, n)
         eye = jnp.eye(n, dtype=dtype)[None]
-        gam = (dt * _D)[:, None, None] if jnp.ndim(dt) else dt * _D
-        W = eye - gam * J
+        gdt = (dt * gam)[:, None, None] if jnp.ndim(dt) else dt * gam
+        W = eye - gdt * J
     else:
-        J = jax.jacfwd(lambda uu: f(uu, p, t))(u)       # (n, n)
-        W = jnp.eye(n, dtype=dtype) - dt * _D * J
+        J = (jac(u, p, t) if jac is not None
+             else jax.jacfwd(lambda uu: f(uu, p, t))(u))  # (n, n)
+        W = jnp.eye(n, dtype=dtype) - dt * gam * J
     Td = jax.jvp(lambda tt: f(u, p, tt), (t,),
                  (jnp.ones_like(t),))[1]                # df/dt
     F0 = f(u, p, t)
-    k1 = _linsolve(W, F0 + (_D * dtb) * Td, linsolve, lane_tile)
-    F1 = f(u + 0.5 * dtb * k1, p, t + 0.5 * dt)
-    k2 = _linsolve(W, F1 - k1, linsolve, lane_tile) + k1
-    u_new = u + dtb * k2
-    F2 = f(u_new, p, t + dt)
-    k3 = _linsolve(W, F2 - _E32 * (k2 - F1) - 2.0 * (k1 - F0)
-                   + (_D * dtb) * Td, linsolve, lane_tile)
-    err = (dtb / 6.0) * (k1 - 2.0 * k2 + k3)
-    return u_new, err, F0, F2
+    solve = _make_linsolver(W, linsolve, lane_tile)     # ONE factorization
+    Us = []
+    F_last = F0
+    for i in range(s):
+        if i == 0:
+            Fi = F0
+        else:
+            g = u
+            for j in range(i):
+                if a[i, j] != 0.0:
+                    g = g + a[i, j] * Us[j]
+            Fi = f(g, p, t + rtab.c[i] * dt)
+        rhs = (gam * dtb) * Fi
+        for j in range(i):
+            if C[i, j] != 0.0:
+                rhs = rhs + (gam * C[i, j]) * Us[j]
+        if d[i] != 0.0:
+            rhs = rhs + (gam * d[i]) * dtb * dtb * Td
+        Us.append(solve(rhs))
+        F_last = Fi
+    u_new = u
+    err = jnp.zeros_like(u)
+    for i in range(s):
+        if rtab.b[i] != 0.0:
+            u_new = u_new + rtab.b[i] * Us[i]
+        if rtab.btilde[i] != 0.0:
+            err = err + rtab.btilde[i] * Us[i]
+    if rtab.interp_h is not None:
+        kds = tuple(
+            sum((rtab.interp_h[l, j] * Us[j] for j in range(s)
+                 if rtab.interp_h[l, j] != 0.0), jnp.zeros_like(u))
+            for l in range(rtab.interp_h.shape[0]))
+        F_new = None
+    else:
+        kds = ()
+        F_new = (F_last if rtab.fnew_from_last_stage
+                 else f(u_new, p, t + dt))
+    return u_new, err, F0, F_new, kds
 
 
-def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
-                       saveat=None, max_iters=100_000, lanes=False,
-                       linsolve="jnp", lane_tile=128,
-                       controller: Optional[PIController] = None,
-                       event: Optional[Event] = None):
-    """Adaptive Rosenbrock23 with Hermite-cubic dense output.
+def rosenbrock23_step(f, u, p, t, dt, *, lanes=False, linsolve="jnp",
+                      lane_tile=None):
+    """Backwards-compatible ROS23 step. Returns (u_new, err, F0, F2)."""
+    u_new, err, F0, F_new, _ = rosenbrock_step(
+        f, ROS23W, u, p, t, dt, lanes=lanes, linsolve=linsolve,
+        lane_tile=lane_tile)
+    return u_new, err, F0, F_new
 
-    `event` threads the shared event machinery (`repro.core.events`) through
-    the stiff family: detection + bisection refinement run on the
-    Hermite-cubic interpolant the method's dense output already uses, with
-    per-lane termination masks in lanes mode.  When an event is supplied the
-    return value is ``(SolveResult, {"event_t", "event_count"})`` — the same
-    contract as `solve_adaptive`.
+
+def _dense_eval(rtab, th, u_old, u_cand, F0, F_new, kds, dtb):
+    """Dense output at pre-broadcast theta `th` (same rank as the states).
+
+    Stiffly-accurate tableau weights when the tableau ships them:
+        u(θ) = (1−θ)·u0 + θ·u1 + θ(1−θ)·(kd1 + θ·kd2 + ...)
+    else cubic Hermite on (u0, F0, u1, F_new) — the shared basis from
+    `repro.core.events` (lanes=False: th/dtb arrive pre-broadcast)."""
+    if rtab.interp_h is not None:
+        inner = kds[-1]
+        for kd in kds[-2::-1]:
+            inner = kd + th * inner
+        return (1.0 - th) * u_old + th * u_cand + th * (1.0 - th) * inner
+    return hermite_interp(u_old, F0, u_cand, F_new, dtb, th, lanes=False)
+
+
+def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
+                     rtol=1e-6, atol=1e-6, saveat=None, max_iters=100_000,
+                     lanes=False, linsolve="jnp", lane_tile=None, jac=None,
+                     controller: Optional[PIController] = None,
+                     event: Optional[Event] = None):
+    """Adaptive s-stage Rosenbrock solve with dense output.
+
+    `jac` is the analytic-Jacobian hook (component-style (u, p, t) -> (n, n)
+    resp. (n, n, B)); None falls back to `jacfwd`.  `event` threads the shared
+    event machinery (`repro.core.events`) through the stiff family: detection
+    + bisection refinement run on the method's dense output (the tableau's
+    stiffly-accurate interpolant when it ships one, Hermite cubic otherwise)
+    with per-lane termination masks in lanes mode.  When an event is supplied
+    the return value is ``(SolveResult, {"event_t", "event_count"})`` — the
+    same contract as `solve_adaptive`.
     """
     dtype = u0.dtype
-    ctrl = controller or PIController.for_order(3)
+    q = min(rtab.order, rtab.embedded_order)  # order the estimator measures
+    ctrl = controller or PIController.for_order(q)
+    nf_step = rosenbrock_nf_per_step(rtab)
     cshape = (u0.shape[-1],) if lanes else ()
     axes = 0 if lanes else None
     t0 = jnp.asarray(t0, dtype)
@@ -133,9 +227,9 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
         active = ~c["done"]
         dt_step = jnp.where(active, jnp.minimum(dt, tf - t),
                             jnp.asarray(1.0, dtype))
-        u_cand, err, F0, F2 = rosenbrock23_step(
-            f, u, p, t, dt_step, lanes=lanes, linsolve=linsolve,
-            lane_tile=lane_tile)
+        u_cand, err, F0, F_new, kds = rosenbrock_step(
+            f, rtab, u, p, t, dt_step, lanes=lanes, linsolve=linsolve,
+            lane_tile=lane_tile, jac=jac)
         enorm = hairer_norm(err, u, u_cand, atol, rtol, axes=axes)
         finite = jnp.isfinite(u_cand)
         finite = jnp.all(finite, axis=0) if lanes else jnp.all(finite)
@@ -144,11 +238,13 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
                                          accept)
         t_new = jnp.where(accept, t + dt_step, t)
 
-        # ---- events: shared machinery on the Hermite-cubic interpolant -----
+        # ---- events: shared machinery on the method's dense output ---------
         if event is not None:
             def interp_fn(theta):
-                return hermite_interp(u, F0, u_cand, F2, dt_step, theta,
-                                      lanes=lanes)
+                th = theta[None] if lanes else theta
+                return _dense_eval(rtab, th, u, u_cand, F0, F_new, kds,
+                                   dt_step if jnp.ndim(dt_step) == 0
+                                   else dt_step[None])
 
             u_next, t_new, ev_t, ev_n, term = handle_event(
                 event, interp_fn, u, u_cand, p, t, dt_step, t_new, accept,
@@ -160,7 +256,7 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
 
         u_new = jnp.where(_bc(accept), u_next, u)
 
-        # Hermite-cubic grid save
+        # dense-output grid save
         eps = 1e-7 * jnp.maximum(jnp.abs(t_new), 1.0)
         if lanes:
             crossed = ((saveat[:, None] > t[None]) &
@@ -178,12 +274,10 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
             th = theta.reshape(sh)
             dtb = dt_step
             mask = crossed.reshape(sh)
-        h00 = (1 + 2 * th) * (1 - th) ** 2
-        h10 = th * (1 - th) ** 2
-        h01 = th ** 2 * (3 - 2 * th)
-        h11 = th ** 2 * (th - 1)
-        vals = (h00 * u[None] + h10 * dtb * F0[None]
-                + h01 * u_cand[None] + h11 * dtb * F2[None])
+        vals = _dense_eval(rtab, th, u[None], u_cand[None],
+                           None if F0 is None else F0[None],
+                           None if F_new is None else F_new[None],
+                           tuple(kd[None] for kd in kds), dtb)
         us = jnp.where(mask, vals, c["us"])
 
         done = (c["done"] | term
@@ -200,7 +294,20 @@ def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
         ts=saveat, us=out["us"], t_final=out["t"], u_final=out["u"],
         naccept=out["naccept"], nreject=out["nreject"],
         status=jnp.where(out["done"], 0, 1).astype(jnp.int32),
-        nf=(out["naccept"] + out["nreject"]) * 3)
+        nf=(out["naccept"] + out["nreject"]) * nf_step)
     if event is not None:
         return res, dict(event_t=out["event_t"], event_count=out["event_count"])
     return res
+
+
+def solve_rosenbrock23(f, u0, p, t0, tf, dt0, *, rtol=1e-6, atol=1e-6,
+                       saveat=None, max_iters=100_000, lanes=False,
+                       linsolve="jnp", lane_tile=None,
+                       controller: Optional[PIController] = None,
+                       event: Optional[Event] = None):
+    """Rosenbrock23 through the generic engine (backwards-compatible entry)."""
+    return solve_rosenbrock(f, ROS23W, u0, p, t0, tf, dt0, rtol=rtol,
+                            atol=atol, saveat=saveat, max_iters=max_iters,
+                            lanes=lanes, linsolve=linsolve,
+                            lane_tile=lane_tile, controller=controller,
+                            event=event)

@@ -303,3 +303,191 @@ def get_tableau(name: str) -> Tableau:
         return TABLEAUS[name]
     except KeyError:
         raise KeyError(f"unknown tableau {name!r}; have {sorted(TABLEAUS)}")
+
+
+# ============================================================================
+# Rosenbrock (linearly-implicit W-method) tableaus — paper §5.1.3 methods.
+#
+# Implementation form (Hairer-Wanner IV.7 eq. 7.4 / the RODAS code): per step
+# factor W = I - γh·J once, then for each stage i
+#
+#     g_i   = u0 + Σ_{j<i} a_ij U_j
+#     W U_i = γh f(g_i, t + c_i h) + γ Σ_{j<i} C_ij U_j + γ d_i h² f_t
+#     u1    = u0 + Σ b_i U_i,     err = Σ btilde_i U_i
+#
+# This is equivalent to the textbook k-form  k_i = h f(y0 + Σ α_ij k_j)
+# + hJ Σ Γ_ij k_j + h² γ_i f_t  under U = Γk, a = αΓ⁻¹, C = 1/γ·I − Γ⁻¹,
+# b = b_k Γ⁻¹ — the inverse transform is what the order-condition checker
+# (`repro.core.order_conditions.rosenbrock_order_condition_residuals`)
+# applies before evaluating the rooted-tree conditions, so every tableau
+# below is VERIFIED against its claimed order, not trusted:
+#
+# * `ROS23W`  — Shampine's ode23s / OrdinaryDiffEq Rosenbrock23, CONSTRUCTED
+#   here from its k-form (γ = 1/(2+√2), the same constants the previous
+#   hard-coded 2-stage engine used — the generic engine reproduces its steps
+#   to machine precision).  Order 2 with an order-3 embedded companion ŷ = y0 +
+#   h/6·(k1 + 4k2 + k3) (Simpson weights).
+# * `RODAS4`  — Hairer-Wanner's RODAS 4(3): 6 stages, stiffly accurate
+#   (c5 = c6 = 1, err = U_6), L-stable.  All 8 conditions through order 4
+#   hold to ~2e-15; the embedded weights satisfy order 3.  Ships the
+#   stiffly-accurate dense-output weights (interp_h): u(θ) = (1−θ)u0 +
+#   θ(u1 + (1−θ)(kd1 + θ·kd2)), a 3rd-order interpolant built from the
+#   already-computed stages — no extra f evaluation.
+# * `RODAS5P` — Steinebach's Rodas5p 5(4): 8 stages, stiffly accurate,
+#   all 17 conditions through order 5 hold to ~2e-14, embedded order 4.
+#   Dense output falls back to Hermite cubic (this repo does not ship
+#   interpolation weights it cannot verify; the checker would accept a
+#   future drop-in).
+# ============================================================================
+
+
+class RosenbrockTableau(NamedTuple):
+    """Coefficients of an s-stage Rosenbrock W-method (implementation form)."""
+    name: str
+    gamma: float         # the single diagonal γ (one LU factorization/step)
+    a: np.ndarray        # (s, s) strictly lower: stage-argument weights
+    C: np.ndarray        # (s, s) strictly lower: in-solve stage coupling
+    b: np.ndarray        # (s,)  solution weights
+    btilde: np.ndarray   # (s,)  b - bhat (error-estimate weights)
+    c: np.ndarray        # (s,)  abscissae (= row sums of the k-form α)
+    d: np.ndarray        # (s,)  f_t weights (= row sums of the k-form Γ)
+    order: int           # order of the propagated solution
+    embedded_order: int
+    # optional stiffly-accurate dense output: (L, s) weights; row l gives
+    # kd_l = Σ_j interp_h[l, j] U_j and u(θ) = (1-θ)u0 + θ·u1
+    # + θ(1-θ)(kd_1 + θ kd_2 + ...).  None => Hermite cubic (needs f(u1)).
+    interp_h: Optional[np.ndarray] = None
+
+    @property
+    def stages(self) -> int:
+        return len(self.b)
+
+    @property
+    def fnew_from_last_stage(self) -> bool:
+        """True when the last stage argument IS the step solution (g_s = u1,
+        c_s = 1), so f(u1) for Hermite dense output is the stage's own f
+        evaluation — no extra RHS call (holds for ROS23W)."""
+        s = self.stages
+        return (self.b[s - 1] == 0.0 and float(self.c[s - 1]) == 1.0
+                and bool(np.allclose(self.a[s - 1, : s - 1],
+                                     self.b[: s - 1], atol=1e-14)))
+
+
+def _lower(s, rows):
+    M = np.zeros((s, s), np.float64)
+    for i, row in enumerate(rows):
+        M[i + 1, : len(row)] = row
+    return M
+
+
+def _build_ros23w() -> RosenbrockTableau:
+    """ode23s from its k-form: provenance is this transformation, verified by
+    the Rosenbrock order-condition tests and by agreement with the previous
+    hard-coded 2-stage engine to machine precision."""
+    d = 1.0 / (2.0 + np.sqrt(2.0))
+    e32 = 6.0 + np.sqrt(2.0)
+    alpha = np.array([[0.0, 0.0, 0.0], [0.5, 0.0, 0.0], [0.0, 1.0, 0.0]])
+    Gamma = np.array([[d, 0.0, 0.0], [-d, d, 0.0],
+                      [d * (e32 - 2.0), -d * e32, d]])
+    b_k = np.array([0.0, 1.0, 0.0])
+    btilde_k = np.array([-1.0 / 6.0, 1.0 / 3.0, -1.0 / 6.0])  # b - Simpson ŷ
+    Ginv = np.linalg.inv(Gamma)
+    return RosenbrockTableau(
+        name="rosenbrock23", gamma=d, a=alpha @ Ginv,
+        C=np.eye(3) / d - Ginv, b=b_k @ Ginv, btilde=btilde_k @ Ginv,
+        c=alpha.sum(axis=1), d=Gamma.sum(axis=1), order=2, embedded_order=3)
+
+
+ROS23W = _build_ros23w()
+
+
+def _build_rodas4() -> RosenbrockTableau:
+    a51, a52, a53, a54 = (1.221224509226641, 6.019134481288629,
+                          12.53708332932087, -0.6878860361058950)
+    a = _lower(6, [
+        [1.544000000000000],
+        [0.9466785280815826, 0.2557011698983284],
+        [3.314825187068521, 2.896124015972201, 0.9986419139977817],
+        [a51, a52, a53, a54],
+        [a51, a52, a53, a54, 1.0],          # g6 = g5-solution + U5
+    ])
+    C = _lower(6, [
+        [-5.668800000000000],
+        [-2.430093356833875, -0.2063599157091915],
+        [-0.1073529058151375, -9.594562251023355, -20.47028614809616],
+        [7.496443313967647, -10.24680431464352, -33.99990352819905,
+         11.70890893206160],
+        [8.083246795921522, -7.981132988064893, -31.52159432874371,
+         16.31930543123136, -6.058818238834054],
+    ])
+    b = np.array([a51, a52, a53, a54, 1.0, 1.0])   # stiffly accurate
+    btilde = np.array([0.0, 0.0, 0.0, 0.0, 0.0, 1.0])   # err = U_6
+    interp_h = np.array([
+        [10.12623508344586, -7.487995877610167, -34.80091861555747,
+         -7.992771707568823, 1.025137723295662, 0.0],
+        [-0.6762803392801253, 6.087714651680015, 16.43084320892478,
+         24.76722511418386, -6.594389125716872, 0.0],
+    ])
+    return RosenbrockTableau(
+        name="rodas4", gamma=0.25, a=a, C=C, b=b, btilde=btilde,
+        c=np.array([0.0, 0.386, 0.21, 0.63, 1.0, 1.0]),
+        d=np.array([0.25, -0.1043, 0.1035, -0.03620000000000023, 0.0, 0.0]),
+        order=4, embedded_order=3, interp_h=interp_h)
+
+
+RODAS4 = _build_rodas4()
+
+
+def _build_rodas5p() -> RosenbrockTableau:
+    a61, a62, a63, a64, a65 = (-7.502846399306121, 2.561846144803919,
+                               -11.627539656261098, -0.18268767659942256,
+                               0.030198172008377946)
+    a = _lower(8, [
+        [3.0],
+        [2.849394379747939, 0.45842242204463923],
+        [-6.954028509809101, 2.489845061869568, -10.358996098473584],
+        [2.8029986275628964, 0.5072464736228206, -0.3988312541770524,
+         -0.04721187230404641],
+        [a61, a62, a63, a64, a65],
+        [a61, a62, a63, a64, a65, 1.0],
+        [a61, a62, a63, a64, a65, 1.0, 1.0],
+    ])
+    C = _lower(8, [
+        [-14.155112264123755],
+        [-17.97296035885952, -2.859693295451294],
+        [147.12150275711716, -1.41221402718213, 71.68940251302358],
+        [165.43517024871676, -0.4592823456491126, 42.90938336958603,
+         -5.961986721573306],
+        [24.854864614690072, -3.0009227002832186, 47.4931110020768,
+         5.5814197821558125, -0.6610691825249471],
+        [30.91273214028599, -3.1208243349937974, 77.79954646070892,
+         34.28646028294783, -19.097331116725623, -28.087943162872662],
+        [37.80277123390563, -3.2571969029072276, 112.26918849496327,
+         66.9347231244047, -40.06618937091002, -54.66780262877968,
+         -9.48861652309627],
+    ])
+    b = np.array([a61, a62, a63, a64, a65, 1.0, 1.0, 1.0])
+    btilde = np.array([0.0] * 7 + [1.0])           # err = U_8
+    return RosenbrockTableau(
+        name="rodas5p", gamma=0.21193756319429014, a=a, C=C, b=b,
+        btilde=btilde,
+        c=np.array([0.0, 0.6358126895828704, 0.4095798393397535,
+                    0.9769306725060716, 0.4288403609558664, 1.0, 1.0, 1.0]),
+        d=np.array([0.21193756319429014, -0.42387512638858027,
+                    -0.3384627126235924, 1.8046452872882734,
+                    2.325825639765069, 0.0, 0.0, 0.0]),
+        order=5, embedded_order=4, interp_h=None)
+
+
+RODAS5P = _build_rodas5p()
+
+
+ROSENBROCK_TABLEAUS = {t.name: t for t in [ROS23W, RODAS4, RODAS5P]}
+
+
+def get_rosenbrock_tableau(name: str) -> RosenbrockTableau:
+    try:
+        return ROSENBROCK_TABLEAUS[name]
+    except KeyError:
+        raise KeyError(f"unknown Rosenbrock tableau {name!r}; "
+                       f"have {sorted(ROSENBROCK_TABLEAUS)}")

@@ -69,9 +69,10 @@ def erk_work_words(n_state: int, n_param: int, stages: int) -> int:
     return (stages + 4) * n_state + n_param + 16
 
 
-def rosenbrock_work_words(n_state: int, n_param: int) -> int:
-    # J and W are (n, n) PER LANE — the dominant term for stiff kernels.
-    return 2 * n_state * n_state + 8 * n_state + n_param + 16
+def rosenbrock_work_words(n_state: int, n_param: int, stages: int = 2) -> int:
+    # J and W are (n, n) PER LANE — the dominant term for stiff kernels —
+    # plus one stage vector U_i per tableau stage (Rodas5P carries 8).
+    return (2 * n_state * n_state + (stages + 6) * n_state + n_param + 16)
 
 
 def sde_work_words(n_state: int, n_param: int, m_noise: int) -> int:
@@ -234,19 +235,23 @@ def erk_body(f, tab, *, t0: float, tf: float, dt0: float, rtol: float,
     return body
 
 
-def rosenbrock_body(f, *, t0: float, tf: float, dt0: float, rtol: float,
-                    atol: float, max_iters: int, event=None):
-    """Rosenbrock23 stiff integration with the batched-LU W-solves *inlined*
-    (linsolve="lanes": paper §5.1.3 inside the fused kernel).  Events run the
-    shared per-lane machinery (`repro.core.events`) inside the fused loop.
-    extras[0] = saveat grid (S,)."""
-    from repro.core.rosenbrock import solve_rosenbrock23
+def rosenbrock_body(f, rtab, *, jac=None, t0: float, tf: float, dt0: float,
+                    rtol: float, atol: float, max_iters: int, event=None):
+    """s-stage Rosenbrock stiff integration (any `RosenbrockTableau`:
+    Rosenbrock23 / Rodas4 / Rodas5P) with the batched-LU W-solves *inlined*
+    (linsolve="lanes": paper §5.1.3 inside the fused kernel, lanes-wide
+    partial pivoting).  `jac` is the analytic-Jacobian hook (None: jacfwd
+    inside the kernel).  Events run the shared per-lane machinery
+    (`repro.core.events`) inside the fused loop.  extras[0] = saveat grid
+    (S,)."""
+    from repro.core.rosenbrock import solve_rosenbrock
 
     def body(ctx, u0, p, extras):
         saveat_v = extras[0]
-        res = solve_rosenbrock23(f, u0, p, t0, tf, dt0, rtol=rtol, atol=atol,
-                                 saveat=saveat_v, max_iters=max_iters,
-                                 lanes=True, linsolve="lanes", event=event)
+        res = solve_rosenbrock(f, rtab, u0, p, t0, tf, dt0, rtol=rtol,
+                               atol=atol, saveat=saveat_v,
+                               max_iters=max_iters, lanes=True,
+                               linsolve="lanes", jac=jac, event=event)
         if event is not None:
             res, _ = res
         stats = jnp.stack([res.naccept, res.nreject, res.status, res.nf])

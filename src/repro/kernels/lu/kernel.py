@@ -1,13 +1,22 @@
 """Batched small-matrix LU solve (paper §5.1.3): W x = b for N independent
-systems, W = -γI + J block-diagonal over the ensemble.
+systems, W = I - γh·J block-diagonal over the ensemble.
 
 TPU mapping: lanes are systems — W is laid out (n, n, LANES) so every
 elimination/back-substitution scalar op is a (LANES,)-wide vector op; the
 whole factorization is an unrolled register-level computation per tile with
 zero HBM traffic between steps (the GPU version's per-thread LU in registers).
-No pivoting: the paper's W = -γI + J systems are diagonally dominated for the
-step sizes where stiff solvers operate (standard in Rosenbrock GPU solvers);
-the ops-layer falls back to the jnp reference on singular pivots.
+
+Pivoting: partial (row) pivoting, lanes-wide — at elimination step k every
+lane independently selects its own pivot row by max |column-k| magnitude and
+the swap is a masked select, so the factorization stays a branch-free vector
+computation.  This is what keeps non-diagonally-dominant W = I − γh·J systems
+(large γh·J entries off the diagonal) from silently producing NaNs; the
+`pivot=False` escape hatch preserves the old no-pivot behaviour for
+diagonally-dominant fast paths and for tests that demonstrate the failure
+mode.  A pivot that is exactly zero after row selection means the lane's
+matrix is numerically singular: the kernel reports min-|pivot| per lane and
+the ops layer (`repro.kernels.lu.ops.batched_solve`) falls back to the jnp
+reference solve for exactly those systems.
 """
 from __future__ import annotations
 
@@ -16,25 +25,59 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def lu_solve_lanes(W, b):
-    """Pure lanes-mode LU solve: W (n, n, B), b (n, B) -> x (n, B).
+def lu_factor_lanes(W, pivot=True):
+    """Lanes-mode LU factorization: W (n, n, B) -> opaque factor tuple.
 
-    Unrolled no-pivot Gaussian elimination; every scalar op is a (B,)-wide
-    vector op.  This is the kernel *body* — it runs both under `pallas_call`
-    (below) and inlined inside other fused kernels (the Rosenbrock ensemble
-    kernel calls it per step for the W = I - γh·J solves, paper §5.1.3).
+    Unrolled Gaussian elimination with lanes-wide partial pivoting; every
+    scalar op is a (B,)-wide vector op.  Returns (rows, swaps, mults,
+    pivmin): the eliminated rows (upper triangle), the per-step pivot-row
+    selections and elimination multipliers (everything `lu_resolve_lanes`
+    needs to replay the factorization on a new right-hand side in O(n²)
+    per lane), and the per-lane minimum |pivot| (0 or NaN ⇔ singular).
+    The Rosenbrock engine factors W = I − γh·J ONCE per step and
+    back-substitutes once per stage (paper §5.1.3 / Hairer-Wanner IV.7).
     """
     n = W.shape[0]
     rows = [W[i] for i in range(n)]   # each (n, B)
-    rhs = [b[i] for i in range(n)]    # each (B,)
-    # forward elimination (unrolled; every op is lane-vectorized)
+    swaps = []                        # per step k: pivot row index (B,)
+    mults = []                        # per step k: multipliers for rows k+1..
+    pivmin = jnp.full(W.shape[-1:], jnp.inf, W.dtype)
     for k in range(n):
+        if pivot and k < n - 1:
+            # per-lane pivot row: argmax |column k| over rows k..n-1
+            mag = jnp.stack([jnp.abs(rows[i][k]) for i in range(k, n)])
+            piv = jnp.argmax(mag, axis=0) + k          # (B,)
+            for i in range(k + 1, n):
+                sel_r = (piv == i)[None]
+                rows[k], rows[i] = (jnp.where(sel_r, rows[i], rows[k]),
+                                    jnp.where(sel_r, rows[k], rows[i]))
+            swaps.append(piv)
+        pivmin = jnp.minimum(pivmin, jnp.abs(rows[k][k]))
         inv = 1.0 / rows[k][k]
+        mk = []
         for i in range(k + 1, n):
             m = rows[i][k] * inv
             rows[i] = rows[i] - m * rows[k]
-            rhs[i] = rhs[i] - m * rhs[k]
-    # back substitution
+            mk.append(m)
+        mults.append(mk)
+    return rows, swaps, mults, pivmin
+
+
+def lu_resolve_lanes(fac, b):
+    """Back-substitution against a `lu_factor_lanes` factorization:
+    b (n, B) -> x (n, B), replaying the stored row swaps and multipliers."""
+    rows, swaps, mults, _ = fac
+    n = len(rows)
+    rhs = [b[i] for i in range(n)]    # each (B,)
+    for k in range(n):
+        if swaps and k < n - 1:
+            piv = swaps[k]
+            for i in range(k + 1, n):
+                sel = piv == i
+                rhs[k], rhs[i] = (jnp.where(sel, rhs[i], rhs[k]),
+                                  jnp.where(sel, rhs[k], rhs[i]))
+        for i in range(k + 1, n):
+            rhs[i] = rhs[i] - mults[k][i - k - 1] * rhs[k]
     xs = [None] * n
     for i in reversed(range(n)):
         acc = rhs[i]
@@ -44,15 +87,41 @@ def lu_solve_lanes(W, b):
     return jnp.stack(xs)
 
 
-def build_lu_kernel(n: int):
-    def kernel(W_ref, b_ref, x_ref):
-        x_ref[...] = lu_solve_lanes(W_ref[...], b_ref[...])
+def lu_solve_lanes(W, b, pivot=True, with_pivmin=False):
+    """One-shot lanes-mode LU solve: W (n, n, B), b (n, B) -> x (n, B).
+
+    `lu_factor_lanes` + `lu_resolve_lanes` in one call.  This is the kernel
+    *body* — it runs both under `pallas_call` (below) and inlined inside
+    other fused kernels.  with_pivmin=True additionally returns the per-lane
+    minimum |pivot| encountered (0 or NaN ⇔ singular system).
+    """
+    fac = lu_factor_lanes(W, pivot=pivot)
+    x = lu_resolve_lanes(fac, b)
+    if with_pivmin:
+        return x, fac[3]
+    return x
+
+
+def build_lu_kernel(n: int, pivot: bool = True):
+    def kernel(W_ref, b_ref, x_ref, pivmin_ref):
+        x, pivmin = lu_solve_lanes(W_ref[...], b_ref[...], pivot=pivot,
+                                   with_pivmin=True)
+        x_ref[...] = x
+        pivmin_ref[...] = pivmin[None]
 
     return kernel
 
 
-def lu_solve_pallas(W_lanes, b_lanes, lane_tile=128, interpret=None):
-    """W_lanes (n, n, N), b_lanes (n, N) -> x (n, N). N % lane_tile == 0."""
+def lu_solve_pallas(W_lanes, b_lanes, lane_tile=128, interpret=None,
+                    pivot=True):
+    """W_lanes (n, n, N), b_lanes (n, N) -> (x (n, N), pivmin (N,)).
+
+    N % lane_tile == 0.  pivmin is the per-system minimum |pivot| — 0 (or
+    NaN, once a zero pivot has poisoned the remaining elimination rows)
+    marks a singular system whose x column is garbage (inf/nan); the ops
+    layer tests ~(pivmin > 0) to route those systems to the jnp reference
+    solve.
+    """
     n = W_lanes.shape[0]
     N = W_lanes.shape[-1]
     assert W_lanes.shape == (n, n, N) and b_lanes.shape == (n, N)
@@ -62,11 +131,14 @@ def lu_solve_pallas(W_lanes, b_lanes, lane_tile=128, interpret=None):
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     fn = pl.pallas_call(
-        build_lu_kernel(n),
+        build_lu_kernel(n, pivot),
         grid=(T,),
         in_specs=[pl.BlockSpec((n, n, B), lambda i: (0, 0, i)),
                   pl.BlockSpec((n, B), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((n, B), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n, N), W_lanes.dtype),
+        out_specs=[pl.BlockSpec((n, B), lambda i: (0, i)),
+                   pl.BlockSpec((1, B), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((n, N), W_lanes.dtype),
+                   jax.ShapeDtypeStruct((1, N), W_lanes.dtype)],
         interpret=interpret)
-    return fn(W_lanes, b_lanes)
+    x, pivmin = fn(W_lanes, b_lanes)
+    return x, pivmin[0]

@@ -1,4 +1,12 @@
-"""Public batched-LU entry: (N, n, n) systems; pads the batch, picks backend."""
+"""Public batched-LU entry: (N, n, n) systems; pads the batch, picks backend.
+
+`lane_tile=None` derives the tile from the same VMEM-budget formula the
+ensemble kernel uses (paper §5.2, `repro.kernels.ensemble_kernel
+.auto_lane_tile`) so large-`n` systems shrink the tile instead of blowing
+VMEM; singular systems (a pivot that is exactly zero even after partial
+pivoting) are detected from the kernel's per-lane min-|pivot| output and
+routed to the jnp reference solve.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,11 +15,30 @@ import jax.numpy as jnp
 from .kernel import lu_solve_pallas
 
 
-def batched_solve(W, b, lane_tile=128, backend="pallas", interpret=None):
-    """Solve W[i] x[i] = b[i] for all i. W (N, n, n), b (N, n) -> (N, n)."""
+def lu_lane_tile(n: int, itemsize: int = 4) -> int:
+    """§5.2 VMEM-budget tile for a standalone batched LU: per-lane words are
+    the W block (n²) + factorization copy (n²) + rhs/x/scratch (≈4n)."""
+    from repro.kernels.ensemble_kernel import auto_lane_tile
+    return auto_lane_tile(n, 0, 0, itemsize=itemsize,
+                          work_words=2 * n * n + 4 * n)
+
+
+def batched_solve(W, b, lane_tile=None, backend="pallas", interpret=None,
+                  pivot=True):
+    """Solve W[i] x[i] = b[i] for all i. W (N, n, n), b (N, n) -> (N, n).
+
+    Partial (row) pivoting is on by default; systems whose pivot is exactly
+    zero even after pivoting (numerically singular) fall back to the jnp
+    reference solve, so the kernel's contract matches its docstring.
+    `lane_tile=None` picks the VMEM-budget-aware tile (`lu_lane_tile`).
+    """
     N, n, _ = W.shape
     if backend == "jnp":
         return jnp.linalg.solve(W, b[..., None])[..., 0]
+    if lane_tile is None:
+        from repro.kernels.ensemble_kernel import LANE_WIDTH
+        lane_tile = min(lu_lane_tile(n, W.dtype.itemsize),
+                        -(-N // LANE_WIDTH) * LANE_WIDTH)
     pad = (-N) % lane_tile
     Wl = jnp.moveaxis(W, 0, -1)          # (n, n, N)
     bl = b.T                             # (n, N)
@@ -20,5 +47,17 @@ def batched_solve(W, b, lane_tile=128, backend="pallas", interpret=None):
                                (n, n, pad))
         Wl = jnp.concatenate([Wl, eye], axis=-1)
         bl = jnp.concatenate([bl, jnp.zeros((n, pad), b.dtype)], axis=-1)
-    x = lu_solve_pallas(Wl, bl, lane_tile=lane_tile, interpret=interpret)
-    return x.T[:N]
+    x, pivmin = lu_solve_pallas(Wl, bl, lane_tile=lane_tile,
+                                interpret=interpret, pivot=pivot)
+    x = x.T[:N]
+    # a zero pivot mid-elimination poisons the later rows (inf·0 = NaN), so
+    # the reported min-|pivot| of a singular lane is 0 OR NaN — ~(pivmin > 0)
+    # catches both (`pivmin == 0` alone would miss the NaN case)
+    singular = ~(pivmin[:N] > 0.0)
+
+    def _with_fallback(_):
+        ref = jnp.linalg.solve(W, b[..., None])[..., 0]
+        return jnp.where(singular[:, None], ref, x)
+
+    return jax.lax.cond(jnp.any(singular), _with_fallback, lambda _: x,
+                        operand=None)
