@@ -1,9 +1,17 @@
-"""Adaptive vs fixed-dt SDE stepping (this repo's beyond-paper feature).
+"""Adaptive vs fixed-dt SDE stepping, and embedded-pair vs step-doubling
+error estimation (ISSUE 4 tentpole economics).
 
-Measures the cost/benefit of embedded step-doubling control with
-virtual-Brownian-tree noise against the paper's fixed-dt kernels on the GBM
-ensemble: wall time, RHS-evaluation work (nf), and pathwise strong error
-against the closed-form GBM solution driven by the SAME Brownian path.
+Measures, on the GBM ensemble:
+  * the paper's fixed-dt kernels (baseline cost);
+  * an embedded-vs-doubling WORK-PRECISION sweep: for each estimator, wall
+    time, drift-evaluation work (nf) and pathwise strong error against the
+    closed-form GBM solution driven by the SAME virtual-Brownian-tree path;
+  * the matched-accuracy comparison: for every accuracy step doubling
+    reaches, the nf the embedded pair needs for the same strong error
+    (log-log interpolation along its work-precision curve) — the ISSUE 4
+    acceptance bar is nf_doubling / nf_embedded >= 1.5 somewhere on the
+    sweep, i.e. the pair does the same job with >= 1.5x fewer RHS/noise
+    evaluations.
 
 Writes a machine-readable record to results/BENCH_adaptive_sde.json so CI
 and future PRs can diff the numbers.
@@ -11,6 +19,7 @@ and future PRs can diff the numbers.
 from __future__ import annotations
 
 import json
+import math
 import os
 
 import jax
@@ -19,12 +28,13 @@ import numpy as np
 
 from repro.core import EnsembleProblem, solve_ensemble_local
 from repro.configs.de_problems import gbm_problem
-from repro.core.sde import default_bridge_depth
 from repro.kernels.rng import brownian_bridge_point
 
 from .common import HEADER, bench, row
 
 R, V, N, SEED = 1.5, 0.2, 1024, 7
+DEPTH = 14           # deep enough that no sweep point sits on the dyadic floor
+RTOLS = (1e-2, 1e-3, 1e-4)
 
 
 def _exact_endpoint(depth, dtype):
@@ -34,6 +44,18 @@ def _exact_endpoint(depth, dtype):
     WT = brownian_bridge_point(SEED, jnp.full((n, N), 2 ** depth), lanes,
                                rows, depth=depth, t_total=1.0, dtype=dtype)
     return 0.1 * np.exp((R - 0.5 * V * V) + V * np.asarray(WT)).T  # (N, n)
+
+
+def _nf_at(err_target, points):
+    """nf needed for err_target, log-log interpolated along (nf, err) points."""
+    pts = sorted(points, key=lambda x: x[1])
+    for (nf1, e1), (nf0, e0) in zip(pts, pts[1:]):
+        if e1 <= err_target <= e0:
+            s = ((math.log(nf1) - math.log(nf0))
+                 / (math.log(e1) - math.log(e0)))
+            return math.exp(math.log(nf0)
+                            + s * (math.log(err_target) - math.log(e0)))
+    return None
 
 
 def main() -> None:
@@ -48,11 +70,12 @@ def main() -> None:
                                     dt0=1.0 / n_steps, n_steps=n_steps,
                                     save_every=n_steps, seed=SEED)
 
-    def adaptive(rtol):
+    def adaptive(rtol, est):
         return solve_ensemble_local(ep, alg="em", ensemble="kernel",
                                     backend="xla", t0=0.0, tf=1.0, dt0=0.02,
                                     adaptive=True, rtol=rtol, atol=rtol * 1e-2,
-                                    seed=SEED)
+                                    seed=SEED, error_est=est,
+                                    brownian_depth=DEPTH)
 
     for n_steps in (200, 1000):
         f = jax.jit(lambda ns=n_steps: fixed(ns).u_final)
@@ -62,28 +85,54 @@ def main() -> None:
         records[f"fixed_n{n_steps}"] = {
             "seconds": t, "nf": int(fixed(n_steps).nf)}
 
-    depth = default_bridge_depth(0.0, 1.0, 0.02)
-    exact = _exact_endpoint(depth, jnp.float32)
-    for rtol in (1e-2, 1e-3, 1e-4):
-        f = jax.jit(lambda r=rtol: adaptive(r).u_final)
-        t = bench(f)
-        res = adaptive(rtol)
-        strong = float(np.sqrt(np.mean(
-            (np.asarray(res.u_final) - exact) ** 2)))
-        print(row(f"adaptive_sde/adaptive/rtol={rtol:g}", t,
-                  f"nf={int(res.nf)} strong_rmse={strong:.2e} "
-                  f"naccept_mean={float(np.mean(np.asarray(res.naccept))):.0f}"))
-        records[f"adaptive_rtol{rtol:g}"] = {
-            "seconds": t, "nf": int(res.nf), "strong_rmse": strong,
-            "naccept_mean": float(np.mean(np.asarray(res.naccept))),
-            "nreject_total": int(np.sum(np.asarray(res.nreject))),
-            "brownian_depth": depth}
+    exact = _exact_endpoint(DEPTH, jnp.float32)
+    curves = {}
+    for est in ("embedded", "doubling"):
+        curves[est] = []
+        for rtol in RTOLS:
+            f = jax.jit(lambda r=rtol, e=est: adaptive(r, e).u_final)
+            t = bench(f)
+            res = adaptive(rtol, est)
+            strong = float(np.sqrt(np.mean(
+                (np.asarray(res.u_final) - exact) ** 2)))
+            nf = int(res.nf)
+            print(row(f"adaptive_sde/{est}/rtol={rtol:g}", t,
+                      f"nf={nf} strong_rmse={strong:.2e} naccept_mean="
+                      f"{float(np.mean(np.asarray(res.naccept))):.0f}"))
+            records[f"{est}_rtol{rtol:g}"] = {
+                "seconds": t, "nf": nf, "strong_rmse": strong,
+                "naccept_mean": float(np.mean(np.asarray(res.naccept))),
+                "nreject_total": int(np.sum(np.asarray(res.nreject))),
+                "brownian_depth": DEPTH}
+            curves[est].append((nf, strong))
+
+    # matched-accuracy work ratio: at each accuracy DOUBLING achieves, how
+    # much work does the EMBEDDED pair need? (the ISSUE 4 acceptance metric)
+    matched = []
+    for (nf_d, err_d), rtol in zip(curves["doubling"], RTOLS):
+        nf_e = _nf_at(err_d, curves["embedded"])
+        if nf_e is None:
+            continue
+        matched.append({"doubling_rtol": rtol, "strong_rmse": err_d,
+                        "nf_doubling": nf_d,
+                        "nf_embedded_interp": round(nf_e),
+                        "nf_ratio": round(nf_d / nf_e, 3)})
+        print(row(f"adaptive_sde/matched/rmse={err_d:.2e}", 0.0,
+                  f"nf_doubling={nf_d} nf_embedded~{nf_e:.0f} "
+                  f"ratio={nf_d / nf_e:.2f}"))
+    best = max((m["nf_ratio"] for m in matched), default=None)
+    summary = {"criterion": "embedded needs >=1.5x fewer drift evals than "
+                            "doubling at matched strong error",
+               "best_nf_ratio": best,
+               "pass": bool(best is not None and best >= 1.5)}
 
     os.makedirs("results", exist_ok=True)
     out = os.path.join("results", "BENCH_adaptive_sde.json")
     with open(out, "w") as fp:
         json.dump({"N": N, "problem": "gbm(r=1.5,v=0.2)", "seed": SEED,
-                   "records": records}, fp, indent=2, sort_keys=True)
+                   "brownian_depth": DEPTH, "records": records,
+                   "matched": matched, "summary": summary},
+                  fp, indent=2, sort_keys=True)
     print(f"# wrote {out}")
 
 

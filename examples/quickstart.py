@@ -83,11 +83,15 @@ res = solve_ensemble_local(sde_ens, alg="em", ensemble="kernel", dt0=1e-3,
 print(f"em kernel: E[X(1)] = {float(res.u_final[:, 0].mean()):.4f} "
       f"(exact {0.1 * jnp.exp(1.5):.4f})")
 
-# --- SDE with events + adaptive dt (this PR's tentpole) --------------------
+# --- SDE with events + adaptive dt --------------------------------------
 # Barrier-hitting with per-trajectory adaptive steps: each path integrates
-# with its own embedded-error-controlled dt (rejection-safe virtual-Brownian-
-# tree noise, bitwise-identical on every strategy/backend) and terminates the
-# moment it crosses the barrier; t_final records the located hitting time.
+# with its own error-controlled dt and terminates the moment it crosses the
+# barrier; t_final records the located hitting time.  The default error
+# estimator is em's EMBEDDED PAIR (EM vs drift-tamed Milstein — one stepper
+# pass per attempt); error_est="doubling" selects step doubling (~3x the
+# stepper cost) for A/B comparison.  Either way the noise is the
+# rejection-safe virtual Brownian tree, so trajectories are
+# bitwise-identical on every strategy/backend.
 from repro.core import Event
 
 barrier = Event(condition=lambda u, p, t: u[0] - 0.25, terminal=True,
@@ -100,9 +104,16 @@ res = solve_ensemble_local(hit_ens, alg="em", ensemble="kernel",
                            backend="xla", dt0=0.02, adaptive=True,
                            rtol=1e-3, atol=1e-5, seed=7, event=barrier,
                            saveat=jnp.linspace(0.1, 1.0, 10))
+res_dbl = solve_ensemble_local(hit_ens, alg="em", ensemble="kernel",
+                               backend="xla", dt0=0.02, adaptive=True,
+                               rtol=1e-3, atol=1e-5, seed=7, event=barrier,
+                               error_est="doubling",
+                               saveat=jnp.linspace(0.1, 1.0, 10))
 hit = res.t_final < 1.0
 t_hit = jnp.where(hit, res.t_final, 0).sum() / jnp.maximum(hit.sum(), 1)
 print(f"\nadaptive em + barrier event: {int(hit.sum())}/512 paths hit X=0.25,"
       f"\n  mean hitting time {float(t_hit):.3f},"
       f"\n  per-path steps min/max = {int(res.naccept.min())}/{int(res.naccept.max())}"
-      f" (per-trajectory adaptive dt), rejects = {int(res.nreject.sum())}")
+      f" (per-trajectory adaptive dt), rejects = {int(res.nreject.sum())},"
+      f"\n  drift evals: embedded pair {int(res.nf)} vs step doubling "
+      f"{int(res_dbl.nf)} ({float(res_dbl.nf) / float(res.nf):.1f}x)")

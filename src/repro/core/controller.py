@@ -17,6 +17,13 @@ class PIController(NamedTuple):
     dt_new = dt * clip(safety * err^(-beta1) * err_prev^(beta2), qmin, qmax)
     Defaults follow the OrdinaryDiffEq convention beta1 = 7/(10k), beta2 = 2/(5k)
     with k = embedded_order + 1 (scaled-error exponent).
+
+    For the adaptive SDE engine, `for_order` receives the dt-order of the
+    ERROR ESTIMATOR: an embedded pair passes its `EmbeddedPair.est_order`
+    (1 for both shipped pairs), step doubling passes the stepper's rounded
+    strong order `max(1, round(order))` (1 for em/heun_strat, 2 for
+    platen_w2) — see `repro.core.sde.SDE_EMBEDDED` and
+    `sde_solve_adaptive(est_order=...)`.
     """
 
     beta1: float

@@ -36,8 +36,10 @@ docs/architecture.md):
                 inlined inside the Pallas kernel; events on every path.
   sde         — "vmap", "array" and "kernel" (xla/pallas); fixed-dt
                 counter-RNG steppers (§5.2.2) or, with adaptive=True,
-                embedded step-doubling control driven by a virtual Brownian
-                tree (rejection-safe noise). Pass `seed=` (or `key=`) — the
+                per-trajectory error control driven by a virtual Brownian
+                tree (rejection-safe noise): an embedded pair where one is
+                registered (error_est="embedded", the default) or step
+                doubling (error_est="doubling"). Pass `seed=` (or `key=`) — the
                 SAME (seed; step, row, GLOBAL lane) Threefry stream is
                 replayed on every strategy/backend, so paths agree bitwise
                 across dispatch targets (and across mesh shards via
@@ -419,7 +421,7 @@ def _concrete_seed(seed):
 def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                backend, t0, tf, dt0, saveat, n_steps, save_every, lane_tile,
                key, seed, noise_table, event, adaptive, rtol, atol, max_iters,
-               lane_offset, brownian_depth):
+               lane_offset, brownian_depth, error_est):
     from .sde import (SDE_STEPPERS, default_bridge_depth, sde_event_state0,
                       sde_nf_per_step, sde_save_grid, sde_solve_adaptive,
                       sde_step_and_save, sde_step_save_event)
@@ -434,6 +436,10 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
         raise ValueError(
             f"method {spec.name!r} has no adaptive step control; "
             "pass adaptive=False or pick an adaptive-capable stepper")
+    if not adaptive and error_est is not None:
+        raise ValueError(
+            "error_est selects the adaptive SDE error estimator; it has no "
+            "meaning for fixed-dt stepping (pass adaptive=True)")
     if seed is None:
         # keep the seed traceable (jit-able) on the XLA paths; the Pallas
         # kernel bakes it into the kernel closure and concretizes below
@@ -443,12 +449,32 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
     stepper = SDE_STEPPERS[spec.name]
     nf_per_step = sde_nf_per_step(spec.name)
 
-    # ---- adaptive: embedded step-doubling error + virtual Brownian tree ----
+    # ---- adaptive: embedded-pair / step-doubling error + Brownian tree ----
     if adaptive:
         if noise_table is not None:
             raise NotImplementedError(
                 "adaptive SDE draws from the virtual Brownian tree; "
                 "noise_table injection is fixed-dt only")
+        # estimator resolution: the registered embedded pair is the default
+        # wherever it applies (diagonal noise); doubling everywhere else, and
+        # always available explicitly for A/B comparison.
+        if error_est is None:
+            error_est = ("embedded"
+                         if ("embedded" in spec.error_est
+                             and prob.noise == "diagonal") else "doubling")
+        if error_est not in spec.error_est:
+            raise ValueError(
+                f"method {spec.name!r} supports error_est {spec.error_est}, "
+                f"got {error_est!r}")
+        if error_est == "embedded" and prob.noise != "diagonal":
+            raise ValueError(
+                "embedded SDE pairs are diagonal-noise only (Levy-area-free "
+                "estimators); pass error_est='doubling' for general noise")
+        pair = spec.embedded if error_est == "embedded" else None
+        est_order = (pair.est_order if pair is not None
+                     else max(1, int(round(spec.order))))
+        nf_att = (pair.nf_per_attempt if pair is not None
+                  else 3 * nf_per_step)
         depth = (brownian_depth if brownian_depth is not None
                  else default_bridge_depth(t0, tf, dt0))
         if saveat is None:
@@ -456,7 +482,10 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
         saveat = jnp.asarray(saveat, u0s.dtype)
         kw = dict(seed=seed, m_noise=m, saveat=saveat, rtol=rtol, atol=atol,
                   max_iters=max_iters, event=event, depth=depth,
-                  order=spec.order, nf_per_step=nf_per_step)
+                  order=spec.order, nf_per_step=nf_per_step,
+                  error_est=error_est,
+                  embedded=pair.fn if pair is not None else None,
+                  est_order=est_order, nf_per_attempt=nf_att)
 
         if ensemble == "vmap":
             def one(u0, p, lane):
@@ -484,7 +513,9 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                 tf=float(tf), dt0=float(dt0), rtol=float(rtol),
                 atol=float(atol), max_iters=max_iters, m_noise=m,
                 seed=_concrete_seed(seed), depth=depth, order=spec.order,
-                nf_per_step=nf_per_step, event=event)
+                nf_per_step=nf_per_step, event=event, error_est=error_est,
+                embedded=pair.fn if pair is not None else None,
+                est_order=est_order, nf_per_attempt=nf_att)
             off = jnp.asarray([lane_offset], jnp.uint32)
             return run_ensemble_kernel(
                 body, u0s, ps, ts=saveat,
@@ -628,7 +659,7 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                          n_steps=None, save_every=1, lane_tile=None,
                          max_iters=100_000, event=None, key=None, seed=None,
                          noise_table=None, linsolve="jnp", lane_offset=0,
-                         brownian_depth=None) -> EnsembleResult:
+                         brownian_depth=None, error_est=None) -> EnsembleResult:
     """Single-device ensemble solve — ANY registered method through ANY
     strategy and backend (the unified front door; see docs/architecture.md).
 
@@ -649,9 +680,16 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
       rtol, atol: adaptive error-control tolerances.
       adaptive: None picks the family default (erk/rosenbrock: embedded
         adaptive stepping; sde: the paper's fixed-dt kernels).  Explicit
-        ``True`` on an SDE method enables embedded step-doubling control with
+        ``True`` on an SDE method enables adaptive error control with
         rejection-safe virtual-Brownian-tree noise; explicit ``False`` forces
         fixed-dt stepping.
+      error_est: adaptive-SDE error estimator — ``"embedded"`` (the method's
+        registered embedded pair: one stepper pass + companion difference,
+        ~2x cheaper per attempt) or ``"doubling"`` (step doubling: any
+        stepper, general noise, 3x stepper cost).  None picks the embedded
+        pair where one ships and the noise is diagonal, doubling otherwise.
+        Both estimators draw from the same Brownian tree, so either choice
+        is bitwise-reproducible across every strategy/backend/shard.
       n_steps, save_every: fixed-dt step count and snapshot stride.
       lane_tile: trajectories per fused tile (kernel strategy).  None derives
         the Pallas tile from the §5.2 VMEM formula (see docs/kernels.md).
@@ -698,7 +736,12 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                           seed=seed, noise_table=noise_table, event=event,
                           adaptive=adaptive, rtol=rtol, atol=atol,
                           max_iters=max_iters, lane_offset=lane_offset,
-                          brownian_depth=brownian_depth)
+                          brownian_depth=brownian_depth, error_est=error_est)
+
+    if error_est is not None:
+        raise ValueError(
+            "error_est selects the adaptive SDE error estimator; "
+            f"{spec.name!r} ({spec.family}) embeds via its tableau")
 
     if isinstance(prob, SDEProblem):
         raise TypeError(

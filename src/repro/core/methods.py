@@ -41,10 +41,18 @@ class MethodSpec:
                s-stage stiff engine (`repro.core.rosenbrock`) on every
                strategy/backend, including the fused Pallas body.
     stepper:   stepper fn `(f, g, u, p, t, dt, dW, noise) -> u_new` (sde only).
+    embedded:  `repro.core.sde.EmbeddedPair` — the stepper's embedded error
+               pair (sde only): one-pass companion-difference estimator,
+               ~1.5x the stepper cost instead of step doubling's ~3x.
+    error_est: error estimators the adaptive SDE engine may run for this
+               method.  Derived at registration: ("embedded", "doubling")
+               when an `embedded` pair ships, ("doubling",) otherwise —
+               step doubling works for ANY stepper, so every adaptive SDE
+               method keeps it as the A/B reference and general-noise path.
     order:     order of the propagated solution (strong order for sde).
     adaptive:  the method supports adaptive stepping — an embedded error pair
-               (erk/rosenbrock) or step-doubling with virtual-Brownian-tree
-               noise (sde).
+               (erk/rosenbrock) or, for sde, one of the `error_est`
+               estimators with virtual-Brownian-tree noise.
     events:    the method's engines support zero-crossing event handling with
                per-lane termination (`repro.core.events`).  True for every
                built-in family; a capability flag so the front door can reject
@@ -60,8 +68,12 @@ class MethodSpec:
 
     >>> get_method("tsit5").family
     'erk'
-    >>> get_method("em").adaptive       # step-doubling + Brownian tree
+    >>> get_method("em").adaptive       # embedded pair + Brownian tree
     True
+    >>> get_method("em").error_est      # EM/Milstein-difference pair ships
+    ('embedded', 'doubling')
+    >>> get_method("heun_strat").error_est   # no pair: doubling only
+    ('doubling',)
     >>> sorted(get_method("gpuem").noise)
     ['diagonal', 'general']
     """
@@ -72,6 +84,8 @@ class MethodSpec:
     tableau: Optional[Tableau] = None
     rtableau: Optional[RosenbrockTableau] = None
     stepper: Optional[Callable] = None
+    embedded: Optional[Any] = None
+    error_est: Tuple[str, ...] = ()
     adaptive: bool = True
     events: bool = True
     stiff: bool = False
@@ -89,6 +103,20 @@ class MethodSpec:
                 f"rosenbrock method {self.name!r} needs an rtableau")
         if self.family == "sde" and self.stepper is None:
             raise ValueError(f"sde method {self.name!r} needs a stepper")
+        if self.embedded is not None and self.family != "sde":
+            raise ValueError(
+                f"method {self.name!r}: `embedded` pairs are an sde-family "
+                "capability (erk/rosenbrock embed via their tableaus)")
+        if self.family == "sde" and self.adaptive and not self.error_est:
+            # capability tuple derived from what actually shipped
+            object.__setattr__(
+                self, "error_est",
+                ("embedded", "doubling") if self.embedded is not None
+                else ("doubling",))
+        if "embedded" in self.error_est and self.embedded is None:
+            raise ValueError(
+                f"method {self.name!r} declares error_est='embedded' but "
+                "ships no embedded pair (see repro.core.sde.SDE_EMBEDDED)")
 
 
 _REGISTRY: Dict[str, MethodSpec] = {}
@@ -161,12 +189,16 @@ def _register_builtins():
             stiff=True, aliases=rb_alias.get(rtab.name, ())))
 
     # SDE steppers. Fixed-dt by default (the paper's GPU kernel set);
-    # adaptive=True records that EVERY stepper gains embedded step-doubling
-    # error control through the shared engine (`core.sde.sde_solve_adaptive`)
-    # when the caller opts in with adaptive=True — no per-method pair needed.
-    from .sde import (em_step, heun_strat_step, milstein_step, platen_w2_step)
+    # adaptive=True records that EVERY stepper gains adaptive error control
+    # through the shared engine (`core.sde.sde_solve_adaptive`) when the
+    # caller opts in with adaptive=True: an embedded pair where one ships
+    # (SDE_EMBEDDED — em, milstein), step doubling everywhere (no per-method
+    # pair needed; also the general-noise path).
+    from .sde import (SDE_EMBEDDED, em_step, heun_strat_step, milstein_step,
+                      platen_w2_step)
     register_method(MethodSpec(
         name="em", family="sde", order=0.5, stepper=em_step, adaptive=True,
+        embedded=SDE_EMBEDDED["em"],
         noise=("diagonal", "general"), aliases=("gpuem", "euler_maruyama")))
     register_method(MethodSpec(
         name="platen_w2", family="sde", order=2.0, stepper=platen_w2_step,
@@ -176,7 +208,8 @@ def _register_builtins():
         adaptive=True, noise=("diagonal", "general")))
     register_method(MethodSpec(
         name="milstein", family="sde", order=1.0, stepper=milstein_step,
-        adaptive=True, noise=("diagonal",)))
+        adaptive=True, embedded=SDE_EMBEDDED["milstein"],
+        noise=("diagonal",)))
 
 
 _register_builtins()

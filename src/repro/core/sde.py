@@ -109,14 +109,124 @@ SDE_STEPPERS = {
 }
 
 
+# ----------------------------------------------------------------------------
+# embedded error pairs (RSwM-style rejection sampling, no step doubling)
+# ----------------------------------------------------------------------------
+#
+# An embedded pair returns (u_prop, err) from ONE pass over the interval: the
+# propagated solution plus a local error estimate built from a cheap companion
+# scheme on the SAME Brownian increment.  Against step doubling (three stepper
+# evaluations + an extra Brownian-tree descent per attempted step) this costs
+# ~1 stepper evaluation and ONE descent — the ~2x adaptive-SDE win recorded in
+# ROADMAP.md.  Rejection stays exact for free: increments come from the
+# virtual Brownian tree, a pure function of (seed; lane, row, dyadic time),
+# so a rejected step retried with a smaller dt replays the path bitwise.
+
+def em_embedded_step(f, g, u, p, t, dt, dW, noise="diagonal"):
+    """Euler-Maruyama propagation + embedded tamed-Milstein-difference error.
+
+    The companion is the drift-tamed (Hutzenthaler-Jentzen) diagonal Milstein
+    scheme; since it shares the drift and diffusion increments with EM, the
+    pair difference is the Milstein correction plus the drift-taming term:
+
+        err = 1/2 ((∂b/∂x)·b) (dW² - dt)  +  (a - a/(1 + dt|a|)) dt
+
+    The first term — O(dt) in the strong sense — is the leading term EM omits
+    relative to strong order 1 and dominates for genuinely stochastic steps;
+    the second, O(dt²), keeps the estimator drift-aware so the controller
+    still resolves the deterministic dynamics when the diffusion is locally
+    negligible (a pure Milstein difference is blind there).  Diagonal noise
+    only (a general-noise companion would need Lévy areas — use
+    ``error_est="doubling"`` there).
+
+    The pair deliberately propagates the PLAIN EM solution, not the
+    Milstein-corrected one: acceptance conditions on |dW² - dt|, and adding
+    the correction only on accepted steps would accumulate the truncated
+    tail of the chi-square as a systematic bias (the classic hazard of
+    noise-adapted step sizes).  EM's own missing term telescopes against the
+    true path regardless of the acceptance rule.
+    """
+    if noise != "diagonal":
+        raise ValueError("em embedded pair supports diagonal noise only; "
+                         "use error_est='doubling' for general noise")
+    a0 = f(u, p, t)
+    b0, db = jax.jvp(lambda uu: g(uu, p, t), (u,), (g(u, p, t),))
+    err = (0.5 * db * (dW * dW - dt)
+           + (a0 - a0 / (1.0 + dt * jnp.abs(a0))) * dt)
+    return u + a0 * dt + b0 * dW, err
+
+
+def milstein_embedded_step(f, g, u, p, t, dt, dW, noise="diagonal"):
+    """Milstein propagation + deterministic embedded companion error.
+
+    Two estimator terms, both deterministic in dW (so acceptance never
+    conditions on the realized increments — no truncation-bias floor, unlike
+    the em pair):
+
+    * drift: the increment-tamed companion (Hutzenthaler & Jentzen taming,
+      a -> a / (1 + dt|a|)), whose difference
+      ``(a - a/(1 + dt|a|)) dt = a|a| dt²/(1+dt|a|)`` (O(dt²)) tracks the
+      deterministic-Taylor remainder and drift-explosion regimes;
+    * diffusion: the rms of the leading neglected Ito-Taylor term
+      L¹L¹b · I₍₁,₁,₁₎ — ``|∂((∂b)·b)·b| · dt^1.5 / sqrt(6)`` (E[I₁₁₁²] =
+      dt³/6) via a nested diffusion JVP.  Without it the estimator is blind
+      on diffusion-dominated problems (zero-drift SDEs would accept any dt).
+
+    Extra cost over the plain stepper: diffusion JVPs only — no drift
+    evaluations, so nf_per_attempt stays 1.
+    """
+    if noise != "diagonal":
+        raise ValueError("milstein currently supports diagonal noise")
+    a0 = f(u, p, t)
+
+    def db_of(uu):
+        bb = g(uu, p, t)
+        return jax.jvp(lambda w: g(w, p, t), (uu,), (bb,))[1]
+
+    b0 = g(u, p, t)
+    db, ddb = jax.jvp(db_of, (u,), (b0,))      # (∂b)·b and ∂((∂b)·b)·b
+    u_new = u + a0 * dt + b0 * dW + 0.5 * db * (dW * dW - dt)
+    dt15 = dt * _sqrt_dt(dt, u.dtype)
+    err = ((a0 - a0 / (1.0 + dt * jnp.abs(a0))) * dt
+           + jnp.abs(ddb) * dt15 / jnp.sqrt(jnp.asarray(6.0, u.dtype)))
+    return u_new, err
+
+
+class EmbeddedPair(NamedTuple):
+    """An SDE embedded error pair as registered on a `MethodSpec`.
+
+    fn:             (f, g, u, p, t, dt, dW, noise) -> (u_prop, err)
+    est_order:      dt-order of the estimator (PI controller exponents)
+    nf_per_attempt: drift evaluations charged to `nf` per attempted step
+    """
+    fn: Callable
+    est_order: int
+    nf_per_attempt: int
+
+
+# name -> EmbeddedPair.  Steppers absent here support error_est="doubling"
+# only (the registry derives the capability tuple from this).
+SDE_EMBEDDED = {
+    "em": EmbeddedPair(em_embedded_step, est_order=1, nf_per_attempt=1),
+    # estimator leading term is O(dt^1.5) (the L¹L¹b proxy); est_order=1 is
+    # the conservative integer controller exponent for it
+    "milstein": EmbeddedPair(milstein_embedded_step, est_order=1,
+                             nf_per_attempt=1),
+}
+
+
 def counter_normals(key, step, shape, dtype):
     """Counter-based N(0,1) draw for a given step index (replayable)."""
     return jax.random.normal(jax.random.fold_in(key, step), shape, dtype)
 
 
 def sde_nf_per_step(method: str) -> int:
-    """Drift evaluations per step (the nf work proxy), per method."""
-    return 2 if method != "em" else 1
+    """Drift evaluations per step (the nf work proxy), per method.
+
+    em and milstein evaluate the drift once (milstein's extra work is a
+    diffusion JVP, not an RHS call); the two-stage schemes evaluate it twice.
+    """
+    return 1 if method in ("em", "milstein") else 2
 
 
 def sde_save_grid(t0, dt, n_steps: int, save_every: int, dtype):
@@ -242,7 +352,7 @@ def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
 
 
 # ----------------------------------------------------------------------------
-# adaptive driver (while_loop): embedded step-doubling error + virtual
+# adaptive driver (while_loop): embedded-pair or step-doubling error + virtual
 # Brownian tree (RSwM-style rejection-safe noise), scalar/lanes polymorphic
 # ----------------------------------------------------------------------------
 
@@ -267,30 +377,51 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
                        event: Optional[Event] = None, lanes: bool = False,
                        depth: Optional[int] = None, order: float = 0.5,
                        nf_per_step: int = 1,
+                       error_est: str = "doubling",
+                       embedded: Optional[Callable] = None,
+                       est_order: Optional[int] = None,
+                       nf_per_attempt: Optional[int] = None,
                        controller: Optional["PIController"] = None):
     """Adaptive SDE integration with per-element dt control and events.
 
     The missing half of the paper's "fully featured" claim for the SDE family:
 
-    * **Embedded error** by step doubling: each attempted step integrates the
-      interval once with dt and once as two dt/2 substeps *driven by the same
-      Brownian path*; their difference is the local error estimate and the
-      finer solution propagates (local extrapolation).  This works for every
-      registered stepper — no per-method embedded pair needed.
+    * **Local error** per attempted step, one of two estimators
+      (``error_est``):
+
+      - ``"embedded"`` — an embedded pair (`embedded`, e.g.
+        `em_embedded_step`): ONE pass over the interval returns the
+        propagated solution plus a companion-difference error estimate.
+        ~1 stepper evaluation and one Brownian-tree descent per attempt —
+        the default for steppers that ship a pair (see `SDE_EMBEDDED`).
+      - ``"doubling"`` — step doubling: integrate once with dt and once as
+        two dt/2 substeps *driven by the same Brownian path*; their
+        difference is the error estimate and the finer solution propagates
+        (local extrapolation).  Three stepper evaluations and two descents
+        per attempt, but works for every registered stepper — no per-method
+        pair needed.  Kept as the A/B reference and the general-noise path.
     * **Rejection-safe noise** (RSwM property): increments come from the
       virtual Brownian tree (`repro.kernels.rng.brownian_bridge_point`) — a
       pure function of (seed; lane, row, dyadic time) — so a rejected step
       retried with smaller dt sees exactly the same path, bitwise, on every
-      strategy and backend.  Step sizes are quantized to an even number of
-      cells of the depth-D dyadic grid (D = `depth`, default
-      `default_bridge_depth`).
+      strategy and backend.  Step sizes are quantized to whole cells of the
+      depth-D dyadic grid (D = `depth`, default `default_bridge_depth`); the
+      doubling estimator additionally rounds to an EVEN cell count so its
+      half-steps land on grid points.
     * **Events** run the shared machinery (`repro.core.events`) on the
       piecewise-linear path output, with per-lane termination masks.
-      Terminal hits freeze the lane at the located event time; a non-terminal
-      affect is applied at the event point and integration resumes at the
-      step's grid end.
+      Terminal hits freeze the lane at the located event time; a
+      non-terminal affect is applied at the event point and integration
+      resumes from the dyadic grid cell that re-anchors the located event
+      time (NOT the step's grid end — the rejection machinery makes the
+      rewind free: the bridge replays W at the re-anchored index bitwise).
     * **saveat** dense output: snapshots land on an arbitrary time grid via
       linear interpolation over accepted steps.
+
+    `est_order` is the dt-order of the error estimator (PI controller
+    exponents); `nf_per_attempt` the drift-evaluation count charged to `nf`
+    per attempted step (defaults: 3 stepper evaluations for doubling, the
+    `SDE_EMBEDDED` entry for pairs).
 
     Shape contract (same as the ERK engine): lanes=False integrates one
     trajectory u0 (n,) with scalar control and a scalar `lane_idx` (the
@@ -299,7 +430,18 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
     or (SolveResult, {"event_t", "event_count"}) when an event is supplied.
     """
     dtype = u0.dtype
-    ctrl = controller or PIController.for_order(max(1, int(round(order))))
+    if error_est not in ("embedded", "doubling"):
+        raise ValueError(f"unknown error_est {error_est!r} "
+                         "(use 'embedded' or 'doubling')")
+    use_pair = error_est == "embedded"
+    if use_pair and embedded is None:
+        raise ValueError("error_est='embedded' needs an embedded pair fn "
+                         "(see repro.core.sde.SDE_EMBEDDED)")
+    if est_order is None:
+        est_order = max(1, int(round(order)))
+    if nf_per_attempt is None:
+        nf_per_attempt = 3 * nf_per_step
+    ctrl = controller or PIController.for_order(int(est_order))
     cshape = (u0.shape[-1],) if lanes else ()
     axes = 0 if lanes else None
     t0 = jnp.asarray(t0, dtype)
@@ -365,33 +507,45 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
         active = ~c["done"]
         idx = jnp.where(active, c["idx"], jnp.zeros_like(c["idx"]))
         t = t0 + idx.astype(dtype) * h_res
-        # quantize the proposed dt to an EVEN number of dyadic grid cells
-        # (even so the two half-steps land on grid points too)
+        # quantize the proposed dt to whole dyadic grid cells; the doubling
+        # estimator needs an EVEN count so its half-steps land on grid points
         want = (jnp.minimum(dt, t_total) / h_res).astype(jnp.uint32)
-        # resolution floor: the controller asked for < 2 cells — no finer
-        # path information exists at this depth, so the step force-accepts
-        # (raise `depth`/brownian_depth for tighter tolerances)
-        at_floor = want < jnp.uint32(2)
-        m = jnp.clip((want >> 1) << 1, jnp.uint32(2), n_total_u - idx)
-        mh = m >> 1
+        min_cells = jnp.uint32(1 if use_pair else 2)
+        # resolution floor: the controller asked for < min_cells cells — no
+        # finer path information exists at this depth, so the step
+        # force-accepts (raise `depth`/brownian_depth for tighter tolerances)
+        at_floor = want < min_cells
+        m = (want if use_pair else (want >> 1) << 1)
+        m = jnp.clip(m, min_cells, n_total_u - idx)
         dt_step = m.astype(dtype) * h_res
-        dt_half = mh.astype(dtype) * h_res
-        t_mid = t0 + (idx + mh).astype(dtype) * h_res
 
         # W at the left endpoint is carried from the previous iteration (it
         # equals last step's right endpoint on accept and is unchanged on
         # reject — the bridge is a pure function of idx, so this is exact,
-        # and it saves one of the three tree descents per attempted step)
+        # and it saves one tree descent per attempted step)
         w_l = c["w_l"]
-        w_m = w_at(idx + mh)
         w_r = w_at(idx + m)
-        dW1, dW2, dWf = w_m - w_l, w_r - w_m, w_r - w_l
+        dWf = w_r - w_l
 
-        # one coarse step vs two half steps on the SAME path; keep the finer
-        u_c = stepper(f, g, u, p, t, dt_step, dWf, noise)
-        u_h = stepper(f, g, u, p, t, dt_half, dW1, noise)
-        u_2 = stepper(f, g, u_h, p, t_mid, dt_half, dW2, noise)
-        err = u_2 - u_c
+        if use_pair:
+            # embedded pair: one pass gives the propagated solution AND the
+            # companion-difference error — no midpoint descent, no half steps
+            u_2, err = embedded(f, g, u, p, t, dt_step, dWf, noise)
+        else:
+            mh = m >> 1
+            dt_half = mh.astype(dtype) * h_res
+            t_mid = t0 + (idx + mh).astype(dtype) * h_res
+            w_m = w_at(idx + mh)
+            dW1, dW2 = w_m - w_l, w_r - w_m
+            # one coarse step vs two half steps on the SAME path; keep finer
+            u_c = stepper(f, g, u, p, t, dt_step, dWf, noise)
+            u_h = stepper(f, g, u, p, t, dt_half, dW1, noise)
+            u_2 = stepper(f, g, u_h, p, t_mid, dt_half, dW2, noise)
+            # Richardson: the raw difference understates the error of the
+            # PROPAGATED (finer) solution by (2^q - 1), q the stepper's
+            # strong order — rescale so both estimators target the same
+            # local error for the solution they actually advance
+            err = (u_2 - u_c) * (1.0 / (2.0 ** order - 1.0))
         enorm = hairer_norm(err, u, u_2, atol, rtol, axes=axes)
         finite = jnp.isfinite(u_2)
         finite = jnp.all(finite, axis=0) if lanes else jnp.all(finite)
@@ -409,11 +563,24 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
             u_next, t_ev, ev_t, ev_n, term = handle_event(
                 event, interp_fn, u, u_2, p, t, dt_step, t_new, accept,
                 c["event_t"], c["event_count"], lanes=lanes)
+            # non-terminal hit: the affected state lives at the located event
+            # time t_ev, NOT the step's grid end — re-anchor onto the dyadic
+            # grid (first cell boundary at/after t_ev) so integration resumes
+            # where the affect was applied.  The rewind is free: the Brownian
+            # tree replays W at the re-anchored index bitwise (the same
+            # machinery that makes rejected steps exact).
+            hit_nt = (ev_n > c["event_count"]) & ~term
+            cells = jnp.clip(
+                jnp.ceil((t_ev - t) / h_res - 1e-6).astype(jnp.uint32),
+                jnp.uint32(1), m)
+            idx_new = jnp.where(hit_nt, idx + cells, idx_new)
+            t_new = t0 + idx_new.astype(dtype) * h_res
         else:
             u_next = u_2
             t_ev = t_new
             ev_t, ev_n = c["event_t"], c["event_count"]
             term = jnp.zeros(cshape, bool)
+            hit_nt = term
 
         acc_e = accept[None] if lanes else accept
         u_new = jnp.where(acc_e, u_next, u)
@@ -440,13 +607,31 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
 
         done = c["done"] | term | (idx_new >= n_total_u)
         acc_m = accept[None] if lanes else accept
+        w_l_new = jnp.where(acc_m, w_r, w_l)
+        if event is not None:
+            # re-anchored lanes restart mid-step: their left-endpoint W is at
+            # idx_new, not idx + m.  In lanes mode the scalar any() predicate
+            # makes lax.cond a real branch — the extra descent is paid only
+            # on iterations where a non-terminal event actually fired.  In
+            # scalar mode (vmapped per-trajectory) the predicate is batched
+            # and cond would lower to select anyway, so compute it directly.
+            hit_m = hit_nt[None] if lanes else hit_nt
+
+            def _refresh():
+                return jnp.where(hit_m, w_at(idx_new), w_l_new)
+
+            if lanes:
+                w_l_new = jax.lax.cond(jnp.any(hit_nt), _refresh,
+                                       lambda: w_l_new)
+            else:
+                w_l_new = _refresh()
         return dict(
-            w_l=jnp.where(acc_m, w_r, w_l),
+            w_l=w_l_new,
             idx=idx_new, u=u_new, dt=dt_next, enorm_prev=enorm_prev,
             done=done, us=us, t_out=t_out,
             naccept=c["naccept"] + accept.astype(jnp.int32),
             nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
-            nf=c["nf"] + active.astype(jnp.int32) * (3 * nf_per_step),
+            nf=c["nf"] + active.astype(jnp.int32) * nf_per_attempt,
             iters=c["iters"] + 1,
             event_t=ev_t, event_count=ev_n)
 

@@ -324,12 +324,15 @@ def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
 def sde_adaptive_body(f, g, stepper, noise: str, *, t0: float, tf: float,
                       dt0: float, rtol: float, atol: float, max_iters: int,
                       m_noise: int, seed: int, depth: int, order: float,
-                      nf_per_step: int, event=None):
-    """Adaptive SDE integration fused into the kernel: embedded step-doubling
-    error control with virtual-Brownian-tree noise (rejection-safe: the SAME
-    (seed; lane, row, dyadic-time) stream on every strategy/backend — see
-    `repro.core.sde.sde_solve_adaptive`).  extras[0] = saveat grid (S,),
-    extras[1] = ("broadcast", (1,)) global lane offset."""
+                      nf_per_step: int, event=None, error_est: str = "doubling",
+                      embedded=None, est_order=None, nf_per_attempt=None):
+    """Adaptive SDE integration fused into the kernel: embedded-pair or
+    step-doubling error control with virtual-Brownian-tree noise
+    (rejection-safe: the SAME (seed; lane, row, dyadic-time) stream on every
+    strategy/backend — see `repro.core.sde.sde_solve_adaptive`, which this
+    body wraps unchanged, so estimator choice cannot split the backends).
+    extras[0] = saveat grid (S,), extras[1] = ("broadcast", (1,)) global lane
+    offset."""
     from repro.core.sde import sde_solve_adaptive
 
     def body(ctx, u0, p, extras):
@@ -343,7 +346,9 @@ def sde_adaptive_body(f, g, stepper, noise: str, *, t0: float, tf: float,
                                  saveat=saveat_v, rtol=rtol, atol=atol,
                                  max_iters=max_iters, event=event, lanes=True,
                                  depth=depth, order=order,
-                                 nf_per_step=nf_per_step)
+                                 nf_per_step=nf_per_step, error_est=error_est,
+                                 embedded=embedded, est_order=est_order,
+                                 nf_per_attempt=nf_per_attempt)
         if event is not None:
             res, _ = res
         stats = jnp.stack([res.naccept, res.nreject,

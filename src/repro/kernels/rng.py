@@ -81,6 +81,21 @@ def brownian_bridge_point(seed, idx, lane_idx, row_idx, *, depth, t_total,
          [0, 2**depth]; each element may name a different grid point (per-lane
          adaptive dt).
     Cost: `depth` Threefry evaluations per point.
+
+    **Rejection/replay contract** (what the adaptive SDE engine and the
+    property tests in `tests/test_bridge_props.py` rely on):
+
+    1. W(idx) depends ONLY on (seed; lane, row, idx, depth, t_total) — never
+       on query order, query shape, or any other index queried before or
+       after.  Any reject -> shrink -> redraw sequence therefore replays the
+       sub-interval increments bitwise, on every strategy and backend.
+    2. W(0) == 0 exactly, and increments telescope exactly: for any grid
+       partition i0 < i1 < ... < ik, sum of W(i_{j+1}) - W(i_j) equals
+       W(ik) - W(i0) in floating point up to associativity of the sum.
+    3. Conditionally on W(l) and W(r) for an enclosing dyadic interval
+       [l, r], the midpoint is N((W(l)+W(r))/2, (t_r - t_l)/4) — the Levy
+       bridge construction, which is what makes per-lane step sequences
+       statistically consistent regardless of accept/reject history.
     """
     idx = jnp.asarray(idx, jnp.uint32)
     shape = jnp.broadcast_shapes(jnp.shape(idx), jnp.shape(lane_idx),

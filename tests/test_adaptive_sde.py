@@ -1,13 +1,16 @@
-"""Adaptive SDE stepping (embedded step-doubling + virtual Brownian tree) and
-mesh-sharded stream disjointness — the other half of the tentpole.
+"""Adaptive SDE stepping (embedded pairs / step doubling + virtual Brownian
+tree) and mesh-sharded stream disjointness.
 
 The load-bearing properties:
   * the Brownian path is a pure function of (seed; lane, row, dyadic time):
     rejected/resized steps replay identical increments (RSwM property);
-  * trajectories are BITWISE identical across vmap/array/kernel x xla/pallas;
+  * trajectories are BITWISE identical across vmap/array/kernel x xla/pallas
+    for BOTH error estimators (embedded pair and step doubling);
   * the integrator actually adapts (per-trajectory step counts differ, steps
     are rejected, tighter tolerances take more steps);
   * strong accuracy against the closed-form GBM solution ON THE SAME PATH;
+  * the embedded pair does the same job with measurably fewer drift
+    evaluations than step doubling (the ISSUE 4 tentpole win);
   * `lane_offset` makes shard-local solves equal slices of the global solve,
     so mesh shards never replay each other's noise streams.
 """
@@ -78,9 +81,10 @@ def test_bridge_statistics():
 # adaptivity + cross-strategy bitwise parity
 # ---------------------------------------------------------------------------
 
-def test_adaptive_sde_bitwise_parity_all_strategies(ens):
+@pytest.mark.parametrize("error_est", ["embedded", "doubling"])
+def test_adaptive_sde_bitwise_parity_all_strategies(ens, error_est):
     saveat = jnp.linspace(0.25, 1.0, 4)
-    kw = dict(ADAPT_KW, saveat=saveat)
+    kw = dict(ADAPT_KW, saveat=saveat, error_est=error_est)
     rv = solve_ensemble_local(ens, ensemble="vmap", **kw)
     ra = solve_ensemble_local(ens, ensemble="array", **kw)
     rx = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
@@ -96,6 +100,73 @@ def test_adaptive_sde_bitwise_parity_all_strategies(ens):
                                       np.asarray(r.naccept), err_msg=name)
         np.testing.assert_array_equal(np.asarray(rv.nreject),
                                       np.asarray(r.nreject), err_msg=name)
+
+
+def test_estimator_choice_changes_trajectories_but_not_contract(ens):
+    """embedded and doubling are different estimators (different accepted
+    partitions => different EM endpoints on the same path), yet both finish
+    and stay within tolerance-scale agreement of each other."""
+    re = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                              error_est="embedded", **ADAPT_KW)
+    rd = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                              error_est="doubling", **ADAPT_KW)
+    assert int(re.status) == 0 and int(rd.status) == 0
+    assert not np.array_equal(np.asarray(re.u_final), np.asarray(rd.u_final))
+    np.testing.assert_allclose(np.asarray(re.u_final),
+                               np.asarray(rd.u_final), rtol=0.1)
+
+
+def test_embedded_pair_is_cheaper_than_doubling_at_same_tolerance(ens):
+    """The tentpole economics: the embedded pair spends >= 1.5x fewer drift
+    evaluations than step doubling at the same tolerance (it is ~3x per
+    attempted step; step-count differences eat some of that)."""
+    kw = dict(ADAPT_KW, rtol=1e-4, atol=1e-6)
+    nf_e = int(solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                                    error_est="embedded", **kw).nf)
+    nf_d = int(solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                                    error_est="doubling", **kw).nf)
+    assert nf_d >= 1.5 * nf_e, (nf_d, nf_e)
+
+
+def test_milstein_embedded_not_diffusion_blind():
+    """Regression: milstein's embedded estimator once had only the
+    drift-taming term, which is identically zero for zero drift — the
+    controller accepted arbitrarily large steps on diffusion-dominated
+    SDEs.  The L¹L¹b rms term makes it resolve pure-diffusion problems."""
+    from repro.core.problem import SDEProblem
+    prob = SDEProblem(lambda u, p, t: jnp.zeros_like(u),
+                      lambda u, p, t: p[0] * u,
+                      jnp.asarray([1.0], jnp.float64),
+                      jnp.asarray([0.5], jnp.float64), (0.0, 1.0),
+                      noise="diagonal", name="zerodrift")
+    ens0 = EnsembleProblem(prob, 8)
+    res = solve_ensemble_local(ens0, alg="milstein", ensemble="kernel",
+                               backend="xla", t0=0.0, tf=1.0, dt0=0.05,
+                               adaptive=True, rtol=1e-4, atol=1e-6, seed=3,
+                               error_est="embedded", brownian_depth=14)
+    assert int(res.status) == 0
+    # a blind estimator finishes in a handful of qmax-growth steps
+    assert int(np.asarray(res.naccept).min()) > 50
+
+
+def test_error_est_validation(ens):
+    with pytest.raises(ValueError, match="error_est"):
+        solve_ensemble_local(ens, ensemble="vmap", error_est="magic",
+                             **ADAPT_KW)
+    with pytest.raises(ValueError, match="adaptive"):
+        solve_ensemble_local(ens, alg="em", t0=0.0, tf=1.0, dt0=0.05,
+                             seed=1, save_every=20, error_est="embedded")
+    with pytest.raises(ValueError, match="doubling"):
+        # heun_strat ships no embedded pair
+        solve_ensemble_local(ens, ensemble="vmap",
+                             **dict(ADAPT_KW, alg="heun_strat",
+                                    error_est="embedded"))
+    with pytest.raises(ValueError, match="estimator"):
+        # erk methods embed via their tableau; error_est is SDE-only
+        from repro.configs.de_problems import lorenz_ensemble
+        solve_ensemble_local(lorenz_ensemble(2, dtype=jnp.float64),
+                             alg="tsit5", t0=0.0, tf=0.1, dt0=1e-3,
+                             error_est="embedded")
 
 
 def test_adaptivity_is_per_trajectory_and_tolerance_driven(ens):
@@ -114,13 +185,17 @@ def test_adaptivity_is_per_trajectory_and_tolerance_driven(ens):
             > int(np.asarray(loose.naccept).sum()))
 
 
-def test_adaptive_strong_accuracy_against_closed_form_same_path(ens):
+@pytest.mark.parametrize("error_est", ["embedded", "doubling"])
+def test_adaptive_strong_accuracy_against_closed_form_same_path(ens,
+                                                                error_est):
     """GBM has the exact solution X_T = X_0 exp((r - v^2/2)T + v W_T) with
     W_T readable from the SAME virtual Brownian tree the solver integrates —
-    a strong (pathwise) accuracy test, not a statistical one."""
+    a strong (pathwise) accuracy test, not a statistical one, and it holds
+    for both error estimators."""
     from repro.core.sde import default_bridge_depth
     depth = default_bridge_depth(0.0, 1.0, 0.05)
     res = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                               error_est=error_est,
                                **dict(ADAPT_KW, rtol=1e-4, atol=1e-6))
     N, n = 10, 3
     lanes = jnp.broadcast_to(jnp.arange(N, dtype=jnp.uint32)[None], (n, N))
@@ -165,8 +240,11 @@ def _halves(ens):
 
 @pytest.mark.parametrize("extra", [
     dict(save_every=40),
-    dict(adaptive=True, rtol=1e-3, atol=1e-5, saveat=jnp.asarray([1.0])),
-], ids=["fixed", "adaptive"])
+    dict(adaptive=True, rtol=1e-3, atol=1e-5, saveat=jnp.asarray([1.0]),
+         error_est="embedded"),
+    dict(adaptive=True, rtol=1e-3, atol=1e-5, saveat=jnp.asarray([1.0]),
+         error_est="doubling"),
+], ids=["fixed", "adaptive-embedded", "adaptive-doubling"])
 def test_lane_offset_shards_equal_global_slices(ens, extra):
     kw = dict(alg="em", t0=0.0, tf=1.0, dt0=0.025, seed=3,
               ensemble="kernel", backend="xla", **extra)
@@ -225,6 +303,17 @@ np.testing.assert_array_equal(np.asarray(r2.u_final), np.asarray(r1.u_final))
 # the two shards produced DISTINCT trajectories (disjoint streams)
 a, b = np.asarray(r2.u_final)[:5], np.asarray(r2.u_final)[5:]
 assert not np.array_equal(a, b)
+# adaptive embedded-pair estimator: same sharded == local bitwise bar (each
+# shard quantizes its lanes' steps onto the same global Brownian tree)
+kwa = dict(alg="em", t0=0.0, tf=1.0, dt0=0.05, seed=3, adaptive=True,
+           rtol=1e-3, atol=1e-5, error_est="embedded",
+           ensemble="kernel", backend="xla")
+a2 = solve_ensemble(ens, mesh=make_local_mesh(), shard_axes=("data",), **kwa)
+a1 = solve_ensemble_local(ens, **kwa)
+np.testing.assert_array_equal(np.asarray(a2.u_final), np.asarray(a1.u_final))
+np.testing.assert_array_equal(np.asarray(a2.naccept), np.asarray(a1.naccept))
+assert not np.array_equal(np.asarray(a2.u_final)[:5],
+                          np.asarray(a2.u_final)[5:])
 print("TWO-SHARD-OK")
 """
 
@@ -232,8 +321,9 @@ print("TWO-SHARD-OK")
 def test_two_shard_streams_disjoint_subprocess():
     """Genuine 2-shard run (forced 2 host devices in a subprocess so the
     single-device contract of this test session is untouched): the sharded
-    solve equals the local solve bitwise, and the shards' trajectories
-    differ — each shard draws its own global stream slice."""
+    solve equals the local solve bitwise — for the fixed-dt counter stream
+    AND the adaptive embedded-pair estimator — and the shards' trajectories
+    differ: each shard draws its own global stream slice."""
     env = dict(os.environ)
     env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run([sys.executable, "-c", TWO_SHARD_SCRIPT],

@@ -1,0 +1,116 @@
+"""Property-based tests for the virtual Brownian tree
+(`kernels/rng.brownian_bridge_point`) — the noise source the adaptive SDE
+engine's rejection sampling stands on (see the rejection/replay contract in
+the `brownian_bridge_point` docstring).
+
+Three properties, hypothesis-driven over (seed, depth, index choices):
+
+  1. bridge interpolation consistency: conditioned on W(l) and W(r), an
+     interior point has mean W(l) + θ (W(r) - W(l)) (θ the time fraction),
+     with residuals uncorrelated with the enclosing increment;
+  2. correct conditional variance θ(1-θ)(t_r - t_l) of that residual;
+  3. bitwise replay: any reject -> shrink -> redraw sequence returns
+     identical increments (W is a pure function of the dyadic index, never
+     of query order or query shape).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional property-test dependency (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.rng import brownian_bridge_point
+
+N_LANES = 4000
+T_TOTAL = 1.0
+
+
+def _W(seed, idx, depth, n_lanes=N_LANES):
+    """W at grid index (scalar or (K,)) for n_lanes lanes, one noise row."""
+    idx = jnp.atleast_1d(jnp.asarray(idx, jnp.uint32))
+    lanes = jnp.broadcast_to(jnp.arange(n_lanes, dtype=jnp.uint32)[None, :],
+                             (idx.shape[0], n_lanes))
+    rows = jnp.zeros_like(lanes)
+    return np.asarray(brownian_bridge_point(
+        seed, idx[:, None], lanes, rows, depth=depth, t_total=T_TOTAL,
+        dtype=jnp.float64))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), depth=st.integers(4, 10),
+       data=st.data())
+def test_bridge_interpolation_mean_and_variance(seed, depth, data):
+    """W(s) | W(l), W(r): mean is the linear interpolant, variance is
+    θ(1-θ)(t_r - t_l), and the residual is uncorrelated with the enclosing
+    increment — for ARBITRARY (not necessarily dyadic-aligned) l < s < r."""
+    n = 2 ** depth
+    l = data.draw(st.integers(0, n - 2), label="l")
+    r = data.draw(st.integers(l + 2, n), label="r")
+    s = data.draw(st.integers(l + 1, r - 1), label="s")
+    wl, ws, wr = _W(seed, [l, s, r], depth)
+    theta = (s - l) / (r - l)
+    dt_lr = (r - l) / n * T_TOTAL
+    resid = ws - (wl + theta * (wr - wl))
+    var_want = theta * (1.0 - theta) * dt_lr
+    sd = np.sqrt(var_want)
+    # N_LANES independent samples: mean ~ N(0, sd/sqrt(N)), var ~ +-5 rel sd
+    assert abs(np.mean(resid)) < 5.0 * sd / np.sqrt(N_LANES)
+    assert abs(np.var(resid) / var_want - 1.0) < 0.25
+    inc = wr - wl
+    corr = np.mean(resid * inc) / (sd * np.std(inc))
+    assert abs(corr) < 0.1
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), depth=st.integers(4, 10),
+       data=st.data())
+def test_bridge_endpoint_and_increment_statistics(seed, depth, data):
+    """Unconditionally, W(i) ~ N(0, t_i) and disjoint increments are
+    independent — the tree is a genuine Wiener path on its grid."""
+    n = 2 ** depth
+    i = data.draw(st.integers(1, n - 1), label="i")
+    w0, wi, wn = _W(seed, [0, i, n], depth)
+    assert np.all(w0 == 0.0)
+    t_i = i / n * T_TOTAL
+    assert abs(np.var(wi) / t_i - 1.0) < 0.2
+    assert abs(np.var(wn) / T_TOTAL - 1.0) < 0.2
+    inc = wn - wi
+    assert abs(np.mean(wi * inc)) < 0.1 * np.sqrt(t_i * (T_TOTAL - t_i))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), depth=st.integers(4, 12),
+       data=st.data())
+def test_reject_redraw_replays_increments_bitwise(seed, depth, data):
+    """The RSwM property as a query-sequence test: attempt a step over
+    [i, i+m], 'reject' it, redraw the sub-increments at any partition, then
+    re-query the original endpoints — every value is bitwise identical and
+    the sub-increments telescope exactly to the rejected one."""
+    n = 2 ** depth
+    i = data.draw(st.integers(0, n - 2), label="i")
+    m = data.draw(st.integers(2, min(n - i, 64)), label="m")
+    k = data.draw(st.integers(1, 6), label="k")       # partition granularity
+    cuts = sorted({i, i + m}
+                  | {i + data.draw(st.integers(1, m - 1), label=f"c{j}")
+                     for j in range(k)})
+    # 1) the attempted (rejected) step
+    w_i, w_im = _W(seed, [i, i + m], depth, n_lanes=64)
+    # 2) redraw at the finer partition (different query SHAPE and order)
+    fine = _W(seed, list(reversed(cuts)), depth, n_lanes=64)[::-1]
+    # 3) re-query the original endpoints
+    w_i2, w_im2 = _W(seed, [i, i + m], depth, n_lanes=64)
+    np.testing.assert_array_equal(w_i, w_i2)
+    np.testing.assert_array_equal(w_im, w_im2)
+    np.testing.assert_array_equal(fine[0], w_i)
+    np.testing.assert_array_equal(fine[-1], w_im)
+    # sub-increments telescope to the rejected increment (float-exactly up to
+    # summation associativity; they are literally differences of the same
+    # pure-function values, so sum in index order)
+    total = fine[-1] - fine[0]
+    acc = np.zeros_like(total)
+    for a, b in zip(fine, fine[1:]):
+        acc = acc + (b - a)
+    np.testing.assert_allclose(acc, total, rtol=0, atol=1e-12)

@@ -157,6 +157,48 @@ def test_sde_terminal_event_state_near_threshold(sde_ens):
                                atol=1e-6)
 
 
+def test_sde_nonterminal_event_resumes_at_event_time_not_grid_end():
+    """Regression (ISSUE 4): a non-terminal affect used to resume at the
+    step's grid end, silently dropping the dynamics over (t_event, t_end].
+    The engine now re-anchors the post-event state onto the dyadic grid cell
+    at the located event time.
+
+    Probe: constant drift u' = c (EM is drift-exact for ANY dt, so the ONLY
+    error source left is event-resume bookkeeping) with a sawtooth event —
+    cross 0.15 upward, drop by 0.1.  Crossings land every 0.1 time units:
+    9 in [0, 1], so u(1) = c·1 - 9·0.1 = 0.1 exactly.  Grid-end resume
+    loses ~dt/2 of drift per event (and misses late crossings entirely),
+    which fails the bound below by an order of magnitude."""
+    from repro.core.problem import SDEProblem
+    prob = SDEProblem(lambda u, p, t: jnp.ones_like(u) * p[0],
+                      lambda u, p, t: p[1] * u,
+                      jnp.asarray([0.0], jnp.float64),
+                      jnp.asarray([1.0, 1e-10], jnp.float64),
+                      (0.0, 1.0), noise="diagonal", name="ramp")
+    ens = EnsembleProblem(prob, 4)
+    saw = Event(condition=lambda u, p, t: u[0] - 0.15, direction=1,
+                affect=lambda u, p, t: u - 0.1)
+    kw = dict(alg="em", t0=0.0, tf=1.0, dt0=0.05, adaptive=True,
+              rtol=1e-3, atol=1e-5, seed=11, event=saw)
+    for error_est in ("embedded", "doubling"):
+        rv = solve_ensemble_local(ens, ensemble="vmap", error_est=error_est,
+                                  **kw)
+        # re-anchoring quantizes the resume to one dyadic cell past the
+        # event: total drift loss <= 9 events * h_res (h_res = 2^-11 here)
+        np.testing.assert_allclose(np.asarray(rv.u_final)[:, 0], 0.1,
+                                   atol=9 * 2.0 ** -11 + 1e-4,
+                                   err_msg=error_est)
+        # and the re-anchored path stays bitwise-identical across backends
+        rx = solve_ensemble_local(ens, ensemble="kernel", backend="xla",
+                                  error_est=error_est, **kw)
+        rp = solve_ensemble_local(ens, ensemble="kernel", backend="pallas",
+                                  lane_tile=4, error_est=error_est, **kw)
+        for name, r in (("xla", rx), ("pallas", rp)):
+            np.testing.assert_array_equal(
+                np.asarray(rv.u_final), np.asarray(r.u_final),
+                err_msg=f"{error_est}/{name}")
+
+
 def test_event_capability_flag_enforced():
     from repro.core.methods import MethodSpec
     from repro.core.tableaus import TSIT5

@@ -1,0 +1,150 @@
+"""Empirical strong-order convergence for EVERY registered SDE stepper, and
+the embedded-vs-doubling estimator comparison (ISSUE 4 satellite).
+
+All runs are driven by the SAME Brownian paths read from the virtual Brownian
+tree (`kernels/rng.brownian_bridge_point`), so the reference solution is the
+closed-form GBM endpoint on the identical path — a pathwise (strong) test,
+not a statistical one.  Coarse-grid increments are tree increments over
+coarser dyadic spacings, i.e. exactly the increments the adaptive engine
+would use at those step sizes.
+
+Expected strong orders on diagonal-noise GBM:
+  em         0.5   (Ito)
+  milstein   1.0   (Ito; exact diagonal Milstein correction)
+  platen_w2  1.0   (generic strong order is 0.5, but for LINEAR diagonal
+                    noise its (dW²-dt)(b(u+)-b(u-))/(4√dt) term reproduces
+                    the Milstein correction exactly)
+  heun_strat 1.0, against the STRATONOVICH solution (no -v^2/2 drift shift;
+                    commutative linear noise upgrades Heun the same way)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.methods import list_methods
+from repro.core.sde import (SDE_EMBEDDED, SDE_STEPPERS, em_step,
+                            sde_solve_fixed)
+from repro.core.problem import SDEProblem
+from repro.kernels.rng import brownian_bridge_point
+
+R, V, T = 1.2, 0.5, 1.0
+DEPTH = 11                     # fine grid: 2**11 cells
+NPATH = 4000
+SEED = 29
+
+
+def _tree_W(idx):
+    """W at dyadic grid index/indices for NPATH lanes, one noise row."""
+    idx = jnp.asarray(idx, jnp.uint32)
+    lanes = jnp.broadcast_to(jnp.arange(NPATH, dtype=jnp.uint32)[None, :],
+                             idx.shape[:1] + (NPATH,))
+    rows = jnp.zeros_like(lanes)
+    return brownian_bridge_point(SEED, idx[:, None], lanes, rows, depth=DEPTH,
+                                 t_total=T, dtype=jnp.float64)
+
+
+@pytest.fixture(scope="module")
+def wt():
+    """W_T on every path (the exact-solution driver)."""
+    return np.asarray(_tree_W(jnp.asarray([2 ** DEPTH]))[0])
+
+
+def _gbm_prob():
+    return SDEProblem(lambda u, p, t: p[0] * u, lambda u, p, t: p[1] * u,
+                      jnp.asarray([1.0], jnp.float64),
+                      jnp.asarray([R, V], jnp.float64), (0.0, T),
+                      noise="diagonal", name="gbm_conv")
+
+
+def _strong_err(method, n_steps, wt):
+    """RMS endpoint error vs the closed form on the SAME tree paths."""
+    stride = 2 ** DEPTH // n_steps
+    knots = _tree_W(jnp.arange(n_steps + 1, dtype=jnp.uint32) * stride)
+    dt = T / n_steps
+    Z = (knots[1:] - knots[:-1]) / np.sqrt(dt)      # (n_steps, NPATH)
+    prob = _gbm_prob()
+    u0 = jnp.broadcast_to(jnp.asarray([1.0]), (1, NPATH)).astype(jnp.float64)
+    ps = jnp.broadcast_to(prob.p[:, None], (2, NPATH))
+    res = sde_solve_fixed(prob, u0, ps, 0.0, dt, n_steps, key=None,
+                          method=method, save_every=n_steps,
+                          noise_table=Z[:, None, :])
+    if method == "heun_strat":     # Stratonovich: no Ito drift correction
+        exact = np.exp(R * T + V * wt)
+    else:
+        exact = np.exp((R - 0.5 * V * V) * T + V * wt)
+    return float(np.sqrt(np.mean((np.asarray(res.u_final)[0] - exact) ** 2)))
+
+
+def _slope(method, wt, levels=(64, 128, 256)):
+    errs = [_strong_err(method, n, wt) for n in levels]
+    fits = np.polyfit(np.log2(levels), np.log2(errs), 1)
+    return -fits[0], errs
+
+
+EXPECTED_ORDER = {"em": 0.5, "milstein": 1.0, "platen_w2": 1.0,
+                  "heun_strat": 1.0}
+
+
+def test_every_registered_sde_stepper_is_covered():
+    """The table above IS the registry — a new stepper must add its expected
+    strong order here (and the parametrized test below picks it up)."""
+    assert {s.name for s in list_methods("sde")} == set(EXPECTED_ORDER)
+
+
+@pytest.mark.parametrize("method", sorted(EXPECTED_ORDER))
+def test_strong_order_slope(method, wt):
+    want = EXPECTED_ORDER[method]
+    slope, errs = _slope(method, wt)
+    assert all(e2 < e1 for e1, e2 in zip(errs, errs[1:])), errs
+    assert want - 0.17 < slope < want + 0.4, (
+        f"{method}: strong-order slope {slope:.2f}, expected ~{want}")
+
+
+def test_milstein_beats_em_on_the_same_paths(wt):
+    assert _strong_err("milstein", 256, wt) < 0.5 * _strong_err("em", 256, wt)
+
+
+# ---------------------------------------------------------------------------
+# embedded estimate vs step-doubling estimate on linear-SDE steps
+# ---------------------------------------------------------------------------
+
+def _single_step_estimates(n_steps):
+    """Both error estimates over one step of size T/n_steps from the same
+    tree increments, starting from the exact path state at the step's left
+    endpoint (linear SDE => closed form)."""
+    stride = 2 ** DEPTH // n_steps
+    k = n_steps // 2                     # a generic interior step
+    knots = _tree_W(jnp.asarray([k * stride, k * stride + stride // 2,
+                                 (k + 1) * stride], jnp.uint32))
+    dt = T / n_steps
+    t = k * dt
+    w_l, w_m, w_r = knots
+    u = jnp.exp((R - 0.5 * V * V) * t + V * w_l)[None, :]   # exact state (1,N)
+    prob = _gbm_prob()
+    ps = jnp.broadcast_to(prob.p[:, None], (2, NPATH))
+    dW1, dW2, dWf = (w_m - w_l)[None], (w_r - w_m)[None], (w_r - w_l)[None]
+
+    _, emb = SDE_EMBEDDED["em"].fn(prob.f, prob.g, u, ps, t, dt, dWf,
+                                   "diagonal")
+    u_c = em_step(prob.f, prob.g, u, ps, t, dt, dWf, "diagonal")
+    u_h = em_step(prob.f, prob.g, u, ps, t, 0.5 * dt, dW1, "diagonal")
+    u_2 = em_step(prob.f, prob.g, u_h, ps, t + 0.5 * dt, 0.5 * dt, dW2,
+                  "diagonal")
+    dbl = (u_2 - u_c) / (2.0 ** 0.5 - 1.0)   # Richardson, as the engine does
+    return np.asarray(emb)[0], np.asarray(dbl)[0]
+
+
+def test_embedded_estimate_within_constant_factor_of_doubling():
+    """The two estimators target the same local error: their ensemble-mean
+    magnitudes agree within a constant factor across step sizes (so swapping
+    estimators rescales tolerances by O(1), it does not change the method)."""
+    for n_steps in (32, 128):
+        emb, dbl = _single_step_estimates(n_steps)
+        m_emb, m_dbl = np.mean(np.abs(emb)), np.mean(np.abs(dbl))
+        assert 0.1 < m_emb / m_dbl < 10.0, (n_steps, m_emb, m_dbl)
+        # and both shrink ~linearly with dt on the stochastic-dominated GBM
+    e32, d32 = (np.mean(np.abs(x)) for x in _single_step_estimates(32))
+    e256, d256 = (np.mean(np.abs(x)) for x in _single_step_estimates(256))
+    assert 4.0 < e32 / e256 < 16.0
+    assert 4.0 < d32 / d256 < 16.0
