@@ -2,11 +2,19 @@
 
 The paper's stiff story (GPURosenbrock23 / GPURodas4 / GPURodas5P) measured
 here as a work-precision sweep on Robertson's kinetics: for each method and
-tolerance, wall time, RHS-evaluation work (nf), accepted/rejected steps, and
-the final-state relative error against a tight Rodas5P reference solve.  The
-fused-kernel lanes strategy is compared against the vmap-XLA baseline (the
-paper's Fig. 5/6 axis, restricted to the stiff family), and the analytic-
-Jacobian hook (`ODEProblem.jac`) against the jacfwd fallback.
+tolerance, wall time, RHS-evaluation work (nf), Jacobian/factorization work
+(njac/nfact), accepted/rejected steps, and the final-state relative error
+against a tight Rodas5P reference solve.  The fused-kernel lanes strategy is
+compared against the vmap-XLA baseline (the paper's Fig. 5/6 axis, restricted
+to the stiff family), the analytic-Jacobian hook (`ODEProblem.jac`) against
+the jacfwd fallback, and — the lazy-W hot path — `w_reuse=True` (Jacobian &
+LU(W) reuse across steps under the `WReusePolicy` freshness controller, with
+extrapolated-secant touch-ups) against today's eager every-step behaviour, on
+ROBER and OREGO ensembles.
+
+The acceptance summary interpolates the eager work-precision curve at the
+reuse run's achieved error (matched accuracy, log-log), comparing total
+rhs+jac work units  nf + n·njac  and raw Jacobian counts.
 
 ROBER spans ~9 orders of magnitude in its rate constants, so the benchmark
 force-enables float64 (jax_enable_x64) — in f32 the sweep is meaningless.
@@ -26,6 +34,8 @@ import jax
 N, TSPAN, DT0 = 32, (0.0, 1e4), 1e-6
 RTOLS = (1e-4, 1e-6, 1e-8)
 METHODS = ("rosenbrock23", "rodas4", "rodas5p")
+N_STATE = 3                      # ROBER/OREGO state dim: jac ≈ n rhs units
+REUSE_METHODS = ("rosenbrock23", "rodas4")   # lazy-W A/B sweep
 
 
 def main() -> None:
@@ -39,11 +49,20 @@ def main() -> None:
         jax.config.update("jax_enable_x64", prev_x64)
 
 
+def _interp_loglog(x, xs, ys):
+    """log-log interpolation of the (xs, ys) work-precision curve at x."""
+    import numpy as np
+    lx, lxs, lys = np.log(x), np.log(xs), np.log(ys)
+    order = np.argsort(lxs)
+    return float(np.exp(np.interp(lx, lxs[order], lys[order])))
+
+
 def _main_x64() -> None:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.configs.de_problems import rober_ensemble
+    from repro.configs.de_problems import EnsembleProblem, orego_problem, \
+        rober_ensemble
     from repro.core import solve_ensemble_local
 
     from .common import HEADER, bench, row
@@ -51,28 +70,40 @@ def _main_x64() -> None:
     print(HEADER)
     ens = rober_ensemble(N, tspan=TSPAN)
     ens_ad = rober_ensemble(N, tspan=TSPAN, analytic_jac=False)
+    ens_orego = EnsembleProblem(orego_problem(), 8)
 
-    def solve(alg, strategy, rtol, ep=ens):
+    def solve(alg, strategy, rtol, ep=ens, w_reuse=None, dt0=DT0):
         return solve_ensemble_local(
-            ep, alg=alg, ensemble=strategy, backend="xla", dt0=DT0,
-            rtol=rtol, atol=rtol * 1e-2)
+            ep, alg=alg, ensemble=strategy, backend="xla", dt0=dt0,
+            rtol=rtol, atol=rtol * 1e-2, w_reuse=w_reuse)
 
     ref = np.asarray(solve("rodas5p", "kernel", 1e-10).u_final)
     scale = np.abs(ref) + 1e-30
+    ref_orego = np.asarray(solve("rodas5p", "kernel", 1e-10, ep=ens_orego,
+                                 dt0=1e-4).u_final)
+    scale_orego = np.abs(ref_orego) + 1e-30
     records = {}
 
-    def record(tag, alg, strategy, rtol, ep=ens):
-        fn = jax.jit(lambda: solve(alg, strategy, rtol, ep).u_final)
+    def record(tag, alg, strategy, rtol, ep=ens, w_reuse=None, dt0=DT0,
+               rf=None, sc=None):
+        rf = ref if rf is None else rf
+        sc = scale if sc is None else sc
+        fn = jax.jit(
+            lambda: solve(alg, strategy, rtol, ep, w_reuse, dt0).u_final)
         secs = bench(fn)
-        res = solve(alg, strategy, rtol, ep)
-        err = float(np.max(np.abs(np.asarray(res.u_final) - ref) / scale))
+        res = solve(alg, strategy, rtol, ep, w_reuse, dt0)
+        err = float(np.max(np.abs(np.asarray(res.u_final) - rf) / sc))
+        njac, nfact = int(res.njac), int(res.nfact)
+        work = int(res.nf) + N_STATE * njac
         print(row(f"stiff/{tag}", secs,
-                  f"err={err:.2e} nf={int(res.nf)} "
+                  f"err={err:.2e} nf={int(res.nf)} njac={njac} "
                   f"naccept={int(np.max(np.asarray(res.naccept)))}"))
         records[tag] = {
             "seconds": secs, "err": err, "nf": int(res.nf),
+            "njac": njac, "nfact": nfact, "work_units": work,
             "naccept_max": int(np.max(np.asarray(res.naccept))),
             "nreject_total": int(np.sum(np.asarray(res.nreject)))}
+        return records[tag]
 
     for alg in METHODS:
         for rtol in RTOLS:
@@ -84,12 +115,60 @@ def _main_x64() -> None:
     record("rodas4/kernel/jacfwd/rtol=1e-6", "rodas4", "kernel", 1e-6,
            ep=ens_ad)
 
+    # ---- lazy-W reuse-on/off sweep (ISSUE 5 tentpole) ----------------------
+    # same strategy/backend, w_reuse on vs off; matched-accuracy comparison
+    # via log-log interpolation of the eager curve at the reuse run's error
+    acceptance = {}
+    for alg in REUSE_METHODS:
+        on_recs = {}
+        for rtol in RTOLS:
+            on_recs[rtol] = record(f"{alg}/kernel/w_reuse/rtol={rtol:g}",
+                                   alg, "kernel", rtol, w_reuse=True)
+        off = [records[f"{alg}/kernel/rtol={r:g}"] for r in RTOLS]
+        errs = np.asarray([o["err"] for o in off])
+        for rtol in (1e-6, 1e-8):
+            on = on_recs[rtol]
+            if not (errs.min() <= on["err"] <= errs.max()):
+                # outside the eager curve's hull: np.interp would CLAMP to
+                # the endpoint and silently flatter the ratio — skip instead
+                continue
+            work_off = _interp_loglog(
+                on["err"], errs, np.asarray([o["work_units"] for o in off]))
+            njac_off = _interp_loglog(
+                on["err"], errs, np.asarray([o["njac"] for o in off]))
+            acceptance[f"{alg}/rtol={rtol:g}"] = {
+                "err": on["err"],
+                "njac_ratio_matched": njac_off / max(on["njac"], 1),
+                "work_ratio_matched": work_off / on["work_units"],
+                "njac_ratio_same_rtol":
+                    records[f"{alg}/kernel/rtol={rtol:g}"]["njac"]
+                    / max(on["njac"], 1),
+                "work_ratio_same_rtol":
+                    records[f"{alg}/kernel/rtol={rtol:g}"]["work_units"]
+                    / on["work_units"]}
+    # OREGO: the second stiff ensemble of the sweep (relaxation oscillator)
+    for w, tag in ((None, "orego/kernel/rtol=1e-6"),
+                   (True, "orego/kernel/w_reuse/rtol=1e-6")):
+        record(tag, "rosenbrock23", "kernel", 1e-6, ep=ens_orego,
+               w_reuse=w, dt0=1e-4, rf=ref_orego, sc=scale_orego)
+    best = max(acceptance.values(),
+               key=lambda a: a["work_ratio_matched"]) if acceptance else None
+    passed = bool(best and best["njac_ratio_matched"] >= 2.0
+                  and best["work_ratio_matched"] >= 1.3)
+    print(f"# lazy-W acceptance: {json.dumps(acceptance, sort_keys=True)}")
+    print(f"# lazy-W bar (njac>=2x, work>=1.3x, matched accuracy): "
+          f"{'PASS' if passed else 'FAIL'}")
+
     os.makedirs("results", exist_ok=True)
     out = os.path.join("results", "BENCH_stiff.json")
     with open(out, "w") as fp:
         json.dump({"N": N, "problem": f"rober(tspan={TSPAN})",
                    "reference": "rodas5p kernel rtol=1e-10",
-                   "records": records}, fp, indent=2, sort_keys=True)
+                   "work_units": f"nf + {N_STATE}*njac",
+                   "records": records,
+                   "w_reuse_acceptance": acceptance,
+                   "w_reuse_bar_passed": passed}, fp, indent=2,
+                  sort_keys=True)
     print(f"# wrote {out}")
 
 

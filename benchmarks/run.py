@@ -29,6 +29,36 @@ MODULES = [
 ]
 
 
+def check_bench_imports(modname: str) -> None:
+    """Bitrot guard for `--dry`: bench modules import their shared helpers
+    lazily inside main() (so a dry import stays cheap), which means a plain
+    import check never executes `from .common import bench, row` — rename a
+    helper in common.py and every benchmark breaks only at timing time.
+    Statically walk the module's AST and verify every name imported from
+    within the benchmarks package actually exists."""
+    import ast
+    import importlib
+    import inspect
+
+    mod = importlib.import_module(modname)
+    tree = ast.parse(inspect.getsource(mod))
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ImportFrom):
+            continue
+        if node.level:                       # from .common import ...
+            target = "benchmarks" + ("." + node.module if node.module else "")
+        elif node.module and node.module.startswith("benchmarks"):
+            target = node.module
+        else:
+            continue
+        tmod = importlib.import_module(target)
+        for alias in node.names:
+            if alias.name != "*" and not hasattr(tmod, alias.name):
+                raise AssertionError(
+                    f"{modname}: `from {target} import {alias.name}` names "
+                    "a symbol that no longer exists (signature drift)")
+
+
 def print_roofline_summary():
     for tag, results_dir in (("baseline", "results"),
                              ("optimized", "results_optimized")):
@@ -69,6 +99,7 @@ def main() -> None:
             try:
                 mod = importlib.import_module(modname)
                 assert callable(getattr(mod, "main")), f"{modname}.main"
+                check_bench_imports(modname)
                 print(f"# {modname}: ok")
             except Exception as e:  # noqa: BLE001 — report all, then fail
                 failed.append(modname)

@@ -6,7 +6,9 @@
 from .problem import EnsembleProblem, ODEProblem, SDEProblem
 from .tableaus import (ROSENBROCK_TABLEAUS, TABLEAUS, RosenbrockTableau,
                        get_rosenbrock_tableau, get_tableau)
-from .controller import PIController, hairer_norm, initial_dt
+from .controller import (STATUS_DTMIN_EXHAUSTED, STATUS_MAX_ITERS,
+                         STATUS_SUCCESS, PIController, WReusePolicy,
+                         hairer_norm, initial_dt)
 from .methods import MethodSpec, get_method, list_methods, register_method
 from .events import Event
 from .solvers import (AdaptiveOptions, SolveResult, interp_step,
@@ -16,7 +18,9 @@ from .ensemble import EnsembleResult, solve_ensemble_local
 __all__ = [
     "EnsembleProblem", "ODEProblem", "SDEProblem",
     "TABLEAUS", "get_tableau", "ROSENBROCK_TABLEAUS", "RosenbrockTableau",
-    "get_rosenbrock_tableau", "PIController", "hairer_norm", "initial_dt",
+    "get_rosenbrock_tableau", "PIController", "WReusePolicy", "hairer_norm",
+    "initial_dt", "STATUS_SUCCESS", "STATUS_MAX_ITERS",
+    "STATUS_DTMIN_EXHAUSTED",
     "MethodSpec", "get_method", "list_methods", "register_method",
     "AdaptiveOptions", "Event", "SolveResult", "interp_step", "rk_step",
     "solve_adaptive", "solve_fixed", "solve_one",

@@ -74,16 +74,19 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
         res = solve_ensemble_local(sub, lane_offset=base_offset + idx * n_local,
                                    **kw)
         # per-shard scalars -> global via psum (lightweight stats only)
-        nf = res.nf
+        nf, njac, nfact = res.nf, res.njac, res.nfact
         for a in axes:
             nf = jax.lax.psum(nf, a)
-        return res._replace(nf=nf)
+            njac = jax.lax.psum(njac, a)
+            nfact = jax.lax.psum(nfact, a)
+        return res._replace(nf=nf, njac=njac, nfact=nfact)
 
     fn = shard_map(local, mesh=mesh,
                    in_specs=(spec, spec),
                    out_specs=EnsembleResult(
                        ts=P(), us=spec, u_final=spec, t_final=spec,
-                       naccept=spec, nreject=spec, nf=P(), status=P()),
+                       naccept=spec, nreject=spec, nf=P(), status=P(),
+                       njac=P(), nfact=P()),
                    check_rep=False)
     return fn(u0s, ps)
 

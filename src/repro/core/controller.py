@@ -10,6 +10,15 @@ from typing import NamedTuple
 
 import jax.numpy as jnp
 
+# Adaptive-loop status codes (SolveResult.status / EnsembleResult.status).
+# Every engine (ERK / Rosenbrock / SDE) reports the same vocabulary:
+STATUS_SUCCESS = 0          # reached tf (or a terminal event)
+STATUS_MAX_ITERS = 1        # iteration cap hit with lanes still running
+STATUS_DTMIN_EXHAUSTED = 2  # dt pinned at the controller floor and the step
+#                             still rejects: retrying the identical step is a
+#                             deterministic live-lock, so the lane terminates
+#                             with this code instead of spinning to max_iters
+
 
 class PIController(NamedTuple):
     """Proportional-integral step controller (Hairer PI; paper eq. 4 + PI update).
@@ -59,8 +68,14 @@ def pi_propose(ctrl: PIController, dt, enorm, enorm_prev, accept):
     On accept: PI formula with history term.
     On reject: pure P shrink (history term dropped, growth capped at 1).
     All args broadcast; `accept` may be a per-lane boolean mask.
+
+    A non-finite error norm (NaN/inf candidate state) is treated as a huge
+    error: maximum shrink.  Without this, the NaN would propagate into dt
+    itself and the lane could never recover — it would spin rejecting at a
+    NaN step size until max_iters instead of shrinking toward dtmin (where
+    the engines' DTMIN_EXHAUSTED detection terminates it).
     """
-    e = jnp.maximum(enorm, 1e-10)  # guard err==0 (exact step) -> max growth
+    e = jnp.where(jnp.isfinite(enorm), jnp.maximum(enorm, 1e-10), 1e10)
     ep = jnp.maximum(enorm_prev, 1e-10)
     fac_pi = ctrl.safety * e ** (-ctrl.beta1) * ep ** ctrl.beta2
     fac_acc = jnp.clip(fac_pi, ctrl.qmin, ctrl.qmax)
@@ -69,6 +84,102 @@ def pi_propose(ctrl: PIController, dt, enorm, enorm_prev, accept):
     dt_next = jnp.clip(dt * fac, ctrl.dtmin, ctrl.dtmax)
     enorm_prev_next = jnp.where(accept, e, enorm_prev)
     return dt_next, enorm_prev_next
+
+
+class WReusePolicy(NamedTuple):
+    """Freshness controller for lazy-W stiff stepping (sibling of PIController).
+
+    W-methods are order-robust to stale Jacobians by construction: the order
+    conditions of a W-method hold for an ARBITRARY matrix W, so reusing J (and
+    the factored W) across steps trades nothing but step-acceptance efficiency
+    for a large cut in linear-algebra work — exactly where batched stiff
+    solvers win or lose their throughput (MPGOS, torchode).  This policy
+    decides, per step attempt and per lane, two independent freshness levels:
+
+      * re-evaluate J (``need_jac`` — the expensive ``jac``/``jacfwd`` pass):
+        after a rejection taken with a reused J (with secant updates off, the
+        retry then runs at the SAME dt — blame the linearization before
+        punishing the step size), when the error norm of an accepted step
+        grew past the predictive ``enorm_limit`` or by more than ``growth``
+        versus the previous accepted step (refresh BEFORE the controller
+        starts rejecting or shrinking dt), or after ``max_age`` accepted
+        steps on the same J;
+      * re-factor W = I − γh·J from the CACHED J (``need_fact`` — cheap, one
+        batched LU): whenever J refreshes, and additionally when the step size
+        drifted from the dt the factorization was built at by more than the
+        γ-scaled threshold  γ·|dt − dt_fact| > dt_rtol·dt_fact  (larger γ
+        makes W more sensitive to dt, so the trigger tightens with γ).
+
+    Between full refreshes the cached J is kept alive by an EXTRAPOLATED
+    SECANT (Broyden) update per accepted step — rank-1, O(n²), zero extra
+    RHS evaluations (it reuses the step's own f(u) that the stage loop needs
+    anyway):
+
+        J ← J + secant · (Δf − J·Δu)·Δuᵀ / (Δuᵀ·Δu)
+
+    ``secant = 1`` is the classical good-Broyden update and reconstructs the
+    MIDPOINT Jacobian along the step direction; the default ``secant = 2``
+    extrapolates to the ENDPOINT state — exact (along Δu) whenever J is
+    affine in u, i.e. for every quadratic RHS: mass-action chemical kinetics
+    (ROBER, OREGO), Riccati terms, advection-with-quadratic-reaction.  On
+    ROBER this turns a ~3x per-step stale-J error inflation into ~1.0 out to
+    ages beyond 16 steps, which is what lets the lazy path cut `njac` by an
+    order of magnitude at unchanged step counts.  ``secant = 0`` disables
+    the touch-up (pure frozen-J reuse).
+
+    The decision is a pure function of per-lane quantities (dt, dt_fact,
+    enorm, accept, age) that are identical on every strategy (vmap / array /
+    kernel) and backend (xla / pallas), so reuse-on trajectories satisfy the
+    same cross-strategy parity contract as reuse-off ones.
+    """
+
+    dt_rtol: float = 0.005    # γ-scaled dt-drift refactor threshold
+    growth: float = 4.0       # accepted-enorm growth ratio forcing a J refresh
+    #                           (loose on purpose: a reused J settles at a
+    #                           benign ~2-3x enorm equilibrium on a W-method —
+    #                           a tight ratio would re-trigger on that jump
+    #                           every other step and thrash)
+    enorm_limit: float = 0.9  # predictive refresh: accepted enorm above this
+    #                           means the reused linearization is running out
+    #                           of headroom — refresh before steps reject
+    max_age: int = 20         # accepted steps per Jacobian, hard cap
+    secant: float = 2.0       # extrapolated-secant gain (0 = disable; 1 =
+    #                           classical Broyden midpoint; 2 = endpoint)
+
+
+def w_refresh(policy: WReusePolicy, gamma, dt, dt_fact, jac_stale):
+    """Pre-step freshness decision. Returns (need_jac, need_fact).
+
+    `jac_stale` is the flag carried from `w_mark_stale` on the previous
+    attempt; `dt` is the dt about to be used, `dt_fact` the dt W was last
+    factored at.  All args broadcast (scalar or per-lane (B,))."""
+    drift = gamma * jnp.abs(dt - dt_fact) > policy.dt_rtol * dt_fact
+    return jac_stale, jac_stale | drift
+
+
+def w_mark_stale(policy: WReusePolicy, accept, enorm, enorm_prev, age, fresh):
+    """Post-step staleness signal for the NEXT attempt's `need_jac`.
+
+    accept/enorm are this attempt's outcome, `enorm_prev` the previous
+    ACCEPTED error norm (pre-update), `age` the accepted-step age of J after
+    this attempt, `fresh` whether J was re-evaluated for this attempt (a
+    rejection taken with a fresh J is a dt problem, not a J problem)."""
+    rej_stale = ~accept & ~fresh
+    grew = accept & ((enorm > policy.growth * enorm_prev)
+                     | (enorm > policy.enorm_limit))
+    return rej_stale | grew | (age >= policy.max_age)
+
+
+def w_dt_blame(accept, fresh, dt, dt_proposed):
+    """Rejection triage (secant updates OFF only): a step rejected on a
+    frozen reused J retries at the same dt with a fresh J — the
+    linearization, not the step size, is the prime suspect; without this,
+    every reuse run would end by slashing dt and paying many small steps to
+    regrow it.  Fresh-J rejections keep the PI controller's shrink.  With
+    secant updates on, the cached J tracks the state well enough that a
+    rejection IS a dt problem, so the engine skips this triage (the retry
+    would reproduce the same candidate and reject again)."""
+    return jnp.where(~accept & ~fresh, dt, dt_proposed)
 
 
 def initial_dt(f, u0, p, t0, tf, order, atol, rtol):

@@ -83,6 +83,8 @@ class EnsembleResult(NamedTuple):
     nreject: Array
     nf: Array        # total RHS evaluations (work proxy; paper's overhead story)
     status: Array
+    njac: Array = 0  # total Jacobian evaluations (stiff family; 0 elsewhere)
+    nfact: Array = 0  # total W = I − γh·J factorizations (stiff family)
 
 
 def _pad_to(x, n_target, axis=0):
@@ -95,9 +97,16 @@ def _pad_to(x, n_target, axis=0):
 
 
 def _tile_lanes(u0s, ps, lane_tile):
-    """(N, k)-major arrays -> (T, B, k) tiles for the XLA lanes path."""
+    """(N, k)-major arrays -> (T, B, k) tiles for the XLA lanes path.
+
+    The vector width matches `kernels.ensemble_kernel.padded_lane_width`
+    exactly: XLA codegen is width-sensitive at the ulp level (FMA/SIMD
+    contraction), so the lanes oracle and the Pallas kernel must run the
+    SAME width to stay bitwise-comparable.  (`array` strategy passes
+    lane_tile == N and keeps the whole-ensemble width.)"""
+    from repro.kernels.ensemble_kernel import padded_lane_width
     N = u0s.shape[0]
-    B = min(lane_tile, N)
+    B = padded_lane_width(N, lane_tile)
     T = -(-N // B)
     u0p = _pad_to(u0s, T * B).reshape(T, B, u0s.shape[1])
     psp = _pad_to(ps, T * B).reshape(T, B, ps.shape[1])
@@ -108,13 +117,22 @@ def _untile(res, N, n):
     """Invert _tile_lanes on a lanes-mode SolveResult mapped over tiles."""
     us = jnp.moveaxis(res.us, -1, 1).reshape(-1, res.us.shape[1], n)[:N]
     u_final = jnp.moveaxis(res.u_final, -1, 1).reshape(-1, n)[:N]
+
+    def total(v):
+        # per-lane (T, B) work counters -> padded-lane-free total; scalar
+        # defaults (non-stiff families leave njac/nfact at 0) pass through
+        if jnp.ndim(v) == 0:
+            return jnp.asarray(v)
+        return jnp.sum(v.reshape(-1)[:N])
+
     return EnsembleResult(
         ts=res.ts[0], us=us, u_final=u_final,
         t_final=res.t_final.reshape(-1)[:N],
         naccept=res.naccept.reshape(-1)[:N],
         nreject=res.nreject.reshape(-1)[:N],
-        nf=jnp.sum(res.nf.reshape(-1)[:N]),
-        status=jnp.max(res.status))
+        nf=total(res.nf),
+        status=jnp.max(res.status),
+        njac=total(res.njac), nfact=total(res.nfact))
 
 
 # ----------------------------------------------------------------------------
@@ -332,7 +350,7 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
 
 def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                       t0, tf, dt0, saveat, rtol, atol, lane_tile, max_iters,
-                      linsolve, event):
+                      linsolve, event, w_reuse):
     from .rosenbrock import solve_rosenbrock
 
     rtab = spec.rtableau
@@ -343,6 +361,8 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
         raise ValueError(
             f"rosenbrock method {spec.name!r} has no embedded error weights "
             "(btilde == 0); the stiff engine requires an adaptive pair")
+    if w_reuse is None:
+        w_reuse = spec.w_reuse   # method default; False = eager every step
     jac = getattr(prob, "jac", None)  # analytic-Jacobian hook (jacfwd if None)
     if saveat is None:
         saveat = jnp.asarray([tf], u0s.dtype)
@@ -353,7 +373,8 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
         def one(u0, p):
             return solve_rosenbrock(prob.f, rtab, u0, p, t0, tf, dt0,
                                     rtol=rtol, atol=atol, saveat=saveat,
-                                    max_iters=max_iters, jac=jac, event=event)
+                                    max_iters=max_iters, jac=jac, event=event,
+                                    w_reuse=w_reuse)
 
         res = jax.vmap(one)(u0s, ps)
         if event is not None:
@@ -361,7 +382,9 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
         return EnsembleResult(ts=saveat, us=res.us, u_final=res.u_final,
                               t_final=res.t_final, naccept=res.naccept,
                               nreject=res.nreject, nf=jnp.sum(res.nf),
-                              status=jnp.max(res.status))
+                              status=jnp.max(res.status),
+                              njac=jnp.sum(res.njac),
+                              nfact=jnp.sum(res.nfact))
 
     if ensemble in ("array", "kernel"):
         if ensemble == "kernel" and backend == "pallas":
@@ -371,12 +394,14 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
             body = rosenbrock_body(prob.f, rtab, jac=jac, t0=float(t0),
                                    tf=float(tf), dt0=float(dt0),
                                    rtol=float(rtol), atol=float(atol),
-                                   max_iters=max_iters, event=event)
+                                   max_iters=max_iters, event=event,
+                                   w_reuse=w_reuse)
             return run_ensemble_kernel(
                 body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
                 lane_tile=lane_tile,
-                work_words=rosenbrock_work_words(n, ps.shape[1],
-                                                 stages=rtab.stages))
+                work_words=rosenbrock_work_words(
+                    n, ps.shape[1], stages=rtab.stages,
+                    w_reuse=bool(w_reuse)))
 
         # "array": whole ensemble as ONE lanes tile. A lock-step scalar-dt
         # Rosenbrock would need an (N·n)-sized Jacobian per global step, so
@@ -392,7 +417,7 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                                    rtol=rtol, atol=atol, saveat=saveat,
                                    max_iters=max_iters, lanes=True,
                                    linsolve=linsolve, lane_tile=B, jac=jac,
-                                   event=event)
+                                   event=event, w_reuse=w_reuse)
             if event is not None:
                 res, _ = res
             return res
@@ -659,7 +684,8 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                          n_steps=None, save_every=1, lane_tile=None,
                          max_iters=100_000, event=None, key=None, seed=None,
                          noise_table=None, linsolve="jnp", lane_offset=0,
-                         brownian_depth=None, error_est=None) -> EnsembleResult:
+                         brownian_depth=None, error_est=None,
+                         w_reuse=None) -> EnsembleResult:
     """Single-device ensemble solve — ANY registered method through ANY
     strategy and backend (the unified front door; see docs/architecture.md).
 
@@ -675,6 +701,11 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
       backend: ``"xla"`` (fused lax loops) or ``"pallas"`` (the generic
         ensemble Pallas kernel) — kernel strategy only.
       t0, tf, dt0: time span (defaults from ``prob.tspan``) and initial step.
+        ``dt0=None`` (erk/rosenbrock only) derives the initial step from
+        Hairer's two-evaluation heuristic (`repro.core.controller.initial_dt`)
+        per trajectory, takes the ensemble minimum, and — unlike naive
+        auto-dt wiring — COUNTS the 2·N probe RHS evaluations in the
+        returned ``nf`` so work-precision sweeps stay honest.
       saveat: snapshot time grid (S,). Adaptive paths interpolate dense
         output onto it; fixed-dt SDE uses ``n_steps``/``save_every`` instead.
       rtol, atol: adaptive error-control tolerances.
@@ -702,6 +733,17 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
       noise_table: optional pre-drawn (n_steps, m, N) N(0,1) table (fixed-dt
         SDE only), bypassing the counter RNG.
       linsolve: Rosenbrock W-solve mode ("jnp" | "pallas" | "lanes").
+      w_reuse: Rosenbrock lazy-W control — ``None`` takes the method's
+        `MethodSpec.w_reuse` default, ``False`` forces today's eager
+        every-step Jacobian + factorization (bitwise-identical to the
+        pre-lazy engine), ``True`` enables the default
+        `repro.core.controller.WReusePolicy`, and a `WReusePolicy` instance
+        customizes the freshness thresholds.  Reuse-on trajectories satisfy
+        the same cross-strategy/backend parity contract; `njac`/`nfact`
+        report the (much smaller) linear-algebra work.  Wall-time savings
+        materialize on the lanes strategies (``"array"``/``"kernel"``, where
+        the refresh is an any()-gated `lax.cond`); under ``"vmap"`` batching
+        the cond lowers to a select and only the *counted* work drops.
       lane_offset: GLOBAL index of this shard's first trajectory — keeps
         counter-RNG streams disjoint when `repro.core.api.solve_ensemble`
         splits an SDE ensemble over a mesh.  Local solves leave it 0.
@@ -723,6 +765,39 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
         raise ValueError(
             f"method {spec.name!r} declares events=False; pick a method whose "
             "MethodSpec supports event handling")
+
+    if w_reuse and spec.family != "rosenbrock":
+        # only a truthy request is an error: w_reuse=False/None stays the
+        # documented universal no-op, so generic sweeps can pass it blindly
+        raise ValueError(
+            "w_reuse controls the Rosenbrock lazy-W hot path; "
+            f"{spec.name!r} ({spec.family}) has no W = I − γh·J to reuse")
+
+    auto_dt_nf = 0
+    if dt0 is None:
+        # Hairer auto-dt: two probe f evaluations PER TRAJECTORY, charged to
+        # nf below so auto-dt runs stop flattering work-precision plots
+        if spec.family == "sde":
+            raise ValueError(
+                "dt0=None (automatic initial step) is erk/rosenbrock only; "
+                "SDE stepping needs an explicit dt0")
+        from .controller import initial_dt
+        order = max(1, int(round(spec.order)))
+        h = jax.vmap(lambda u0, pp: initial_dt(prob.f, u0, pp, t0, tf, order,
+                                               atol, rtol))(u0s, ps)
+        dt0 = jnp.min(h)
+        if backend == "pallas":
+            # the fused kernel bakes dt0 into its closure (same constraint
+            # as t0/tf/seed) — surface the jit limitation clearly instead of
+            # crashing at float() deep inside the kernel factory
+            try:
+                dt0 = float(dt0)
+            except jax.errors.ConcretizationTypeError:
+                raise ValueError(
+                    "dt0=None with backend='pallas' requires eager dispatch "
+                    "(the kernel closure specializes dt0, like t0/tf/seed); "
+                    "compute initial_dt outside jit or use backend='xla'")
+        auto_dt_nf = 2 * u0s.shape[0]
 
     if spec.family == "sde":
         if not isinstance(prob, SDEProblem):
@@ -749,14 +824,19 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
             f"(e.g. alg='em'), not {spec.name!r}")
 
     if spec.family == "rosenbrock":
-        return _solve_rosenbrock(spec, prob, u0s, ps, ensemble=ensemble,
-                                 backend=backend, t0=t0, tf=tf, dt0=dt0,
-                                 saveat=saveat, rtol=rtol, atol=atol,
-                                 lane_tile=lane_tile, max_iters=max_iters,
-                                 linsolve=linsolve, event=event)
-
-    return _solve_erk(spec, prob, u0s, ps, ensemble=ensemble, backend=backend,
-                      t0=t0, tf=tf, dt0=dt0, saveat=saveat, rtol=rtol,
-                      atol=atol, adaptive=adaptive, n_steps=n_steps,
-                      save_every=save_every, lane_tile=lane_tile,
-                      max_iters=max_iters, event=event)
+        res = _solve_rosenbrock(spec, prob, u0s, ps, ensemble=ensemble,
+                                backend=backend, t0=t0, tf=tf, dt0=dt0,
+                                saveat=saveat, rtol=rtol, atol=atol,
+                                lane_tile=lane_tile, max_iters=max_iters,
+                                linsolve=linsolve, event=event,
+                                w_reuse=w_reuse)
+    else:
+        res = _solve_erk(spec, prob, u0s, ps, ensemble=ensemble,
+                         backend=backend, t0=t0, tf=tf, dt0=dt0,
+                         saveat=saveat, rtol=rtol, atol=atol,
+                         adaptive=adaptive, n_steps=n_steps,
+                         save_every=save_every, lane_tile=lane_tile,
+                         max_iters=max_iters, event=event)
+    if auto_dt_nf:
+        res = res._replace(nf=res.nf + auto_dt_nf)
+    return res

@@ -53,6 +53,12 @@ class MethodSpec:
     adaptive:  the method supports adaptive stepping — an embedded error pair
                (erk/rosenbrock) or, for sde, one of the `error_est`
                estimators with virtual-Brownian-tree noise.
+    w_reuse:   rosenbrock only — the method's DEFAULT for the lazy-W hot path
+               (Jacobian & LU(W) reuse across steps under a
+               `repro.core.controller.WReusePolicy`).  The safe default is
+               False: every-step re-evaluation/re-factorization, bitwise
+               today's behaviour.  Callers override per solve with
+               ``solve_ensemble_local(..., w_reuse=True | WReusePolicy(...))``.
     events:    the method's engines support zero-crossing event handling with
                per-lane termination (`repro.core.events`).  True for every
                built-in family; a capability flag so the front door can reject
@@ -89,6 +95,7 @@ class MethodSpec:
     adaptive: bool = True
     events: bool = True
     stiff: bool = False
+    w_reuse: bool = False
     noise: Tuple[str, ...] = ()
     aliases: Tuple[str, ...] = ()
 
@@ -103,6 +110,10 @@ class MethodSpec:
                 f"rosenbrock method {self.name!r} needs an rtableau")
         if self.family == "sde" and self.stepper is None:
             raise ValueError(f"sde method {self.name!r} needs a stepper")
+        if self.w_reuse and self.family != "rosenbrock":
+            raise ValueError(
+                f"method {self.name!r}: `w_reuse` is a rosenbrock-family "
+                "capability (there is no W = I − γh·J to reuse elsewhere)")
         if self.embedded is not None and self.family != "sde":
             raise ValueError(
                 f"method {self.name!r}: `embedded` pairs are an sde-family "

@@ -9,7 +9,13 @@ Rosenbrock23 (2 effective stages), Rodas4 (6) and Rodas5P (8) — and any
 future tableau that passes the Rosenbrock order-condition checker
 (`repro.core.order_conditions`).
 
-Per step the engine factors W = I − γh·J once and back-substitutes s times:
+Per step the engine factors W = I − γh·J once and back-substitutes s times —
+and with `w_reuse` (the lazy-W hot path) it goes further: J, the factored
+LU(W) and the dt it was factored at ride the while_loop carry, refreshed per
+lane only when the `WReusePolicy` freshness controller asks (rejection with a
+reused J, accepted-error growth, γ-scaled dt drift, age), with an
+extrapolated-secant rank-1 touch-up keeping the cached J honest in between
+(`repro.core.controller.WReusePolicy`).  The stage solves are:
 
     g_i   = u + Σ_{j<i} a_ij U_j
     W U_i = γh f(g_i, t + c_i h) + γ Σ_{j<i} C_ij U_j + γ d_i h² f_t
@@ -31,7 +37,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .controller import PIController, hairer_norm, pi_propose
+from .controller import (STATUS_DTMIN_EXHAUSTED, PIController, WReusePolicy,
+                         hairer_norm, pi_propose, w_dt_blame, w_mark_stale,
+                         w_refresh)
 from .events import Event, handle_event, hermite_interp
 from .solvers import SolveResult
 from .tableaus import ROS23W, RosenbrockTableau
@@ -48,29 +56,92 @@ def _jac_lanes(f, u, p, t, jac=None):
     return jax.vmap(jax.jacfwd(f), in_axes=(-1, -1, t_ax))(u, p, t)
 
 
-def _make_linsolver(W, mode, lane_tile):
-    """Factor W ONCE, return a rhs -> x closure for the s per-stage solves.
+# ---------------------------------------------------------------------------
+# lazy-W adapters: build / factor / resolve / masked-select per linsolve mode.
+# The factored state is an ordinary pytree of arrays, so it can live in the
+# adaptive while_loop carry and be refreshed per lane under a mask — the
+# "lazy about its linear algebra" hot path (Jacobian & LU(W) reuse ACROSS
+# steps, not just across the s stages of one step).
+# ---------------------------------------------------------------------------
 
-    W (n, n) scalar mode or (B, n, n) lanes mode; rhs/x are (n,) resp.
-    (n, B).  modes: "jnp" (LAPACK lu_factor, batched over B), "lanes" (the
-    pivoted LU kernel *body* factored in place — no nested pallas_call, used
-    when the whole Rosenbrock integration already runs inside a fused
-    kernel), "pallas" (batched-LU Pallas kernel launch; one launch per
-    stage — a kernel boundary cannot hold factored state)."""
-    if W.ndim == 2 or mode == "jnp" or mode is None:
-        lu_piv = jax.scipy.linalg.lu_factor(W)      # batched over leading dim
-        if W.ndim == 2:
-            return lambda rhs: jax.scipy.linalg.lu_solve(lu_piv, rhs)
-        return lambda rhs: jax.scipy.linalg.lu_solve(
-            lu_piv, rhs.T[..., None])[..., 0].T
+def _w_build(J, dt, gam, lanes, dtype):
+    """W = I − γ·dt·J, same expressions as the eager step (bitwise-stable)."""
+    n = J.shape[-1]
+    if lanes:
+        eye = jnp.eye(n, dtype=dtype)[None]
+        gdt = (dt * gam)[:, None, None] if jnp.ndim(dt) else dt * gam
+        return eye - gdt * J                               # (B, n, n)
+    return jnp.eye(n, dtype=dtype) - dt * gam * J          # (n, n)
+
+
+def _w_factor(W, mode, lanes):
+    """Mode-specific factorization -> carry-able pytree.
+
+    "jnp"/scalar: LAPACK (lu, piv); "lanes": the pivoted lanes-LU kernel body
+    (rows/swaps/mults/pivmin lists — a pytree); "pallas": the factorization
+    cannot persist across a `pallas_call` boundary, so the carried state is W
+    itself and each resolve launches the batched kernel (J reuse still saves
+    the expensive jac/jacfwd passes; `nfact` then counts W rebuilds)."""
+    if not lanes or mode in ("jnp", None):
+        return jax.scipy.linalg.lu_factor(W)
     if mode == "lanes":
-        from repro.kernels.lu.kernel import lu_factor_lanes, lu_resolve_lanes
-        fac = lu_factor_lanes(jnp.moveaxis(W, 0, -1))
-        return lambda rhs: lu_resolve_lanes(fac, rhs)
+        from repro.kernels.lu.kernel import lu_factor_lanes
+        return lu_factor_lanes(jnp.moveaxis(W, 0, -1))
+    if mode == "pallas":
+        return W
+    raise ValueError(f"unknown linsolve mode {mode!r}")
+
+
+def _w_resolve(fac, rhs, mode, lanes, lane_tile):
+    """Back-substitute one right-hand side against a `_w_factor` state."""
+    if not lanes:
+        return jax.scipy.linalg.lu_solve(fac, rhs)
+    if mode in ("jnp", None):
+        return jax.scipy.linalg.lu_solve(fac, rhs.T[..., None])[..., 0].T
+    if mode == "lanes":
+        from repro.kernels.lu.kernel import lu_resolve_lanes
+        return lu_resolve_lanes(fac, rhs)
     if mode == "pallas":
         from repro.kernels.lu.ops import batched_solve
-        return lambda rhs: batched_solve(W, rhs.T, lane_tile=lane_tile).T
+        return batched_solve(fac, rhs.T, lane_tile=lane_tile).T
     raise ValueError(f"unknown linsolve mode {mode!r}")
+
+
+def _secant_update(J, du, dF, gain, mask, lanes):
+    """Extrapolated-secant (Broyden) touch-up of the cached Jacobian.
+
+    J ← J + gain·(ΔF − J·Δu)·Δuᵀ/(Δuᵀ·Δu) on lanes where `mask` holds —
+    rank-1, O(n²), no RHS evaluations (ΔF reuses the f(u) values the stage
+    loop computes anyway).  gain=2 extrapolates the secant midpoint to the
+    endpoint state (exact along Δu for J affine in u — quadratic RHS).
+    Skipped where Δu = 0 or the correction is non-finite."""
+    if lanes:
+        nn = jnp.sum(du * du, axis=0)                      # (B,)
+        Jdu = jnp.sum(J * du.T[:, None, :], axis=-1).T     # (n, B)
+        r = dF - Jdu
+        corr = (r.T[:, :, None] * du.T[:, None, :]
+                / jnp.where(nn > 0, nn, 1.0)[:, None, None])   # (B, n, n)
+        ok = (mask & (nn > 0)
+              & jnp.all(jnp.isfinite(corr), axis=(1, 2)))[:, None, None]
+    else:
+        nn = jnp.sum(du * du)
+        corr = (jnp.outer(dF - J @ du, du)
+                / jnp.where(nn > 0, nn, 1.0))
+        ok = mask & (nn > 0) & jnp.all(jnp.isfinite(corr))
+    return jnp.where(ok, J + gain * corr, J)
+
+
+def _w_select(mask, fac_new, fac_old, mode, lanes):
+    """Per-lane masked refresh of the factored state (mask: scalar or (B,))."""
+    if not lanes or mode == "lanes":
+        # scalar mode: scalar mask; "lanes" leaves are (n, B)/(B,) —
+        # trailing-lane axis, so a (B,) mask broadcasts as-is
+        sel = lambda a, b: jnp.where(mask, a, b)
+    else:
+        # "jnp" (lu (B,n,n), piv (B,n)) and "pallas" (W (B,n,n)): leading-B
+        sel = lambda a, b: jnp.where(
+            mask.reshape(mask.shape + (1,) * (a.ndim - mask.ndim)), a, b)
+    return jax.tree_util.tree_map(sel, fac_new, fac_old)
 
 
 def rosenbrock_nf_per_step(rtab: RosenbrockTableau) -> int:
@@ -92,24 +163,33 @@ def rosenbrock_step(f, rtab: RosenbrockTableau, u, p, t, dt, *, lanes=False,
     dense-output vectors kd_l = Σ_j interp_h[l, j] U_j (empty tuple if none).
     """
     dtype = u.dtype
-    n = u.shape[0]
+    gam = rtab.gamma
+    if lanes:
+        J = _jac_lanes(f, u, p, t, jac)                 # (B, n, n)
+    else:
+        J = (jac(u, p, t) if jac is not None
+             else jax.jacfwd(lambda uu: f(uu, p, t))(u))  # (n, n)
+    # ONE factorization per step, s resolves — the same build/factor/resolve
+    # adapters the lazy-W carry uses, so eager and lazy stay one dispatch
+    fac = _w_factor(_w_build(J, dt, gam, lanes, dtype), linsolve, lanes)
+    return _stage_loop(f, rtab, u, p, t, dt,
+                       lambda rhs: _w_resolve(fac, rhs, linsolve, lanes,
+                                              lane_tile))
+
+
+def _stage_loop(f, rtab: RosenbrockTableau, u, p, t, dt, solve, F0=None):
+    """The s per-stage solves against an already-factored W (`solve` is a
+    rhs -> x closure).  Shared by the eager step above and the lazy-W
+    while_loop body (which carries the factorization across steps and passes
+    the f(u) it already computed for the secant touch-up as `F0`)."""
     s = rtab.stages
     gam = rtab.gamma
     a, C, d = rtab.a, rtab.C, rtab.d
     dtb = dt if jnp.ndim(dt) == 0 else dt[None]
-    if lanes:
-        J = _jac_lanes(f, u, p, t, jac)                 # (B, n, n)
-        eye = jnp.eye(n, dtype=dtype)[None]
-        gdt = (dt * gam)[:, None, None] if jnp.ndim(dt) else dt * gam
-        W = eye - gdt * J
-    else:
-        J = (jac(u, p, t) if jac is not None
-             else jax.jacfwd(lambda uu: f(uu, p, t))(u))  # (n, n)
-        W = jnp.eye(n, dtype=dtype) - dt * gam * J
     Td = jax.jvp(lambda tt: f(u, p, tt), (t,),
                  (jnp.ones_like(t),))[1]                # df/dt
-    F0 = f(u, p, t)
-    solve = _make_linsolver(W, linsolve, lane_tile)     # ONE factorization
+    if F0 is None:
+        F0 = f(u, p, t)
     Us = []
     F_last = F0
     for i in range(s):
@@ -177,7 +257,7 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                      rtol=1e-6, atol=1e-6, saveat=None, max_iters=100_000,
                      lanes=False, linsolve="jnp", lane_tile=None, jac=None,
                      controller: Optional[PIController] = None,
-                     event: Optional[Event] = None):
+                     event: Optional[Event] = None, w_reuse=None):
     """Adaptive s-stage Rosenbrock solve with dense output.
 
     `jac` is the analytic-Jacobian hook (component-style (u, p, t) -> (n, n)
@@ -188,7 +268,27 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
     with per-lane termination masks in lanes mode.  When an event is supplied
     the return value is ``(SolveResult, {"event_t", "event_count"})`` — the
     same contract as `solve_adaptive`.
+
+    `w_reuse` makes the step loop lazy about its linear algebra: the current
+    Jacobian, the factored LU(W) and the dt it was factored at ride in the
+    while_loop carry, and J is only re-evaluated / W only re-factored when
+    the `WReusePolicy` freshness controller asks (see
+    `repro.core.controller`).  ``None``/``False`` keeps today's eager
+    every-step behaviour bitwise (the carry does not even contain the lazy
+    state); ``True`` enables the default policy; a `WReusePolicy` instance
+    customizes the thresholds.  `SolveResult.njac`/`nfact` report the work
+    either way (eager: both equal naccept + nreject).
+
+    Note the counters are ALGORITHMIC work: on the lanes paths (array /
+    kernel) the refresh runs under an any()-gated `lax.cond` and the savings
+    are real wall time, but under `vmap` batching the cond lowers to a
+    select that executes both branches, so reuse-on there saves *counted*
+    Jacobian work (and matches the other strategies' trajectories) without
+    reducing executed FLOPs.
     """
+    policy = (None if (w_reuse is None or w_reuse is False)
+              else (w_reuse if isinstance(w_reuse, WReusePolicy)
+                    else WReusePolicy()))
     dtype = u0.dtype
     q = min(rtab.order, rtab.embedded_order)  # order the estimator measures
     ctrl = controller or PIController.for_order(q)
@@ -205,6 +305,14 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
     pre = (saveat <= t0).reshape((S,) + (1,) * u0.ndim)
     us0 = jnp.where(pre, u0[None], us0)
 
+    gam = rtab.gamma
+
+    def jac_eval(u, t):
+        if lanes:
+            return _jac_lanes(f, u, p, t, jac)
+        return (jac(u, p, t) if jac is not None
+                else jax.jacfwd(lambda uu: f(uu, p, t))(u))
+
     carry0 = dict(
         t=jnp.broadcast_to(t0, cshape), u=u0,
         dt=jnp.broadcast_to(jnp.asarray(dt0, dtype), cshape),
@@ -212,9 +320,24 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
         done=jnp.zeros(cshape, bool), us=us0,
         naccept=jnp.zeros(cshape, jnp.int32),
         nreject=jnp.zeros(cshape, jnp.int32),
+        status=jnp.zeros(cshape, jnp.int32),
         iters=jnp.asarray(0, jnp.int32),
         event_t=jnp.full(cshape, jnp.inf, dtype),
         event_count=jnp.zeros(cshape, jnp.int32))
+    if policy is not None:
+        # lazy-W state: everything the freshness controller needs to decide,
+        # per lane, whether this step may ride on last step's linear algebra
+        J0 = jac_eval(u0, carry0["t"])
+        fac0 = _w_factor(_w_build(J0, carry0["dt"], gam, lanes, dtype),
+                         linsolve, lanes)
+        carry0.update(
+            J=J0, fac=fac0, dt_fact=carry0["dt"],
+            age=jnp.zeros(cshape, jnp.int32),
+            jac_stale=jnp.zeros(cshape, bool),
+            u_prev=u0, F_prev=jnp.zeros_like(u0),
+            was_accept=jnp.zeros(cshape, bool),
+            njac=jnp.ones(cshape, jnp.int32),
+            nfact=jnp.ones(cshape, jnp.int32))
 
     def _bc(v):
         return v if jnp.ndim(v) == 0 else v[None]
@@ -227,15 +350,67 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
         active = ~c["done"]
         dt_step = jnp.where(active, jnp.minimum(dt, tf - t),
                             jnp.asarray(1.0, dtype))
-        u_cand, err, F0, F_new, kds = rosenbrock_step(
-            f, rtab, u, p, t, dt_step, lanes=lanes, linsolve=linsolve,
-            lane_tile=lane_tile, jac=jac)
+        if policy is None:
+            u_cand, err, F0, F_new, kds = rosenbrock_step(
+                f, rtab, u, p, t, dt_step, lanes=lanes, linsolve=linsolve,
+                lane_tile=lane_tile, jac=jac)
+        else:
+            need_jac, drift_fact = w_refresh(policy, gam, dt_step,
+                                             c["dt_fact"], c["jac_stale"])
+            need_jac = need_jac & active
+            F0 = f(u, p, t)
+            if policy.secant:
+                # keep the cached J alive: extrapolated-secant touch-up from
+                # the accepted step's own states/RHS values (rank-1, O(n²))
+                upd = c["was_accept"] & ~need_jac & active
+                J_base = _secant_update(c["J"], u - c["u_prev"],
+                                        F0 - c["F_prev"], policy.secant,
+                                        upd, lanes)
+            else:
+                upd = jnp.zeros(cshape, bool)
+                J_base = c["J"]
+            need_fact = (drift_fact | upd) & active
+            # without secant updates, dt freezes AT dt_fact between
+            # refreshes (the LSODA/BDF amortization pattern): the factored W
+            # is reused VERBATIM and the PI proposal takes effect —
+            # quantized — once it drifts out of the γ-scaled band
+            dt_step = jnp.where(
+                need_fact, dt_step,
+                jnp.where(active, jnp.minimum(c["dt_fact"], tf - t),
+                          jnp.asarray(1.0, dtype)))
+
+            def refresh(state):
+                J_old, fac_old, dtf_old = state
+                J_new = jax.lax.cond(jnp.any(need_jac),
+                                     lambda: jac_eval(u, t), lambda: J_old)
+                jmask = (need_jac[:, None, None] if lanes else need_jac)
+                J_sel = jnp.where(jmask, J_new, J_old)
+                fac_new = _w_factor(_w_build(J_sel, dt_step, gam, lanes,
+                                             dtype), linsolve, lanes)
+                fac_sel = _w_select(need_fact, fac_new, fac_old,
+                                    linsolve, lanes)
+                return (J_sel, fac_sel,
+                        jnp.where(need_fact, dt_step, dtf_old))
+
+            J, fac, dt_fact = jax.lax.cond(
+                jnp.any(need_fact), refresh, lambda s: s,
+                (J_base, c["fac"], c["dt_fact"]))
+            u_cand, err, _, F_new, kds = _stage_loop(
+                f, rtab, u, p, t, dt_step,
+                lambda rhs: _w_resolve(fac, rhs, linsolve, lanes, lane_tile),
+                F0=F0)
         enorm = hairer_norm(err, u, u_cand, atol, rtol, axes=axes)
         finite = jnp.isfinite(u_cand)
         finite = jnp.all(finite, axis=0) if lanes else jnp.all(finite)
         accept = (enorm <= 1.0) & finite & active
         dt_next, enorm_prev = pi_propose(ctrl, dt, enorm, c["enorm_prev"],
                                          accept)
+        if policy is not None and not policy.secant:
+            # frozen-J rejection: refresh and retry at the SAME dt before
+            # blaming (and slashing) the step size.  With secant updates the
+            # cached J already tracks the state, so a rejection is a genuine
+            # dt problem and the PI shrink stands.
+            dt_next = w_dt_blame(accept, need_jac, dt_step, dt_next)
         t_new = jnp.where(accept, t + dt_step, t)
 
         # ---- events: shared machinery on the method's dense output ---------
@@ -280,21 +455,50 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                            tuple(kd[None] for kd in kds), dtb)
         us = jnp.where(mask, vals, c["us"])
 
-        done = (c["done"] | term
+        # dt pinned at the controller floor and still rejecting: the retry is
+        # bit-identical, so the lane can never recover — terminate with a
+        # distinct status instead of spinning silently to max_iters.  On the
+        # lazy path a rejection taken on a REUSED J is exempt: the next
+        # attempt refreshes J (w_mark_stale / w_dt_blame), so its retry is
+        # NOT identical and may well accept at the same dt.
+        hopeless = active & ~accept & ~(dt_step > ctrl.dtmin)
+        if policy is not None:
+            hopeless = hopeless & need_jac
+        statusv = jnp.where(hopeless,
+                            jnp.asarray(STATUS_DTMIN_EXHAUSTED, jnp.int32),
+                            c["status"])
+        done = (c["done"] | term | hopeless
                 | (t_new >= tf - 1e-7 * jnp.maximum(jnp.abs(tf), 1.0)))
-        return dict(t=t_new, u=u_new, dt=dt_next, enorm_prev=enorm_prev,
-                    done=done, us=us,
-                    naccept=c["naccept"] + accept.astype(jnp.int32),
-                    nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
-                    iters=c["iters"] + 1,
-                    event_t=ev_t, event_count=ev_n)
+        out = dict(t=t_new, u=u_new, dt=dt_next, enorm_prev=enorm_prev,
+                   done=done, us=us,
+                   naccept=c["naccept"] + accept.astype(jnp.int32),
+                   nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
+                   status=statusv, iters=c["iters"] + 1,
+                   event_t=ev_t, event_count=ev_n)
+        if policy is not None:
+            fresh = need_jac
+            age = jnp.where(need_jac, 0, c["age"]) + accept.astype(jnp.int32)
+            out.update(
+                J=J, fac=fac, dt_fact=dt_fact, age=age,
+                jac_stale=w_mark_stale(policy, accept, enorm,
+                                       c["enorm_prev"], age, fresh),
+                u_prev=jnp.where(_bc(accept), u, c["u_prev"]),
+                F_prev=jnp.where(_bc(accept), F0, c["F_prev"]),
+                was_accept=accept,
+                njac=c["njac"] + need_jac.astype(jnp.int32),
+                nfact=c["nfact"] + need_fact.astype(jnp.int32))
+        return out
 
     out = jax.lax.while_loop(cond, body, carry0)
+    nsteps = out["naccept"] + out["nreject"]
     res = SolveResult(
         ts=saveat, us=out["us"], t_final=out["t"], u_final=out["u"],
         naccept=out["naccept"], nreject=out["nreject"],
-        status=jnp.where(out["done"], 0, 1).astype(jnp.int32),
-        nf=(out["naccept"] + out["nreject"]) * nf_step)
+        status=jnp.where(out["status"] > 0, out["status"],
+                         jnp.where(out["done"], 0, 1)).astype(jnp.int32),
+        nf=nsteps * nf_step,
+        njac=out["njac"] if policy is not None else nsteps,
+        nfact=out["nfact"] if policy is not None else nsteps)
     if event is not None:
         return res, dict(event_t=out["event_t"], event_count=out["event_count"])
     return res

@@ -24,7 +24,8 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .controller import PIController, hairer_norm, pi_propose
+from .controller import (STATUS_DTMIN_EXHAUSTED, PIController, hairer_norm,
+                         pi_propose)
 from .events import Event, handle_event, linear_interp
 from .problem import EnsembleProblem, SDEProblem
 from .solvers import SolveResult
@@ -494,6 +495,7 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
         naccept=jnp.zeros(cshape, jnp.int32),
         nreject=jnp.zeros(cshape, jnp.int32),
         nf=jnp.zeros(cshape, jnp.int32),
+        status=jnp.zeros(cshape, jnp.int32),
         iters=jnp.asarray(0, jnp.int32),
         event_t=jnp.full(cshape, jnp.inf, dtype),
         event_count=jnp.zeros(cshape, jnp.int32),
@@ -605,7 +607,16 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
             vals = u[None] + theta.reshape(sh) * (u_2 - u)[None]
             us = jnp.where(crossed.reshape(sh), vals, c["us"])
 
-        done = c["done"] | term | (idx_new >= n_total_u)
+        # rejecting at the dyadic resolution floor (can only mean non-finite
+        # states there — at_floor otherwise force-accepts) or with dt pinned
+        # at the controller floor: the retry is bit-identical, so terminate
+        # the lane with a distinct status instead of spinning to max_iters
+        hopeless = (active & ~accept
+                    & (at_floor | ~(dt_step > ctrl.dtmin)))
+        statusv = jnp.where(hopeless,
+                            jnp.asarray(STATUS_DTMIN_EXHAUSTED, jnp.int32),
+                            c["status"])
+        done = c["done"] | term | (idx_new >= n_total_u) | hopeless
         acc_m = accept[None] if lanes else accept
         w_l_new = jnp.where(acc_m, w_r, w_l)
         if event is not None:
@@ -632,14 +643,16 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
             naccept=c["naccept"] + accept.astype(jnp.int32),
             nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
             nf=c["nf"] + active.astype(jnp.int32) * nf_per_attempt,
-            iters=c["iters"] + 1,
+            status=statusv, iters=c["iters"] + 1,
             event_t=ev_t, event_count=ev_n)
 
     out = jax.lax.while_loop(cond, body, carry0)
     res = SolveResult(
         ts=saveat, us=out["us"], t_final=out["t_out"], u_final=out["u"],
         naccept=out["naccept"], nreject=out["nreject"],
-        status=jnp.where(out["done"], 0, 1).astype(jnp.int32), nf=out["nf"])
+        status=jnp.where(out["status"] > 0, out["status"],
+                         jnp.where(out["done"], 0, 1)).astype(jnp.int32),
+        nf=out["nf"])
     if event is not None:
         return res, dict(event_t=out["event_t"], event_count=out["event_count"])
     return res

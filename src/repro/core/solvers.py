@@ -26,7 +26,8 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .controller import PIController, hairer_norm, pi_propose
+from .controller import (STATUS_DTMIN_EXHAUSTED, PIController, hairer_norm,
+                         pi_propose)
 from .events import Event, handle_event
 from .tableaus import Tableau
 
@@ -40,8 +41,12 @@ class SolveResult(NamedTuple):
     u_final: Array
     naccept: Array
     nreject: Array
-    status: Array    # 0 = success, 1 = max_iters exhausted
+    status: Array    # 0 = success, 1 = max_iters exhausted,
+    #                  2 = dt pinned at dtmin while rejecting (see
+    #                  repro.core.controller.STATUS_DTMIN_EXHAUSTED)
     nf: Array        # number of RHS evaluations (per control element)
+    njac: Array = 0  # Jacobian evaluations (stiff family; 0 elsewhere)
+    nfact: Array = 0  # W = I − γh·J factorizations (stiff family)
 
 
 # ----------------------------------------------------------------------------
@@ -264,6 +269,7 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
         naccept=jnp.zeros(cshape, jnp.int32),
         nreject=jnp.zeros(cshape, jnp.int32),
         nf=jnp.ones(cshape, jnp.int32),
+        status=jnp.zeros(cshape, jnp.int32),
         iters=jnp.asarray(0, jnp.int32),
         event_t=jnp.full(cshape, jnp.inf, dtype),
         event_count=jnp.zeros(cshape, jnp.int32),
@@ -335,8 +341,16 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
         else:
             us = c["us"]
 
+        # dt pinned at the controller floor and still rejecting: retrying the
+        # identical step is a deterministic live-lock — terminate the lane
+        # with a distinct status instead of spinning to max_iters
+        hopeless = active & ~accept & ~(dt_step > ctrl.dtmin) if opts.adaptive \
+            else jnp.zeros(cshape, bool)
+        statusv = jnp.where(hopeless,
+                            jnp.asarray(STATUS_DTMIN_EXHAUSTED, jnp.int32),
+                            c["status"])
         eps_end = 1e-7 * jnp.maximum(jnp.abs(tf), 1.0)
-        done = c["done"] | (t_new >= tf - eps_end) | term
+        done = c["done"] | (t_new >= tf - eps_end) | term | hopeless
 
         return dict(
             t=t_new, u=u_new, dt=dt_next, k1=k1_new,
@@ -344,12 +358,13 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
             naccept=c["naccept"] + accept.astype(jnp.int32),
             nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
             nf=c["nf"] + nf_inc.astype(jnp.int32),
-            iters=c["iters"] + 1,
+            status=statusv, iters=c["iters"] + 1,
             event_t=ev_t, event_count=ev_n,
         )
 
     out = jax.lax.while_loop(cond, body, carry0)
-    status = jnp.where(out["done"], 0, 1).astype(jnp.int32)
+    status = jnp.where(out["status"] > 0, out["status"],
+                       jnp.where(out["done"], 0, 1)).astype(jnp.int32)
     res = SolveResult(ts=saveat, us=out["us"], t_final=out["t"],
                       u_final=out["u"], naccept=out["naccept"],
                       nreject=out["nreject"], status=status, nf=out["nf"])

@@ -14,9 +14,11 @@ VMEM-budget-aware `lane_tile` selection (§5.2's occupancy formula).  What
 varies per method family is only the *loop body*, supplied as a callback:
 
   body(ctx, u0 (n, B), p (m, B), extras) ->
-      (us (S, n, B), u_final (n, B), t_final (B,), stats (4, B) int32)
+      (us (S, n, B), u_final (n, B), t_final (B,), stats (6, B) int32)
 
-with stats rows (naccept, nreject, status, nf).  Bodies for the three
+with stats rows (naccept, nreject, status, nf, njac, nfact) — the last two
+report the stiff family's Jacobian-evaluation and W-factorization work
+(zero for erk/sde).  Bodies for the three
 registered families (erk / rosenbrock / sde) are provided below; they reuse
 the shared numerical engines (`core.solvers`, `core.rosenbrock`, `core.sde`)
 unchanged — the paper's "automated translation": the same user RHS and the
@@ -69,10 +71,18 @@ def erk_work_words(n_state: int, n_param: int, stages: int) -> int:
     return (stages + 4) * n_state + n_param + 16
 
 
-def rosenbrock_work_words(n_state: int, n_param: int, stages: int = 2) -> int:
+def rosenbrock_work_words(n_state: int, n_param: int, stages: int = 2,
+                          w_reuse: bool = False) -> int:
     # J and W are (n, n) PER LANE — the dominant term for stiff kernels —
     # plus one stage vector U_i per tableau stage (Rodas5P carries 8).
-    return (2 * n_state * n_state + (stages + 6) * n_state + n_param + 16)
+    # The lazy-W hot path (w_reuse) additionally CARRIES the Jacobian, the
+    # factored W rows and the pivot/multiplier state across steps
+    # (≈ 3·n² per lane in total); the §5.2 VMEM formula must know, or the
+    # automatic lane_tile over-subscribes VMEM exactly when the stiff kernel
+    # is at its most memory-hungry.
+    nn = n_state * n_state
+    return ((3 * nn + nn // 2 if w_reuse else 2 * nn)
+            + (stages + 6) * n_state + n_param + 16)
 
 
 def sde_work_words(n_state: int, n_param: int, m_noise: int) -> int:
@@ -83,6 +93,25 @@ def sde_work_words(n_state: int, n_param: int, m_noise: int) -> int:
 # shared trajectory-axis padding / layout helpers (single home; the ops
 # wrappers and the XLA lanes path all use these)
 # ---------------------------------------------------------------------------
+
+def padded_lane_width(N: int, lane_tile: int) -> int:
+    """Vector width B actually run by `run_ensemble_kernel`.
+
+    The tile is clamped to the ensemble size — but for ensembles LARGER than
+    one `LANE_WIDTH`, rounded UP to a 128 multiple: TPU vector lanes come in
+    128s, and the naive ``min(lane_tile, N)`` yields a ragged width whenever
+    an explicit ``lane_tile > N`` is passed with ``N % 128 != 0`` (e.g.
+    N=130, lane_tile=256 used to run a 130-wide kernel).  Ensembles with
+    ``N <= LANE_WIDTH`` keep their exact width: Mosaic pads sub-128 widths
+    internally on hardware, while the interpret/CPU test and benchmark paths
+    pay real per-lane cost — rounding a 3-trajectory parity test up to 128
+    lanes would be a 40x compute regression for zero hardware benefit.
+    Explicit tiles smaller than the (rounded) ensemble size are honoured
+    unchanged (tests drive 3-5-lane tiles through the interpreter)."""
+    if N <= LANE_WIDTH:
+        return int(max(1, min(lane_tile, N)))
+    return int(max(1, min(lane_tile, -(-N // LANE_WIDTH) * LANE_WIDTH)))
+
 
 def pad_lanes(x: Array, lane_tile: int) -> Tuple[Array, int]:
     """Pad the trailing (lane) axis to a multiple of `lane_tile` (edge mode
@@ -136,11 +165,12 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
         lane_tile = auto_lane_tile(n, m, S, itemsize=dtype.itemsize,
                                    work_words=work_words,
                                    vmem_budget=vmem_budget)
-        # no point padding a small ensemble up to the VMEM-optimal tile
-        lane_tile = min(lane_tile, -(-N // LANE_WIDTH) * LANE_WIDTH)
-    # clamp to the ensemble size so pallas and the XLA lanes path run the SAME
-    # vector width (bitwise-comparable trajectories, no wasted padded lanes)
-    B = int(min(lane_tile, N))
+    # clamp to the ensemble size (no point padding a small ensemble up to the
+    # VMEM-optimal tile); large ragged ensembles round up to a LANE_WIDTH
+    # multiple.  The XLA lanes path (`core.ensemble._tile_lanes`) derives its
+    # width from the SAME helper: XLA codegen is width-sensitive at the ulp
+    # level, so equal widths are what keep the two backends bitwise-comparable
+    B = padded_lane_width(N, lane_tile)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
 
@@ -174,13 +204,14 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
         jax.ShapeDtypeStruct((S, n, Np), dtype),      # us
         jax.ShapeDtypeStruct((n, Np), dtype),         # u_final
         jax.ShapeDtypeStruct((1, Np), dtype),         # t_final
-        jax.ShapeDtypeStruct((4, Np), jnp.int32),     # naccept/nreject/status/nf
+        # naccept / nreject / status / nf / njac / nfact
+        jax.ShapeDtypeStruct((6, Np), jnp.int32),
     ]
     out_specs = [
         pl.BlockSpec((S, n, B), lambda i: (0, 0, i)),
         pl.BlockSpec((n, B), lambda i: (0, i)),
         pl.BlockSpec((1, B), lambda i: (0, i)),
-        pl.BlockSpec((4, B), lambda i: (0, i)),
+        pl.BlockSpec((6, B), lambda i: (0, i)),
     ]
 
     n_in = len(args)
@@ -206,7 +237,8 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
         ts=jnp.asarray(ts, dtype), us=lanes_to_traj(us, N),
         u_final=uf.T[:N], t_final=t_fin[0, :N],
         naccept=stats[0, :N], nreject=stats[1, :N],
-        nf=jnp.sum(stats[3, :N]), status=jnp.max(stats[2, :N]))
+        nf=jnp.sum(stats[3, :N]), status=jnp.max(stats[2, :N]),
+        njac=jnp.sum(stats[4, :N]), nfact=jnp.sum(stats[5, :N]))
 
 
 # ---------------------------------------------------------------------------
@@ -228,20 +260,28 @@ def erk_body(f, tab, *, t0: float, tf: float, dt0: float, rtol: float,
                              opts=opts, event=event, lanes=True)
         if event is not None:
             res, _ = res
+        zero = jnp.zeros_like(res.naccept)
         stats = jnp.stack([res.naccept, res.nreject,
-                           res.status * jnp.ones_like(res.naccept), res.nf])
+                           res.status * jnp.ones_like(res.naccept), res.nf,
+                           zero, zero])
         return res.us, res.u_final, res.t_final, stats
 
     return body
 
 
 def rosenbrock_body(f, rtab, *, jac=None, t0: float, tf: float, dt0: float,
-                    rtol: float, atol: float, max_iters: int, event=None):
+                    rtol: float, atol: float, max_iters: int, event=None,
+                    w_reuse=None):
     """s-stage Rosenbrock stiff integration (any `RosenbrockTableau`:
     Rosenbrock23 / Rodas4 / Rodas5P) with the batched-LU W-solves *inlined*
     (linsolve="lanes": paper §5.1.3 inside the fused kernel, lanes-wide
     partial pivoting).  `jac` is the analytic-Jacobian hook (None: jacfwd
-    inside the kernel).  Events run the shared per-lane machinery
+    inside the kernel).  `w_reuse` enables the lazy-W hot path: the Jacobian,
+    the factored LU(W) (rows/swaps/multipliers of the lanes LU) and the dt it
+    was factored at ride the while_loop carry in VMEM, refreshed per lane
+    only when the `WReusePolicy` freshness controller asks — the fused
+    kernel's dominant per-step cost (jacfwd + O(n³) elimination) is then paid
+    only on refresh steps.  Events run the shared per-lane machinery
     (`repro.core.events`) inside the fused loop.  extras[0] = saveat grid
     (S,)."""
     from repro.core.rosenbrock import solve_rosenbrock
@@ -251,10 +291,13 @@ def rosenbrock_body(f, rtab, *, jac=None, t0: float, tf: float, dt0: float,
         res = solve_rosenbrock(f, rtab, u0, p, t0, tf, dt0, rtol=rtol,
                                atol=atol, saveat=saveat_v,
                                max_iters=max_iters, lanes=True,
-                               linsolve="lanes", jac=jac, event=event)
+                               linsolve="lanes", jac=jac, event=event,
+                               w_reuse=w_reuse)
         if event is not None:
             res, _ = res
-        stats = jnp.stack([res.naccept, res.nreject, res.status, res.nf])
+        stats = jnp.stack([res.naccept, res.nreject, res.status, res.nf,
+                           jnp.broadcast_to(res.njac, res.naccept.shape),
+                           jnp.broadcast_to(res.nfact, res.naccept.shape)])
         return res.us, res.u_final, res.t_final, stats
 
     return body
@@ -315,7 +358,7 @@ def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
             t_final = estate["t_out"].astype(dtype)
             naccept = estate["naccept"]
         stats = jnp.stack([naccept, i32(0), i32(0),
-                           i32(n_steps * nf_per_step)])
+                           i32(n_steps * nf_per_step), i32(0), i32(0)])
         return us, u_f, t_final, stats
 
     return body
@@ -351,8 +394,10 @@ def sde_adaptive_body(f, g, stepper, noise: str, *, t0: float, tf: float,
                                  nf_per_attempt=nf_per_attempt)
         if event is not None:
             res, _ = res
+        zero = jnp.zeros_like(res.naccept)
         stats = jnp.stack([res.naccept, res.nreject,
-                           res.status * jnp.ones_like(res.naccept), res.nf])
+                           res.status * jnp.ones_like(res.naccept), res.nf,
+                           zero, zero])
         return res.us, res.u_final, res.t_final, stats
 
     return body

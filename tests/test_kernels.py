@@ -94,6 +94,33 @@ def test_em_kernel_pathwise_vs_ref_counter_rng(method):
                                rtol=1e-6)
 
 
+def test_padded_lane_width_is_128_multiple_for_oversized_tiles():
+    """Regression: an explicit lane_tile > N with N % 128 != 0 used to run a
+    non-LANE_WIDTH-multiple vector width (B = min(lane_tile, N) = N).  The
+    padded width must round UP to a 128 multiple; explicit small tiles stay
+    honoured (tests drive 3-5-lane tiles through the interpreter)."""
+    from repro.kernels.ensemble_kernel import LANE_WIDTH, padded_lane_width
+    assert padded_lane_width(130, 256) == 256        # the reported bug
+    assert padded_lane_width(130, 256) % LANE_WIDTH == 0
+    assert padded_lane_width(130, 128) == 128        # two tiles of 128
+    assert padded_lane_width(3, 256) == 3            # small N: exact width
+    assert padded_lane_width(8, 4) == 4              # explicit small tile
+    assert padded_lane_width(300, 4096) == 384       # ceil(300/128)*128
+    # functional: N=130 with lane_tile=256 runs and matches the XLA oracle
+    ep = lorenz_ensemble(130, dtype=jnp.float32)
+    saveat = jnp.linspace(0.0, 0.5, 3, dtype=jnp.float32)
+    kw = dict(t0=0.0, tf=0.5, dt0=1e-3, saveat=saveat, rtol=1e-5, atol=1e-5)
+    rp = solve_ensemble_local(ep, ensemble="kernel", backend="pallas",
+                              lane_tile=256, **kw)
+    rx = solve_ensemble_local(ep, ensemble="kernel", backend="xla",
+                              lane_tile=256, **kw)
+    assert rp.us.shape == (130, 3, 3)
+    np.testing.assert_allclose(np.asarray(rp.us), np.asarray(rx.us),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(rp.naccept),
+                                  np.asarray(rx.naccept))
+
+
 @pytest.mark.parametrize("N,tile", [(8, 4), (11, 4)])
 def test_em_kernel_noise_table_pathwise(N, tile):
     """Injected common noise: kernel == closed-form GBM-EM product, exactly."""

@@ -118,14 +118,17 @@ def test_registry_has_rodas_methods():
 ROBER_SAVEAT = jnp.asarray([1e-2, 1.0, 1e2, 1e4])
 
 
-def _rober_solve(alg, ensemble, backend, linsolve="jnp", analytic_jac=True):
+def _rober_solve(alg, ensemble, backend, linsolve="jnp", analytic_jac=True,
+                 w_reuse=None):
     ens = rober_ensemble(3, tspan=(0.0, 1e4), analytic_jac=analytic_jac)
     return solve_ensemble_local(ens, alg=alg, ensemble=ensemble,
                                 backend=backend, dt0=1e-6, rtol=1e-8,
                                 atol=1e-10, saveat=ROBER_SAVEAT,
-                                linsolve=linsolve)
+                                linsolve=linsolve, w_reuse=w_reuse)
 
 
+@pytest.mark.parametrize("w_reuse", [None, True],
+                         ids=["eager", "lazy-W"])
 @pytest.mark.parametrize("alg", ["rodas4", "rodas5p"])
 @pytest.mark.parametrize("ensemble,backend,linsolve", [
     ("vmap", "xla", "jnp"),
@@ -134,9 +137,13 @@ def _rober_solve(alg, ensemble, backend, linsolve="jnp", analytic_jac=True):
     ("kernel", "xla", "jnp"),
     ("kernel", "pallas", "jnp"),     # fused kernel: LU body inlined ("lanes")
 ])
-def test_rober_cross_strategy_backend_parity(alg, ensemble, backend, linsolve):
-    ref = _rober_solve(alg, "vmap", "xla")            # jnp-reference solve
-    res = _rober_solve(alg, ensemble, backend, linsolve)
+def test_rober_cross_strategy_backend_parity(alg, ensemble, backend, linsolve,
+                                             w_reuse):
+    # the SAME parity bar with the lazy-W hot path on: the WReusePolicy is a
+    # pure function of per-lane quantities, so reuse-on trajectories agree
+    # across every strategy/backend/linsolver like reuse-off ones
+    ref = _rober_solve(alg, "vmap", "xla", w_reuse=w_reuse)  # jnp reference
+    res = _rober_solve(alg, ensemble, backend, linsolve, w_reuse=w_reuse)
     assert int(res.status) == 0
     for got, want in ((res.us, ref.us), (res.u_final, ref.u_final)):
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -144,6 +151,90 @@ def test_rober_cross_strategy_backend_parity(alg, ensemble, backend, linsolve):
     # y1 + y2 + y3 is conserved by ROBER; 1e-8-tolerance solves hold it tight
     totals = np.asarray(res.u_final).sum(axis=1)
     np.testing.assert_allclose(totals, 1.0, rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# lazy-W hot path: njac/nfact accounting and the reuse win (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def _rober_reuse_solve(backend, w_reuse, rtol=1e-6):
+    ens = rober_ensemble(4, tspan=(0.0, 1e4))
+    return solve_ensemble_local(ens, alg="rosenbrock23", ensemble="kernel",
+                                backend=backend, dt0=1e-6, rtol=rtol,
+                                atol=rtol * 1e-2, w_reuse=w_reuse)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_w_reuse_cuts_njac_at_matched_accuracy(backend):
+    """The acceptance regression: ROBER ensemble at rtol 1e-6, reuse on must
+    cut njac >= 2x versus reuse off at indistinguishable accuracy — on the
+    XLA lanes path AND the fused Pallas kernel (interpret on CPU)."""
+    ens = rober_ensemble(4, tspan=(0.0, 1e4))
+    ref = solve_ensemble_local(ens, alg="rodas5p", ensemble="vmap",
+                               backend="xla", dt0=1e-6, rtol=1e-10,
+                               atol=1e-12).u_final
+    scale = np.abs(np.asarray(ref)) + 1e-30
+    off = _rober_reuse_solve(backend, False)
+    on = _rober_reuse_solve(backend, True)
+    assert int(off.status) == 0 and int(on.status) == 0
+    # >= 2x fewer Jacobian evaluations (measured: ~10x with the secant-update
+    # policy; the bar is deliberately conservative)
+    assert int(off.njac) >= 2 * int(on.njac), (int(off.njac), int(on.njac))
+    # ... at indistinguishable accuracy: both solves sit at the tolerance's
+    # error level, within a small factor of each other
+    e_off = np.max(np.abs(np.asarray(off.u_final) - ref) / scale)
+    e_on = np.max(np.abs(np.asarray(on.u_final) - ref) / scale)
+    assert e_on < 10 * max(e_off, 1e-7), (e_on, e_off)
+    # the reuse also wins the combined rhs+jac work metric (nf + n*njac)
+    n = 3
+    work_off = int(off.nf) + n * int(off.njac)
+    work_on = int(on.nf) + n * int(on.njac)
+    assert work_off >= 1.3 * work_on, (work_off, work_on)
+
+
+def test_w_reuse_off_is_eager_every_step():
+    """Reuse off must reproduce today's every-step behaviour: one Jacobian
+    evaluation and one factorization per ATTEMPTED step, observable through
+    the new work counters."""
+    off = _rober_reuse_solve("xla", False)
+    steps = int(np.sum(np.asarray(off.naccept) + np.asarray(off.nreject)))
+    assert int(off.njac) == steps
+    assert int(off.nfact) == steps
+    # and w_reuse=False is the registered default (spec.w_reuse False)
+    default = _rober_reuse_solve("xla", None)
+    assert int(default.njac) == int(off.njac)
+    np.testing.assert_array_equal(np.asarray(default.u_final),
+                                  np.asarray(off.u_final))
+
+
+def test_w_reuse_policy_knobs_and_frozen_mode():
+    """A custom WReusePolicy threads through; secant=0 (frozen-J mode with
+    dt-blame retries) still converges and still saves Jacobian work."""
+    from repro.core import WReusePolicy
+    ens = rober_ensemble(2, tspan=(0.0, 1e3))
+    kw = dict(alg="rosenbrock23", ensemble="kernel", backend="xla", dt0=1e-6,
+              rtol=1e-6, atol=1e-8)
+    off = solve_ensemble_local(ens, w_reuse=False, **kw)
+    frozen = solve_ensemble_local(
+        ens, w_reuse=WReusePolicy(secant=0.0, max_age=10), **kw)
+    assert int(frozen.status) == 0
+    assert int(frozen.njac) < int(off.njac)
+    # stats flow through vmap dispatch too (scalar-mode engine)
+    on_v = solve_ensemble_local(ens, ensemble="vmap", alg="rosenbrock23",
+                                backend="xla", dt0=1e-6, rtol=1e-6,
+                                atol=1e-8, w_reuse=True)
+    assert int(on_v.status) == 0 and int(on_v.njac) > 0
+    # non-stiff families reject a truthy knob loudly ...
+    from repro.configs.de_problems import rober_problem
+    from repro.core import EnsembleProblem
+    with pytest.raises(ValueError, match="w_reuse"):
+        solve_ensemble_local(EnsembleProblem(rober_problem(), 2), alg="tsit5",
+                             w_reuse=True)
+    # ... but w_reuse=False stays the documented universal no-op, so generic
+    # A/B sweeps can pass it to every method
+    res = solve_ensemble_local(EnsembleProblem(rober_problem(), 2),
+                               alg="tsit5", tf=1.0, dt0=1e-3, w_reuse=False)
+    assert int(res.status) == 0
 
 
 def test_rober_analytic_jac_matches_jacfwd():
