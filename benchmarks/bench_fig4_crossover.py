@@ -1,24 +1,37 @@
 """Fig. 4: ODE ensemble solve time vs trajectory count — serial-CPU vs
-array-ensemble vs fused-kernel ensemble, fixed + adaptive Tsit5 on Lorenz.
+array-ensemble vs fused-kernel ensemble (vs the vmap baseline), fixed +
+adaptive Tsit5 on Lorenz, plus the ROBER stiff/`w_reuse` asymmetry.
 
 Paper claim reproduced: the kernel strategy dominates the array strategy with
 a widening gap in N, and parallel ensembling overtakes the serial solve at
 modest N. (On 1 CPU core the "GPU" axis is structural: one fused computation
 vs per-step dispatched array ops.)
+
+This sweep doubles as the autotuner's ground truth: for every swept N the
+`ensemble="auto"` decision (`repro.core.autotune.resolve_auto`, tuned into a
+throwaway cache so the run is self-contained) is recorded next to the
+measured per-strategy medians, and the crossover N per strategy pair is
+written to results/BENCH_crossover.json (sections "fig4" / "rober_w_reuse";
+`bench_fig56_vs_vmap.py` owns section "fig56" of the same artifact).
 """
 from __future__ import annotations
 
-from functools import partial
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.de_problems import lorenz_ensemble
+from repro.configs.de_problems import lorenz_ensemble, rober_ensemble
+from repro.core import get_method
+from repro.core.autotune import device_kind, resolve_auto
 from repro.core.ensemble import solve_ensemble_local
 
-from .common import HEADER, bench, row
+from .common import HEADER, bench_stats, row, update_results_json
 
 NS = (64, 256, 1024, 4096)
+OUT = os.path.join("results", "BENCH_crossover.json")
+REPEATS = 3
 
 
 def _solve(ep, ensemble, adaptive, **kw):
@@ -29,10 +42,20 @@ def _solve(ep, ensemble, adaptive, **kw):
         rtol=1e-6, atol=1e-6, save_every=250, **kw).u_final
 
 
-def main() -> None:
-    print(HEADER)
+def _crossover(ns, table, slow, fast):
+    """Smallest swept N where `fast`'s median beats `slow`'s (None: never)."""
+    for N in ns:
+        ts, tf_ = table[str(N)].get(slow), table[str(N)].get(fast)
+        if ts and tf_ and tf_["median"] < ts["median"]:
+            return N
+    return None
+
+
+def _lorenz_sweep(cache: str):
+    record = {}
     for adaptive in (False, True):
         tag = "adaptive" if adaptive else "fixed"
+        table = {}
         for N in NS:
             ep = lorenz_ensemble(N, dtype=jnp.float32)
 
@@ -40,18 +63,102 @@ def main() -> None:
                 # close over ep (a config dataclass, not a pytree)
                 return jax.jit(lambda: _solve(ep, adaptive=adaptive, **kw))
 
-            # serial baseline: one-trajectory kernel looped via lax.map tile=1
-            t_ser = bench(jit_of(ensemble="kernel", lane_tile=1)) \
-                if N <= 256 else float("nan")
-            t_arr = bench(jit_of(ensemble="array"))
-            t_ker = bench(jit_of(ensemble="kernel", lane_tile=min(N, 1024)))
-            if N <= 256:
-                print(row(f"fig4/{tag}/serial/N={N}", t_ser,
-                          f"{N / t_ser:.0f} traj_per_s"))
-            print(row(f"fig4/{tag}/array/N={N}", t_arr,
-                      f"{N / t_arr:.0f} traj_per_s"))
-            print(row(f"fig4/{tag}/kernel/N={N}", t_ker,
-                      f"{N / t_ker:.0f} traj_per_s"))
+            entry = {}
+            if N <= 256:   # serial baseline: 1-lane tiles looped via lax.map
+                entry["serial"] = bench_stats(
+                    jit_of(ensemble="kernel", lane_tile=1), repeats=REPEATS)
+            entry["vmap"] = bench_stats(jit_of(ensemble="vmap"),
+                                        repeats=REPEATS)
+            entry["array"] = bench_stats(jit_of(ensemble="array"),
+                                         repeats=REPEATS)
+            entry["kernel"] = bench_stats(
+                jit_of(ensemble="kernel", lane_tile=min(N, 1024)),
+                repeats=REPEATS)
+            for name, st in entry.items():
+                st.pop("times", None)
+                print(row(f"fig4/{tag}/{name}/N={N}", st["median"],
+                          f"{N / st['median']:.0f} traj_per_s"))
+
+            dec = resolve_auto(
+                ep, get_method("tsit5"), t0=0.0, tf=1.0, dt0=1e-3,
+                saveat=jnp.linspace(0.0, 1.0, 5, dtype=jnp.float32)
+                if adaptive else None, adaptive=adaptive, rtol=1e-6,
+                atol=1e-6, save_every=250 if not adaptive else 1,
+                n_steps=1000 if not adaptive else None, cache_path=cache)
+            measured = {k: v["median"] for k, v in entry.items()
+                        if k != "serial"}
+            winner = min(measured, key=measured.get)
+            picked = measured.get(dec.strategy, float("inf"))
+            entry["auto"] = {
+                "strategy": dec.strategy, "backend": dec.backend,
+                "lane_tile": dec.lane_tile, "source": dec.source,
+                "measured_winner": winner,
+                # within-noise: auto's pick costs <= 1.25x the winner
+                "matches_winner": bool(picked <= 1.25 * measured[winner])}
+            print(row(f"fig4/{tag}/auto/N={N}", picked,
+                      f"picked={dec.strategy}/{dec.backend} "
+                      f"winner={winner}"))
+            table[str(N)] = entry
+        record[tag] = table
+        record[f"{tag}_crossover"] = {
+            "kernel_over_array": _crossover(NS, table, "array", "kernel"),
+            "kernel_over_vmap": _crossover(NS, table, "vmap", "kernel"),
+            "array_over_vmap": _crossover(NS, table, "vmap", "array"),
+            "parallel_over_serial": _crossover(
+                (64, 256), table, "serial", "kernel")}
+    return record
+
+
+def _rober_sweep(cache: str):
+    """Stiff asymmetry: with `w_reuse` the refresh is any()-gated on EVERY
+    strategy now (the vmap path psum-reduces the gate), but vmap still pays
+    lock-step stepping — the tuner should see (and the artifact record)
+    kernel/array pulling further ahead when reuse is on."""
+    record = {}
+    for N in (16, 64):
+        ep = rober_ensemble(N)
+        entry = {}
+        for strategy in ("vmap", "array", "kernel"):
+            for wr in (False, True):
+                def jit_of(_s=strategy, _w=wr):
+                    return jax.jit(lambda: solve_ensemble_local(
+                        ep, alg="rodas4", ensemble=_s, t0=0.0, tf=1e3,
+                        dt0=1e-6, rtol=1e-6, atol=1e-8,
+                        w_reuse=_w).u_final)
+
+                st = bench_stats(jit_of(), repeats=REPEATS)
+                st.pop("times", None)
+                key = f"{strategy}{'_w_reuse' if wr else ''}"
+                entry[key] = st
+                print(row(f"fig4/rober/{key}/N={N}", st["median"]))
+        dec = resolve_auto(ep, get_method("rodas4"), t0=0.0, tf=1e3,
+                           dt0=1e-6, rtol=1e-6, atol=1e-8, w_reuse=True,
+                           cache_path=cache)
+        entry["auto_w_reuse"] = {"strategy": dec.strategy,
+                                 "backend": dec.backend,
+                                 "lane_tile": dec.lane_tile,
+                                 "source": dec.source}
+        record[str(N)] = entry
+    return record
+
+
+def main() -> None:
+    print(HEADER)
+    # throwaway profile cache: the artifact must reflect THIS machine today,
+    # not whatever a previous run persisted
+    cache = os.path.join(tempfile.mkdtemp(prefix="repro-bench-"),
+                         "autotune.json")
+    meta = {"device": device_kind(), "jax": jax.__version__,
+            "repeats": REPEATS}
+    update_results_json(OUT, "meta", meta)
+    update_results_json(OUT, "fig4", _lorenz_sweep(cache))
+
+    prev_x64 = jax.config.read("jax_enable_x64")
+    jax.config.update("jax_enable_x64", True)
+    try:
+        update_results_json(OUT, "rober_w_reuse", _rober_sweep(cache))
+    finally:
+        jax.config.update("jax_enable_x64", prev_x64)
 
 
 if __name__ == "__main__":

@@ -9,22 +9,28 @@ for torch-style dispatch. Two structural effects are measured:
     kernel tiles retire per-tile) — isolated by a heterogeneous ensemble and
     reported as the work ratio nf_vmap/nf_kernel;
   * dispatch overhead (eager) — the dominant term in the paper's 20-100x.
+
+The heterogeneous sweep over N feeds the kernel-over-vmap crossover into
+results/BENCH_crossover.json (section "fig56"; `bench_fig4_crossover.py`
+owns "fig4"/"rober_w_reuse" of the same artifact).
 """
 from __future__ import annotations
 
-from functools import partial
+import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import EnsembleProblem
 from repro.configs.de_problems import lorenz_problem
 from repro.core.ensemble import solve_ensemble_local
 
-from .common import HEADER, bench, row
+from .common import HEADER, bench_stats, row, update_results_json
 
 N = 1024
+SWEEP_NS = (64, 256, 1024)
+OUT = os.path.join("results", "BENCH_crossover.json")
+REPEATS = 3
 
 
 def hetero_ensemble(N):
@@ -42,30 +48,67 @@ def hetero_ensemble(N):
 def main() -> None:
     print(HEADER)
     saveat = jnp.asarray([1.0], jnp.float32)
+    record = {}
     for adaptive in (False, True):
         tag = "adaptive" if adaptive else "fixed"
         ep = hetero_ensemble(N)
 
-        def run(ensemble, **kw):
+        def run(ensemble, _ep=ep, **kw):
             return solve_ensemble_local(
-                ep, ensemble=ensemble, t0=0.0, tf=1.0, dt0=1e-3,
+                _ep, ensemble=ensemble, t0=0.0, tf=1.0, dt0=1e-3,
                 saveat=saveat if adaptive else None, adaptive=adaptive,
                 rtol=1e-6, atol=1e-6, save_every=1000, **kw)
 
-        t_ker = bench(jax.jit(lambda: run("kernel", lane_tile=128).u_final))
-        t_vmap = bench(jax.jit(lambda: run("vmap").u_final))
+        s_ker = bench_stats(
+            jax.jit(lambda: run("kernel", lane_tile=128).u_final),
+            repeats=REPEATS)
+        s_vmap = bench_stats(jax.jit(lambda: run("vmap").u_final),
+                             repeats=REPEATS)
+        t_ker, t_vmap = s_ker["median"], s_vmap["median"]
         print(row(f"fig56/{tag}/kernel", t_ker, "1.0x"))
         print(row(f"fig56/{tag}/vmap_diffrax_class", t_vmap,
                   f"{t_vmap / t_ker:.2f}x"))
+        entry = {"kernel": {k: s_ker[k] for k in ("best", "median")},
+                 "vmap": {k: s_vmap[k] for k in ("best", "median")},
+                 "vmap_over_kernel": t_vmap / t_ker}
         if adaptive:
             r_k = run("kernel", lane_tile=128)
             r_v = run("vmap")
             # lock-step termination work amplification (RHS evals)
+            wr = float(r_v.nf) / float(r_k.nf)
             print(row(f"fig56/{tag}/work_ratio", 0.0,
-                      f"nf_vmap/nf_kernel={float(r_v.nf)/float(r_k.nf):.2f}"))
-        t_eager = bench(lambda: run("array_eager").u_final, repeats=1)
+                      f"nf_vmap/nf_kernel={wr:.2f}"))
+            entry["work_ratio_nf"] = wr
+        t_eager = bench_stats(lambda: run("array_eager").u_final,
+                              repeats=1)["median"]
         print(row(f"fig56/{tag}/eager_torch_class", t_eager,
                   f"{t_eager / t_ker:.1f}x"))
+        entry["eager_over_kernel"] = t_eager / t_ker
+        record[tag] = entry
+
+    # kernel-over-vmap crossover in N on the heterogeneous adaptive workload
+    sweep = {}
+    crossover = None
+    for n in SWEEP_NS:
+        epn = hetero_ensemble(n)
+
+        def runn(ensemble, **kw):
+            return solve_ensemble_local(
+                epn, ensemble=ensemble, t0=0.0, tf=1.0, dt0=1e-3,
+                saveat=saveat, adaptive=True, rtol=1e-6, atol=1e-6,
+                **kw).u_final
+
+        tk = bench_stats(jax.jit(lambda: runn("kernel", lane_tile=128)),
+                         repeats=REPEATS)["median"]
+        tv = bench_stats(jax.jit(lambda: runn("vmap")),
+                         repeats=REPEATS)["median"]
+        sweep[str(n)] = {"kernel": tk, "vmap": tv}
+        print(row(f"fig56/sweep/N={n}", tk, f"vmap={tv * 1e6:.1f}us"))
+        if crossover is None and tk < tv:
+            crossover = n
+    record["hetero_sweep"] = sweep
+    record["kernel_over_vmap_crossover"] = crossover
+    update_results_json(OUT, "fig56", record)
 
 
 if __name__ == "__main__":

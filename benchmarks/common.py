@@ -1,30 +1,38 @@
-"""Shared benchmark utilities: best-of-k wall timing of jitted callables.
+"""Shared benchmark utilities: wall timing + the crossover-JSON writer.
 
-Methodology (paper §6.1 analogue): report the BEST of `repeats` timed calls
-after one warmup (compile) call — matching BenchmarkTools.jl's minimum-time
-convention the paper uses. All timings are single-core CPU; they measure the
+Methodology (paper §6.1 analogue): one untimed warmup call absorbs
+compilation, then `repeats` timed calls with `jax.block_until_ready` INSIDE
+the clock; strategies are ranked by the MEDIAN (robust to scheduler noise)
+and the BEST is reported as the machine-capability figure (BenchmarkTools.jl's
+minimum-time convention the paper uses).  The harness itself lives in
+`repro.core.autotune.measure` — the autotuner and every `bench_fig*` script
+time through the SAME code, so the profile cache and the paper figures cannot
+disagree on methodology.  All timings are single-core CPU; they measure the
 *algorithmic structure* claims (array vs kernel), not TPU deployment (that is
 §Roofline's job).
 """
 from __future__ import annotations
 
-import time
-from typing import Callable
+import json
+import os
+from typing import Callable, Dict
 
-import jax
+from repro.core.autotune import measure
+
+
+def bench_stats(fn: Callable, *args, repeats: int = 3, **kw) -> Dict:
+    """{"best", "median", "times"} seconds per call (warmup excluded)."""
+    return measure(fn, *args, repeats=repeats, **kw)
 
 
 def bench(fn: Callable, *args, repeats: int = 3, **kw) -> float:
     """Returns best wall-clock seconds per call (post-warmup)."""
-    out = fn(*args, **kw)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best
+    return bench_stats(fn, *args, repeats=repeats, **kw)["best"]
+
+
+def bench_median(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Returns median wall-clock seconds per call (warmup excluded)."""
+    return bench_stats(fn, *args, repeats=repeats, **kw)["median"]
 
 
 def row(name: str, seconds: float, derived: str = "") -> str:
@@ -32,3 +40,20 @@ def row(name: str, seconds: float, derived: str = "") -> str:
 
 
 HEADER = "name,us_per_call,derived"
+
+
+def update_results_json(path: str, section: str, payload) -> None:
+    """Merge `payload` under `section` of a results JSON (e.g.
+    results/BENCH_crossover.json) — the fig4/fig56 benches each own a
+    section of one shared artifact, so either can run alone."""
+    data = {}
+    try:
+        with open(path) as fh:
+            data = json.load(fh)
+    except (OSError, ValueError):
+        pass
+    data[section] = payload
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=1, sort_keys=True)
+    print(f"# wrote {path} [{section}]")

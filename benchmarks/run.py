@@ -15,10 +15,13 @@ import traceback
 # allow both `python -m benchmarks.run` and `python benchmarks/run.py`
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+# a module may carry several pipe-separated tags ("fig4|crossover"):
+# --only matches any of them, so `--only crossover` selects the pair of
+# benches that write results/BENCH_crossover.json
 MODULES = [
-    ("fig4", "benchmarks.bench_fig4_crossover"),
+    ("fig4|crossover", "benchmarks.bench_fig4_crossover"),
     ("table1", "benchmarks.bench_table1_speedups"),
-    ("fig56", "benchmarks.bench_fig56_vs_vmap"),
+    ("fig56|crossover", "benchmarks.bench_fig56_vs_vmap"),
     ("fig7", "benchmarks.bench_fig7_backends"),
     ("fig9", "benchmarks.bench_fig9_gbm"),
     ("adaptive_sde", "benchmarks.bench_adaptive_sde"),
@@ -93,7 +96,7 @@ def main() -> None:
     import importlib
     failed = []
     for tag, modname in MODULES:
-        if only and tag not in only:
+        if only and not (only & set(tag.split("|"))):
             continue
         if args.dry:
             try:

@@ -61,6 +61,21 @@ print("\nSame physics, same answers — the kernel strategy does per-trajectory"
       "\nadaptive stepping with tile-local termination (paper §5.2), the"
       "\narray strategy lock-steps the whole ensemble (paper §5.1).")
 
+# --- or let the autotuner pick: ensemble="auto" ----------------------------
+# First sight of a configuration micro-benchmarks the pruned candidate set
+# (vmap/array/kernel x xla/pallas x lane-tile ladder) on a reduced copy of
+# THIS problem and persists the winner to ~/.cache/repro/autotune.json
+# (REPRO_AUTOTUNE_CACHE overrides; REPRO_AUTOTUNE=0 disables).  Warm cache
+# = a dictionary lookup; the solve is bitwise-identical to explicitly
+# dispatching the winner.  See docs/architecture.md "Autotuned dispatch".
+t0 = time.perf_counter()
+res = solve_ensemble_local(ens, alg="tsit5", ensemble="auto",
+                           t0=0.0, tf=1.0, dt0=1e-3, saveat=saveat,
+                           rtol=1e-6, atol=1e-6)
+jax.block_until_ready(res.u_final)
+print(f"   auto: {time.perf_counter() - t0:7.2f}s  (incl. first-sight "
+      f"tuning; cached for next time)   u_final[0] = {res.u_final[0]}")
+
 # --- stiff family, same front door: W = I - γh·J solved by batched LU -------
 vdp = ODEProblem(lambda u, p, t: jnp.stack(
     [u[1], p[0] * ((1.0 - u[0] ** 2) * u[1]) - u[0]]),

@@ -9,7 +9,9 @@ from .tableaus import (ROSENBROCK_TABLEAUS, TABLEAUS, RosenbrockTableau,
 from .controller import (STATUS_DTMIN_EXHAUSTED, STATUS_MAX_ITERS,
                          STATUS_SUCCESS, PIController, WReusePolicy,
                          hairer_norm, initial_dt)
-from .methods import MethodSpec, get_method, list_methods, register_method
+from .methods import (MethodSpec, get_method, list_methods, register_method,
+                      valid_dispatch)
+from .autotune import Decision, measure, resolve_auto
 from .events import Event
 from .solvers import (AdaptiveOptions, SolveResult, interp_step,
                       rk_step, solve_adaptive, solve_fixed, solve_one)
@@ -22,6 +24,7 @@ __all__ = [
     "initial_dt", "STATUS_SUCCESS", "STATUS_MAX_ITERS",
     "STATUS_DTMIN_EXHAUSTED",
     "MethodSpec", "get_method", "list_methods", "register_method",
+    "valid_dispatch", "Decision", "measure", "resolve_auto",
     "AdaptiveOptions", "Event", "SolveResult", "interp_step", "rk_step",
     "solve_adaptive", "solve_fixed", "solve_one",
     "EnsembleResult", "solve_ensemble_local",

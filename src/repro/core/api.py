@@ -64,6 +64,39 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     spec = P(axes)
     base_offset = kw.pop("lane_offset", 0)
 
+    if kw.get("ensemble") == "auto":
+        # resolve BEFORE shard_map: timing cannot run under tracing, and all
+        # shards must dispatch one program.  Tune once per host on a
+        # local-shard-sized slice (each device solves n_local trajectories,
+        # so that is the N whose crossover matters), broadcast host 0's
+        # winner, and hand every shard the explicit choice.
+        from .autotune import broadcast_decision, resolve_auto
+        from .methods import get_method
+        u0_loc, ps_loc = u0s[:n_local], ps[:n_local]
+        sub = EnsembleProblem(prob, n_local, u0s=u0_loc, ps=ps_loc)
+        tune_args = ("t0", "tf", "dt0", "saveat", "rtol", "atol", "adaptive",
+                     "n_steps", "save_every", "max_iters", "event", "key",
+                     "seed", "noise_table", "error_est", "w_reuse",
+                     "linsolve")
+        tune_kw = {k: v for k, v in kw.items() if k in tune_args}
+        dec = broadcast_decision(
+            resolve_auto(sub, get_method(kw.get("alg", "tsit5")), **tune_kw))
+        kw = dict(kw, ensemble=dec.strategy, backend=dec.backend)
+        if kw.get("lane_tile") is None:
+            kw["lane_tile"] = dec.lane_tile
+
+    # step counters are per-trajectory vectors under the kernel strategy but
+    # batch scalars under vmap/array — probe the local solve's result ranks
+    # (trace only, no compile) so the out_specs match whatever dispatch
+    # (explicit or auto-resolved above) actually returns
+    shard_shapes = jax.eval_shape(
+        lambda u, p: solve_ensemble_local(
+            EnsembleProblem(prob, n_local, u0s=u, ps=p),
+            lane_offset=base_offset, **kw),
+        jax.ShapeDtypeStruct((n_local,) + u0s.shape[1:], u0s.dtype),
+        jax.ShapeDtypeStruct((n_local,) + ps.shape[1:], ps.dtype))
+    per_traj_counts = shard_shapes.naccept.ndim > 0
+
     def local(u0c, pc):
         # linear shard index in the same axis order the PartitionSpec uses,
         # -> this shard's first global trajectory index
@@ -75,18 +108,24 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
                                    **kw)
         # per-shard scalars -> global via psum (lightweight stats only)
         nf, njac, nfact = res.nf, res.njac, res.nfact
+        nacc, nrej = res.naccept, res.nreject
         for a in axes:
             nf = jax.lax.psum(nf, a)
             njac = jax.lax.psum(njac, a)
             nfact = jax.lax.psum(nfact, a)
-        return res._replace(nf=nf, njac=njac, nfact=nfact)
+            if not per_traj_counts:
+                nacc = jax.lax.psum(nacc, a)
+                nrej = jax.lax.psum(nrej, a)
+        return res._replace(nf=nf, njac=njac, nfact=nfact,
+                            naccept=nacc, nreject=nrej)
 
+    count_spec = spec if per_traj_counts else P()
     fn = shard_map(local, mesh=mesh,
                    in_specs=(spec, spec),
                    out_specs=EnsembleResult(
                        ts=P(), us=spec, u_final=spec, t_final=spec,
-                       naccept=spec, nreject=spec, nf=P(), status=P(),
-                       njac=P(), nfact=P()),
+                       naccept=count_spec, nreject=count_spec, nf=P(),
+                       status=P(), njac=P(), nfact=P()),
                    check_rep=False)
     return fn(u0s, ps)
 

@@ -370,13 +370,19 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
     N, n = u0s.shape
 
     if ensemble == "vmap":
+        # bind an axis name so the lazy-W refresh conds stay REAL branches:
+        # solve_rosenbrock psum-reduces its predicates over this axis
+        # (unbatched bool), instead of vmap lowering them to both-branch
+        # selects — w_reuse then saves wall time under vmap too.
+        ax = "_repro_vmap_lanes"
+
         def one(u0, p):
             return solve_rosenbrock(prob.f, rtab, u0, p, t0, tf, dt0,
                                     rtol=rtol, atol=atol, saveat=saveat,
                                     max_iters=max_iters, jac=jac, event=event,
-                                    w_reuse=w_reuse)
+                                    w_reuse=w_reuse, batch_axis=ax)
 
-        res = jax.vmap(one)(u0s, ps)
+        res = jax.vmap(one, axis_name=ax)(u0s, ps)
         if event is not None:
             res, _ = res
         return EnsembleResult(ts=saveat, us=res.us, u_final=res.u_final,
@@ -697,7 +703,11 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
       ensemble: execution strategy — ``"vmap"`` (per-trajectory baseline),
         ``"array"`` (one ensemble state matrix, paper §5.1),
         ``"array_eager"`` (un-jitted dispatch-overhead reproduction, erk
-        only) or ``"kernel"`` (fused whole-integration tiles, paper §5.2).
+        only), ``"kernel"`` (fused whole-integration tiles, paper §5.2) or
+        ``"auto"`` — measured dispatch: `repro.core.autotune` picks
+        strategy/backend/lane_tile from the persisted profile cache, timing
+        the capability-pruned candidates on this problem on first sight
+        (see docs/architecture.md, "Autotuned dispatch").
       backend: ``"xla"`` (fused lax loops) or ``"pallas"`` (the generic
         ensemble Pallas kernel) — kernel strategy only.
       t0, tf, dt0: time span (defaults from ``prob.tspan``) and initial step.
@@ -740,10 +750,11 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
         `repro.core.controller.WReusePolicy`, and a `WReusePolicy` instance
         customizes the freshness thresholds.  Reuse-on trajectories satisfy
         the same cross-strategy/backend parity contract; `njac`/`nfact`
-        report the (much smaller) linear-algebra work.  Wall-time savings
-        materialize on the lanes strategies (``"array"``/``"kernel"``, where
-        the refresh is an any()-gated `lax.cond`); under ``"vmap"`` batching
-        the cond lowers to a select and only the *counted* work drops.
+        report the (much smaller) linear-algebra work.  The refresh is an
+        any()-gated `lax.cond` on every strategy — the vmap path binds an
+        axis name and psum-reduces the gate to an ensemble-uniform
+        predicate, so the cond survives vmap batching as a real branch and
+        the savings are wall time everywhere, not just counted work.
       lane_offset: GLOBAL index of this shard's first trajectory — keeps
         counter-RNG streams disjoint when `repro.core.api.solve_ensemble`
         splits an SDE ensemble over a mesh.  Local solves leave it 0.
@@ -760,6 +771,22 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
     u0s, ps = eprob.materialize()
     t0 = prob.tspan[0] if t0 is None else t0
     tf = prob.tspan[1] if tf is None else tf
+
+    if ensemble == "auto":
+        # measured dispatch (repro.core.autotune): profile-cache hit or a
+        # one-off micro-benchmark of the capability-pruned candidate set on
+        # this very problem; near-zero overhead once the cache is warm.
+        from .autotune import resolve_auto
+        dec = resolve_auto(eprob, spec, t0=t0, tf=tf, dt0=dt0, saveat=saveat,
+                           rtol=rtol, atol=atol, adaptive=adaptive,
+                           n_steps=n_steps, save_every=save_every,
+                           max_iters=max_iters, event=event, key=key,
+                           seed=seed, noise_table=noise_table,
+                           error_est=error_est, w_reuse=w_reuse,
+                           linsolve=linsolve)
+        ensemble, backend = dec.strategy, dec.backend
+        if lane_tile is None:
+            lane_tile = dec.lane_tile   # an explicit user tile always wins
 
     if event is not None and not spec.events:
         raise ValueError(

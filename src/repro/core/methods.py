@@ -29,6 +29,11 @@ from .tableaus import (ROSENBROCK_TABLEAUS, TABLEAUS, RosenbrockTableau,
 
 FAMILIES = ("erk", "rosenbrock", "sde")
 
+# the dispatch axes `solve_ensemble_local` accepts (docs/architecture.md's
+# matrix); `valid_dispatch` below is the single machine-readable predicate
+STRATEGIES = ("vmap", "array", "array_eager", "kernel")
+BACKENDS = ("xla", "pallas")
+
 
 @dataclasses.dataclass(frozen=True)
 class MethodSpec:
@@ -162,6 +167,47 @@ def get_method(alg: Any) -> MethodSpec:
     except (KeyError, TypeError):
         raise KeyError(
             f"unknown method {alg!r}; registered: {sorted(set(_REGISTRY))}")
+
+
+def valid_dispatch(spec: MethodSpec, ensemble: str, backend: str = "xla", *,
+                   adaptive: Optional[bool] = None, events: bool = False,
+                   w_reuse: bool = False,
+                   error_est: Optional[str] = None) -> Tuple[bool, str]:
+    """Is (strategy, backend) a combination the front door would accept?
+
+    Returns ``(ok, reason)`` — the same capability rules
+    `repro.core.ensemble.solve_ensemble_local` enforces with exceptions, as a
+    boolean predicate, so the autotuner (`repro.core.autotune`) can prune its
+    candidate set up front and never spend wall time compiling a combination
+    that would raise (events-on-array_eager, non-rosenbrock w_reuse,
+    pallas-without-kernel, ...).  Capability checks stay data, not code
+    paths: the rules read off the `MethodSpec` flags.
+    """
+    if ensemble not in STRATEGIES:
+        return False, f"unknown ensemble strategy {ensemble!r}"
+    if backend not in BACKENDS:
+        return False, f"unknown backend {backend!r}"
+    if backend == "pallas" and ensemble != "kernel":
+        return False, "backend='pallas' is kernel-strategy only"
+    if spec.family != "erk" and ensemble == "array_eager":
+        return False, f"array_eager is erk-only ({spec.family} family)"
+    if events and not spec.events:
+        return False, f"method {spec.name!r} declares events=False"
+    if events and ensemble == "array_eager":
+        return False, "events are not supported on array_eager"
+    if w_reuse and spec.family != "rosenbrock":
+        return False, "w_reuse is rosenbrock-only (no W to reuse)"
+    if spec.family == "rosenbrock" and not spec.adaptive:
+        return False, "rosenbrock engine requires an embedded pair"
+    if adaptive and not spec.adaptive:
+        return False, f"method {spec.name!r} has no adaptive step control"
+    if error_est is not None:
+        if spec.family != "sde":
+            return False, "error_est is an adaptive-SDE knob"
+        if error_est not in spec.error_est:
+            return False, (f"method {spec.name!r} supports error_est "
+                           f"{spec.error_est}, not {error_est!r}")
+    return True, "ok"
 
 
 def list_methods(family: Optional[str] = None):

@@ -257,7 +257,8 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                      rtol=1e-6, atol=1e-6, saveat=None, max_iters=100_000,
                      lanes=False, linsolve="jnp", lane_tile=None, jac=None,
                      controller: Optional[PIController] = None,
-                     event: Optional[Event] = None, w_reuse=None):
+                     event: Optional[Event] = None, w_reuse=None,
+                     batch_axis: Optional[str] = None):
     """Adaptive s-stage Rosenbrock solve with dense output.
 
     `jac` is the analytic-Jacobian hook (component-style (u, p, t) -> (n, n)
@@ -279,12 +280,19 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
     customizes the thresholds.  `SolveResult.njac`/`nfact` report the work
     either way (eager: both equal naccept + nreject).
 
-    Note the counters are ALGORITHMIC work: on the lanes paths (array /
-    kernel) the refresh runs under an any()-gated `lax.cond` and the savings
-    are real wall time, but under `vmap` batching the cond lowers to a
-    select that executes both branches, so reuse-on there saves *counted*
-    Jacobian work (and matches the other strategies' trajectories) without
-    reducing executed FLOPs.
+    The refresh runs under an any()-gated `lax.cond`, so the counter savings
+    are real wall time on every path.  On the lanes paths (array / kernel)
+    `jnp.any` already reduces over the batch.  Under `vmap` a plain
+    `jnp.any` predicate is per-trajectory — BATCHED — and vmap lowers a
+    batched cond to a select that executes BOTH branches every step; callers
+    that vmap this solver must bind an axis name
+    (``jax.vmap(one, axis_name=ax)``) and pass it as ``batch_axis=ax``: the
+    predicates are then `psum`-reduced over the vmap axis, which yields an
+    UNBATCHED boolean, keeps the cond a genuine branch, and makes the
+    refresh genuinely skippable (jacfwd + O(n³) elimination not executed)
+    whenever no trajectory in the batch asked for it.
+    `repro.core.ensemble.solve_ensemble_local` wires this automatically for
+    ``ensemble="vmap"``.
     """
     policy = (None if (w_reuse is None or w_reuse is False)
               else (w_reuse if isinstance(w_reuse, WReusePolicy)
@@ -312,6 +320,18 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
             return _jac_lanes(f, u, p, t, jac)
         return (jac(u, p, t) if jac is not None
                 else jax.jacfwd(lambda uu: f(uu, p, t))(u))
+
+    def any_lane(x):
+        # cond predicate that is UNIFORM over the whole ensemble batch.
+        # In lanes mode jnp.any already reduces over the (B,) lane axis;
+        # under vmap it is a per-trajectory (batched) bool, and a batched
+        # cond lowers to a select executing both branches — psum over the
+        # caller-bound vmap axis returns an unbatched scalar, keeping the
+        # refresh cond a real branch (see the docstring).
+        a = jnp.any(x)
+        if batch_axis is not None:
+            a = jax.lax.psum(a.astype(jnp.int32), batch_axis) > 0
+        return a
 
     carry0 = dict(
         t=jnp.broadcast_to(t0, cshape), u=u0,
@@ -381,7 +401,7 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
 
             def refresh(state):
                 J_old, fac_old, dtf_old = state
-                J_new = jax.lax.cond(jnp.any(need_jac),
+                J_new = jax.lax.cond(any_lane(need_jac),
                                      lambda: jac_eval(u, t), lambda: J_old)
                 jmask = (need_jac[:, None, None] if lanes else need_jac)
                 J_sel = jnp.where(jmask, J_new, J_old)
@@ -393,7 +413,7 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                         jnp.where(need_fact, dt_step, dtf_old))
 
             J, fac, dt_fact = jax.lax.cond(
-                jnp.any(need_fact), refresh, lambda s: s,
+                any_lane(need_fact), refresh, lambda s: s,
                 (J_base, c["fac"], c["dt_fact"]))
             u_cand, err, _, F_new, kds = _stage_loop(
                 f, rtab, u, p, t, dt_step,

@@ -31,6 +31,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 Array = Any
@@ -65,6 +66,30 @@ def auto_lane_tile(n_state: int, n_param: int, n_save: int, *,
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
     tile = (budget // per_lane) // LANE_WIDTH * LANE_WIDTH
     return int(max(LANE_WIDTH, min(tile, max_tile)))
+
+
+def lane_tile_ladder(n_state: int, n_param: int, n_save: int, *,
+                     itemsize: int = 4, work_words: Optional[int] = None,
+                     vmem_budget: Optional[int] = None, max_tile: int = 4096,
+                     N: Optional[int] = None) -> Tuple[int, ...]:
+    """Candidate lane tiles bracketing the §5.2 VMEM-optimal tile.
+
+    The occupancy formula (`auto_lane_tile`) yields ONE tile; the real
+    optimum depends on effects the formula cannot see (pipeline depth,
+    spill behaviour, interpret-mode overhead), so the autotuner
+    (`repro.core.autotune`) *times* a small ladder around it instead of
+    trusting the formula blindly: {minimum LANE_WIDTH tile, half the
+    formula's tile, the formula's tile, double it} — deduplicated, clamped
+    to the padded ensemble width when `N` is given, sorted ascending.
+    """
+    auto = auto_lane_tile(n_state, n_param, n_save, itemsize=itemsize,
+                          work_words=work_words, vmem_budget=vmem_budget,
+                          max_tile=max_tile)
+    half = max(LANE_WIDTH, (auto // 2) // LANE_WIDTH * LANE_WIDTH)
+    cand = {LANE_WIDTH, half, auto, min(max_tile, 2 * auto)}
+    if N is not None:
+        cand = {padded_lane_width(N, t) for t in cand}
+    return tuple(sorted(cand))
 
 
 def erk_work_words(n_state: int, n_param: int, stages: int) -> int:
@@ -239,6 +264,90 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
         naccept=stats[0, :N], nreject=stats[1, :N],
         nf=jnp.sum(stats[3, :N]), status=jnp.max(stats[2, :N]),
         njac=jnp.sum(stats[4, :N]), nfact=jnp.sum(stats[5, :N]))
+
+
+# ---------------------------------------------------------------------------
+# double-buffered HBM<->VMEM save staging (large save grids / large n)
+# ---------------------------------------------------------------------------
+
+def save_chunk_count(n_state: int, n_param: int, n_save: int, *,
+                     itemsize: int = 4, work_words: Optional[int] = None,
+                     vmem_budget: Optional[int] = None) -> int:
+    """How many saveat segments the staged driver needs (1 = no staging).
+
+    `run_ensemble_kernel` keeps the whole (S, n, B) output block VMEM-resident
+    for the kernel's lifetime; when S·n is large the §5.2 formula can only
+    shrink the tile down to its LANE_WIDTH floor, and past that the footprint
+    simply does not fit the budget.  This computes, at that minimum tile, the
+    number of saves one segment can afford, and hence the segment count
+    `run_ensemble_kernel_staged` should split the grid into.
+    """
+    if work_words is None:
+        work_words = 12 * n_state + n_param + 16
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    per_lane_words = budget // (LANE_WIDTH * itemsize)
+    max_saves = (per_lane_words - work_words) // (2 * n_state)
+    if max_saves >= n_save:
+        return 1
+    return int(-(-n_save // max(1, max_saves)))
+
+
+def run_ensemble_kernel_staged(body_factory: Callable, u0s: Array, ps: Array,
+                               *, ts: Array, save_chunks: int,
+                               lane_tile: Optional[int] = None,
+                               work_words: Optional[int] = None,
+                               vmem_budget: Optional[int] = None,
+                               interpret: Optional[bool] = None):
+    """Segmented launch: double-buffer the save block between HBM and VMEM.
+
+    The save grid `ts` (concrete, ascending, all > t0) is split into
+    `save_chunks` segments; each segment runs ONE `run_ensemble_kernel`
+    launch whose (S_seg, n, B) output block fits the VMEM budget, flushing to
+    HBM at segment end while the next launch re-stages only the (n, B) final
+    state — the classic two-buffers-in-flight staging pattern at saveat
+    granularity, which is the coarsest (and therefore cheapest) place to cut.
+    `u_final`/`t_final` and the step counters thread between segments at the
+    JAX level; `body_factory(t_start, seg_ts, last)` builds each segment's
+    loop body + extras (the erk wrapper `repro.kernels.tsit5.ops` supplies
+    one that restarts integration at the previous segment's endpoint).
+
+    Numerics: fixed-dt runs whose segment boundaries land on the step grid
+    are bitwise-identical to the unstaged kernel; adaptive runs restart the
+    controller (dt0, PI history) at each boundary, so they agree to solver
+    accuracy, not bitwise (see docs/kernels.md).
+    """
+    from repro.core.ensemble import EnsembleResult
+
+    ts_np = np.asarray(ts)
+    S = int(ts_np.shape[0])
+    save_chunks = int(max(1, min(save_chunks, S)))
+    segs = [idx for idx in np.array_split(np.arange(S), save_chunks)
+            if idx.size]
+
+    u_cur = u0s
+    parts, acc = [], None
+    for k, idx in enumerate(segs):
+        seg_ts = ts_np[idx]
+        t_start = float(ts_np[idx[0] - 1]) if k else None  # None: problem t0
+        body, extras = body_factory(t_start, seg_ts, k == len(segs) - 1)
+        res = run_ensemble_kernel(
+            body, u_cur, ps, ts=jnp.asarray(seg_ts, u0s.dtype),
+            extras=extras, lane_tile=lane_tile, work_words=work_words,
+            vmem_budget=vmem_budget, interpret=interpret)
+        u_cur = res.u_final
+        parts.append(res.us)
+        if acc is None:
+            acc = res
+        else:
+            acc = acc._replace(
+                u_final=res.u_final, t_final=res.t_final,
+                naccept=acc.naccept + res.naccept,
+                nreject=acc.nreject + res.nreject,
+                nf=acc.nf + res.nf, njac=acc.njac + res.njac,
+                nfact=acc.nfact + res.nfact,
+                status=jnp.maximum(acc.status, res.status))
+    return acc._replace(ts=jnp.asarray(ts_np, u0s.dtype),
+                        us=jnp.concatenate(parts, axis=1))
 
 
 # ---------------------------------------------------------------------------

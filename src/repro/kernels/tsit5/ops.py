@@ -2,31 +2,68 @@
 
 All padding / grid / stats plumbing lives in the generic factory
 (`repro.kernels.ensemble_kernel.run_ensemble_kernel`); this wrapper only
-instantiates the ERK loop body on the problem.
+instantiates the ERK loop body on the problem — and, when the save grid is
+too large for the VMEM budget, routes through the double-buffered staged
+driver (`run_ensemble_kernel_staged`) instead of over-subscribing VMEM.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.ensemble import EnsembleResult
 from repro.core.tableaus import Tableau
 from repro.kernels.ensemble_kernel import (erk_body, erk_work_words,
-                                           run_ensemble_kernel)
+                                           run_ensemble_kernel,
+                                           run_ensemble_kernel_staged,
+                                           save_chunk_count)
 
 
 def solve_ensemble_pallas(prob, u0s, ps, tab: Tableau, t0, tf, dt0, saveat,
                           rtol, atol, adaptive, lane_tile=None,
                           max_iters=100_000, event=None,
-                          interpret=None) -> EnsembleResult:
+                          interpret=None, save_chunks=None) -> EnsembleResult:
     """EnsembleGPUKernel entry point (called via ensemble="kernel",
     backend="pallas"). lane_tile=None derives the tile from the §5.2 VMEM
-    formula."""
+    formula.
+
+    `save_chunks=None` auto-activates the double-buffered save staging
+    (`run_ensemble_kernel_staged`) when the whole (S, n, B) output block
+    exceeds the VMEM budget even at the minimum lane tile; pass an explicit
+    count to force (or `1` to forbid) staging.  Staging needs a concrete,
+    ascending, post-t0 save grid and no event (event counters cannot thread
+    across segment boundaries) — anything else falls back to the single
+    launch unchanged.
+    """
     saveat = jnp.asarray(saveat, u0s.dtype)
-    body = erk_body(prob.f, tab, t0=float(t0), tf=float(tf), dt0=float(dt0),
-                    rtol=float(rtol), atol=float(atol), adaptive=adaptive,
-                    max_iters=max_iters, event=event)
+    work_words = erk_work_words(u0s.shape[1], ps.shape[1], tab.stages)
+    if save_chunks is None:
+        save_chunks = save_chunk_count(u0s.shape[1], ps.shape[1],
+                                       int(saveat.shape[0]),
+                                       itemsize=u0s.dtype.itemsize,
+                                       work_words=work_words)
+
+    def mk_body(t_start, t_end):
+        return erk_body(prob.f, tab, t0=float(t_start), tf=float(t_end),
+                        dt0=float(dt0), rtol=float(rtol), atol=float(atol),
+                        adaptive=adaptive, max_iters=max_iters, event=event)
+
+    stageable = (save_chunks > 1 and event is None
+                 and not isinstance(saveat, jax.core.Tracer)
+                 and saveat.shape[0] > 1
+                 and bool(saveat[0] > t0)
+                 and bool(jnp.all(jnp.diff(saveat) > 0)))
+    if stageable:
+        def body_factory(t_start, seg_ts, last):
+            seg_t0 = t0 if t_start is None else t_start
+            seg_tf = tf if last else float(seg_ts[-1])
+            sv = jnp.asarray(seg_ts, u0s.dtype)
+            return mk_body(seg_t0, seg_tf), [("broadcast", sv)]
+
+        return run_ensemble_kernel_staged(
+            body_factory, u0s, ps, ts=saveat, save_chunks=save_chunks,
+            lane_tile=lane_tile, work_words=work_words, interpret=interpret)
+
     return run_ensemble_kernel(
-        body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
-        lane_tile=lane_tile,
-        work_words=erk_work_words(u0s.shape[1], ps.shape[1], tab.stages),
-        interpret=interpret)
+        mk_body(t0, tf), u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
+        lane_tile=lane_tile, work_words=work_words, interpret=interpret)

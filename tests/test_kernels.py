@@ -250,3 +250,89 @@ def test_rosenbrock_beats_explicit_on_stiff_work():
     rt = solve_one(stiff_rhs, get_tableau("tsit5"), u0, p, 0.0, 1.0, 1e-6,
                    rtol=1e-4, atol=1e-7, max_iters=1_000_000)
     assert int(rr.naccept + rr.nreject) * 20 < int(rt.naccept + rt.nreject)
+
+
+# ---------------------------------------------------------------------------
+# double-buffered save staging (repro.kernels.ensemble_kernel staged driver)
+# ---------------------------------------------------------------------------
+
+def test_save_chunk_count_and_ladder():
+    from repro.kernels.ensemble_kernel import (LANE_WIDTH, auto_lane_tile,
+                                               lane_tile_ladder,
+                                               save_chunk_count)
+    # small save grids fit in one segment
+    assert save_chunk_count(3, 3, 5) == 1
+    # a save grid too large for VMEM even at the minimum tile must split
+    big = save_chunk_count(64, 3, 4096, itemsize=8)
+    assert big > 1
+    # segments cover the grid: ceil semantics
+    assert big * (4096 // big + 1) >= 4096
+    ladder = lane_tile_ladder(3, 3, 8)
+    assert auto_lane_tile(3, 3, 8) in ladder
+    assert LANE_WIDTH in ladder and list(ladder) == sorted(set(ladder))
+    assert lane_tile_ladder(3, 3, 8, N=64) == (64,)
+
+
+def test_staged_erk_fixed_dt_is_bitwise():
+    """Fixed-dt staging with dyadic dt and chunk-aligned saveat: the restart
+    t equals the accumulated t exactly, so every segment reproduces the
+    unstaged kernel's float sequence bit for bit."""
+    from repro.kernels.tsit5.ops import solve_ensemble_pallas
+
+    ep = lorenz_ensemble(8, dtype=jnp.float32)
+    u0s, ps = ep.materialize()
+    from repro.core import get_tableau
+    tab = get_tableau("tsit5")
+    saveat = jnp.asarray([0.25, 0.5, 0.75, 1.0], jnp.float32)
+    kw = dict(t0=0.0, tf=1.0, dt0=float(2.0 ** -6), saveat=saveat,
+              rtol=1e-5, atol=1e-5, adaptive=False, lane_tile=8)
+    one = solve_ensemble_pallas(ep.prob, u0s, ps, tab, save_chunks=1, **kw)
+    four = solve_ensemble_pallas(ep.prob, u0s, ps, tab, save_chunks=4, **kw)
+    np.testing.assert_array_equal(np.asarray(one.us), np.asarray(four.us))
+    np.testing.assert_array_equal(np.asarray(one.u_final),
+                                  np.asarray(four.u_final))
+    # counters thread across segments: accepted steps agree exactly; nf pays
+    # only the per-launch FSAL/startup re-seed on each extra segment
+    np.testing.assert_array_equal(np.asarray(one.naccept),
+                                  np.asarray(four.naccept))
+    extra_nf = int(np.asarray(four.nf)) - int(np.asarray(one.nf))
+    assert 0 <= extra_nf <= 3 * (tab.stages + 2)
+
+
+def test_staged_erk_adaptive_matches_to_solver_accuracy():
+    """Adaptive staging restarts the controller per segment — agreement is
+    to solver accuracy (the documented contract), not bitwise."""
+    from repro.kernels.tsit5.ops import solve_ensemble_pallas
+
+    ep = lorenz_ensemble(8, dtype=jnp.float32)
+    u0s, ps = ep.materialize()
+    from repro.core import get_tableau
+    tab = get_tableau("tsit5")
+    saveat = jnp.linspace(0.1, 1.0, 10, dtype=jnp.float32)
+    kw = dict(t0=0.0, tf=1.0, dt0=1e-3, saveat=saveat, rtol=1e-6, atol=1e-6,
+              adaptive=True, lane_tile=8)
+    one = solve_ensemble_pallas(ep.prob, u0s, ps, tab, save_chunks=1, **kw)
+    three = solve_ensemble_pallas(ep.prob, u0s, ps, tab, save_chunks=3, **kw)
+    np.testing.assert_allclose(np.asarray(one.us), np.asarray(three.us),
+                               rtol=1e-3, atol=1e-3)
+    assert np.asarray(three.status).max() == 0
+
+
+def test_staged_refuses_unstageable_grids():
+    """Pre-t0 / unsorted / traced save grids and events fall back to the
+    single launch (forced save_chunks is ignored when unstageable)."""
+    from repro.kernels.tsit5.ops import solve_ensemble_pallas
+
+    ep = lorenz_ensemble(4, dtype=jnp.float32)
+    u0s, ps = ep.materialize()
+    from repro.core import get_tableau
+    tab = get_tableau("tsit5")
+    kw = dict(t0=0.0, tf=1.0, dt0=1e-3, rtol=1e-5, atol=1e-5, adaptive=True,
+              lane_tile=4, save_chunks=2)
+    # grid starting AT t0: unstageable, must still solve correctly
+    saveat = jnp.linspace(0.0, 1.0, 5, dtype=jnp.float32)
+    res = solve_ensemble_pallas(ep.prob, u0s, ps, tab, saveat=saveat, **kw)
+    ref = solve_ensemble_local(ep, ensemble="kernel", backend="pallas",
+                               lane_tile=4, t0=0.0, tf=1.0, dt0=1e-3,
+                               saveat=saveat, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res.us), np.asarray(ref.us))

@@ -397,3 +397,75 @@ def test_lu_kernel_docstring_matches_contract():
     assert "fall back" in inspect.getdoc(ops.batched_solve).replace(
         "falls back", "fall back")
     assert "pivot" in inspect.getdoc(ops.batched_solve)
+
+
+# ---------------------------------------------------------------------------
+# vmap lazy-W: the any()-gated refresh must survive batching
+# ---------------------------------------------------------------------------
+
+def _count_cond_eqns(jaxpr) -> int:
+    """Recursively count `cond` primitives (vmap lowers an unreduced batched
+    predicate to `select_n` — the cond disappears from the jaxpr entirely)."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "cond":
+            total += 1
+        for val in eqn.params.values():
+            subs = val if isinstance(val, (tuple, list)) else (val,)
+            for sub in subs:
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    total += _count_cond_eqns(inner)
+    return total
+
+
+def test_vmap_lazy_w_refresh_cond_survives_batching():
+    """With `batch_axis` bound, the J/W refresh predicates are psum-reduced
+    to batch scalars, so both refresh `lax.cond`s survive vmap as real
+    branches; without it they are select-lowered (both branches always
+    execute) and the njac savings are bookkeeping fiction."""
+    prob = rober_problem()
+    ep = rober_ensemble(4)
+    u0s, ps = ep.materialize()
+
+    def traced(batch_axis):
+        def one(u0, p):
+            return solve_rosenbrock(prob.f, RODAS4, u0, p, 0.0, 1.0, 1e-6,
+                                    rtol=1e-4, atol=1e-6, jac=prob.jac,
+                                    w_reuse=True, max_iters=2000,
+                                    batch_axis=batch_axis).u_final
+        vkw = {} if batch_axis is None else {"axis_name": batch_axis}
+        return jax.make_jaxpr(jax.vmap(one, **vkw))(u0s, ps)
+
+    assert _count_cond_eqns(traced("lanes").jaxpr) >= 2   # jac + refactor
+    assert _count_cond_eqns(traced(None).jaxpr) == 0      # the old wart
+
+
+def test_vmap_lazy_w_executes_fewer_jac_evals():
+    """The njac counter reduction must correspond to fewer *executed*
+    Jacobian applications under vmap, not just a smaller number."""
+    import dataclasses
+
+    counts = {"eager": 0, "lazy": 0}
+    ens = rober_ensemble(4)
+    _, ps = ens.materialize()
+
+    def with_counting_jac(tag):
+        def counting_jac(u, p, t):
+            def bump(_):
+                counts[tag] += 1
+            jax.debug.callback(bump, t)
+            return rober_jac(u, p, t)
+        return EnsembleProblem(dataclasses.replace(ens.prob, jac=counting_jac),
+                               4, ps=ps)
+
+    kw = dict(alg="rodas4", ensemble="vmap", t0=0.0, tf=1.0, dt0=1e-6,
+              rtol=1e-4, atol=1e-6)
+    njac = {}
+    for tag, wr in (("eager", False), ("lazy", True)):
+        res = solve_ensemble_local(with_counting_jac(tag), w_reuse=wr, **kw)
+        jax.block_until_ready(res.u_final)
+        njac[tag] = int(np.max(np.asarray(res.njac)))
+    jax.effects_barrier()
+    assert counts["lazy"] < 0.7 * counts["eager"], counts
+    assert njac["lazy"] < njac["eager"]
