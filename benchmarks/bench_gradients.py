@@ -1,0 +1,131 @@
+"""Adjoint economics: checkpointed discrete adjoint vs naive full-unroll
+reverse AD (§6.6 tentpole).
+
+Reverse-mode through a solver must store (or recompute) every accepted step.
+The front door's ``sensitivity="adjoint"`` stores one carry per
+sqrt(n_steps)-sized segment and recomputes stages inside segments
+(`repro.core.loops`); the naive alternative differentiates the plain scan and
+stores every stage of every step.  This bench measures BOTH costs of that
+choice on a long fixed-dt Lorenz ensemble solve:
+
+  * wall time per gradient (warm, best-of-repeats — `benchmarks.common`);
+  * the XLA compiled-memory proxy (`compile().memory_analysis()` temp bytes)
+    for the backward pass — the number that decides whether a long horizon
+    fits on an accelerator at all;
+
+plus the adaptive-path adjoint (bounded loop, probe-sized attempt bound) so
+the paper-style workflow is timed end to end.  Writes
+results/BENCH_gradients.json for CI diffing.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import HEADER, bench, row
+
+N, N_STEPS = 64, 4096
+RESULTS = os.path.join(os.path.dirname(__file__), os.pardir, "results",
+                       "BENCH_gradients.json")
+
+
+def _temp_bytes(jitted, *args):
+    try:
+        mem = jitted.lower(*args).compile().memory_analysis()
+        if mem is None:
+            return None
+        return int(mem.temp_size_in_bytes)
+    except Exception:                      # pragma: no cover - backend quirk
+        return None
+
+
+def main() -> None:
+    jax.config.update("jax_enable_x64", True)
+    from repro.core import EnsembleProblem, solve_ensemble_local
+    from repro.core.sensitivity import suggest_adjoint_steps
+    from repro.core.tableaus import get_tableau
+    from repro.core.solvers import solve_fixed
+    from repro.configs.de_problems import lorenz_problem
+
+    print(HEADER)
+    prob = lorenz_problem(jnp.float64)
+    rng = np.random.default_rng(0)
+    u0s = jnp.asarray(np.array([-8.0, 7.0, 27.0])
+                      + 0.1 * rng.standard_normal((N, 3)))
+    ps = jnp.asarray(np.array([10.0, 28.0, 8.0 / 3.0])
+                     + 0.05 * rng.standard_normal((N, 3)))
+    dt = 1.0 / N_STEPS
+    records = {"N": N, "n_steps": N_STEPS}
+
+    # --- fixed-dt horizon: checkpointed adjoint vs naive unrolled reverse --
+    def front_door_loss(p, checkpoint_every=None):
+        ep = EnsembleProblem(prob, N, u0s=u0s, ps=p)
+        res = solve_ensemble_local(ep, alg="tsit5", ensemble="kernel",
+                                   backend="xla", t0=0.0, tf=1.0,
+                                   adaptive=False, n_steps=N_STEPS,
+                                   save_every=N_STEPS, sensitivity="adjoint",
+                                   checkpoint_every=checkpoint_every)
+        return jnp.sum(res.u_final ** 2)
+
+    tab = get_tableau("tsit5")
+
+    def naive_loss(p):
+        # plain differentiable scan, NO remat: stores every stage of every
+        # step on the reverse pass — the O(n_steps) baseline
+        res = solve_fixed(prob.f, tab, u0s.T, p.T, 0.0, dt, N_STEPS,
+                          save_every=N_STEPS)
+        return jnp.sum(res.u_final ** 2)
+
+    variants = {
+        "adjoint_checkpointed": jax.jit(jax.grad(front_door_loss)),
+        "reverse_unrolled": jax.jit(jax.grad(naive_loss)),
+    }
+    for name, fn in variants.items():
+        secs = bench(fn, ps, repeats=3)
+        temp = _temp_bytes(fn, ps)
+        records[name] = {"seconds": secs, "temp_bytes": temp}
+        print(row(f"grad_fixed_{name}", secs,
+                  f"temp={temp if temp is not None else 'n/a'}B"))
+    ck, un = records["adjoint_checkpointed"], records["reverse_unrolled"]
+    if ck["temp_bytes"] and un["temp_bytes"]:
+        records["temp_ratio_unrolled_over_checkpointed"] = (
+            un["temp_bytes"] / ck["temp_bytes"])
+        print(row("grad_fixed_temp_ratio", 0.0,
+                  f"{records['temp_ratio_unrolled_over_checkpointed']:.1f}x"
+                  " less backward memory (checkpointed)"))
+
+    # --- adaptive horizon: the probe + bounded-adjoint workflow ------------
+    akw = dict(alg="tsit5", ensemble="kernel", backend="xla", t0=0.0, tf=1.0,
+               dt0=1e-2, rtol=1e-8, atol=1e-8, saveat=jnp.asarray([1.0]))
+    ep = EnsembleProblem(prob, N, u0s=u0s, ps=ps)
+    bound = suggest_adjoint_steps(ep, **akw)
+    records["adaptive_bound"] = int(bound)
+
+    def adaptive_loss(p):
+        sub = EnsembleProblem(prob, N, u0s=u0s, ps=p)
+        res = solve_ensemble_local(sub, sensitivity="adjoint",
+                                   adjoint_steps=bound, **akw)
+        return jnp.sum(res.u_final ** 2)
+
+    fwd = jax.jit(lambda p: adaptive_loss(p))
+    grad = jax.jit(jax.grad(adaptive_loss))
+    t_fwd = bench(fwd, ps, repeats=3)
+    t_grad = bench(grad, ps, repeats=3)
+    records["adaptive"] = {"forward_seconds": t_fwd, "grad_seconds": t_grad,
+                           "grad_over_forward": t_grad / t_fwd}
+    print(row("grad_adaptive_forward", t_fwd, f"bound={bound}"))
+    print(row("grad_adaptive_vjp", t_grad,
+              f"{t_grad / t_fwd:.1f}x forward cost"))
+
+    os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+    with open(RESULTS, "w") as fh:
+        json.dump(records, fh, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.relpath(RESULTS)}")
+
+
+if __name__ == "__main__":
+    main()

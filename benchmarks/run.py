@@ -26,6 +26,7 @@ MODULES = [
     ("fig9", "benchmarks.bench_fig9_gbm"),
     ("adaptive_sde", "benchmarks.bench_adaptive_sde"),
     ("stiff", "benchmarks.bench_stiff"),
+    ("gradients", "benchmarks.bench_gradients"),
     ("fig11", "benchmarks.bench_fig11_crn"),
     ("texture", "benchmarks.bench_texture_interp"),
     ("mpi", "benchmarks.bench_mpi_scale"),

@@ -132,3 +132,35 @@ print(f"\nadaptive em + barrier event: {int(hit.sum())}/512 paths hit X=0.25,"
       f" (per-trajectory adaptive dt), rejects = {int(res.nreject.sum())},"
       f"\n  drift evals: embedded pair {int(res.nf)} vs step doubling "
       f"{int(res_dbl.nf)} ({float(res_dbl.nf) / float(res.nf):.1f}x)")
+
+# --- gradients through the same front door: sensitivity="adjoint" ----------
+# Any differentiable loss of the solve supports jax.grad.  Adaptive solves
+# need an explicit attempt bound for the reverse pass (the while-loop is not
+# reverse-differentiable): probe once with suggest_adjoint_steps, then
+# differentiate.  Fixed-dt solves need no bound, and checkpoint_every= keeps
+# backward memory O(sqrt(n_steps)) instead of O(n_steps) — see
+# benchmarks/bench_gradients.py and docs/architecture.md "Gradients are a
+# dispatch capability".
+from repro.core.sensitivity import suggest_adjoint_steps
+
+dprob = ODEProblem(lorenz, jnp.asarray([1.0, 0.0, 0.0], jnp.float64),
+                   jnp.asarray([10.0, 21.0, 8 / 3], jnp.float64), (0.0, 1.0))
+rho64 = jnp.linspace(18.0, 24.0, 32, dtype=jnp.float64)
+dps = jnp.stack([jnp.full((32,), 10.0), rho64, jnp.full((32,), 8 / 3)], axis=1)
+grad_kw = dict(alg="tsit5", ensemble="kernel", backend="xla", t0=0.0, tf=1.0,
+               dt0=1e-2, rtol=1e-6, atol=1e-6)
+dens = EnsembleProblem(dprob, 32, ps=dps)
+bound = suggest_adjoint_steps(dens, **grad_kw)
+
+
+def loss(p):
+    sub = EnsembleProblem(dprob, 32, ps=p)
+    out = solve_ensemble_local(sub, sensitivity="adjoint",
+                               adjoint_steps=bound, **grad_kw)
+    return jnp.sum(out.u_final ** 2)
+
+
+g = jax.jit(jax.grad(loss))(dps)
+print(f"\nadjoint gradients: dL/drho for 32-member Lorenz sweep "
+      f"(attempt bound {bound}),"
+      f"\n  g[:3, 1] = {g[:3, 1]}  — same dispatch, jax.grad just works")

@@ -47,6 +47,17 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     draws the (seed; step, row, k*n_local + i) stream — sharded and local
     solves produce bitwise-identical trajectories, and distinct shards never
     replay each other's noise.
+
+    Gradients compose with sharding: pass ``sensitivity="adjoint"`` (plus
+    ``adjoint_steps`` for adaptive stepping — see `solve_ensemble_local`) and
+    `jax.grad` of a scalar loss over the sharded result differentiates
+    through the shard_map — each shard runs its local checkpointed adjoint
+    over its own trajectories (states need no collectives; zero-collective
+    property preserved), and the transposes of the stats psums are the only
+    cross-shard traffic in the backward pass.  Per-shard gradient
+    contributions are assembled on the same trajectory sharding as (u0s, ps);
+    a loss that mean-reduces over trajectories psums gradient accumulators
+    exactly once, in ITS backward pass.
     """
     if mesh is None:
         return solve_ensemble_local(eprob, **kw)
@@ -77,7 +88,7 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
         tune_args = ("t0", "tf", "dt0", "saveat", "rtol", "atol", "adaptive",
                      "n_steps", "save_every", "max_iters", "event", "key",
                      "seed", "noise_table", "error_est", "w_reuse",
-                     "linsolve")
+                     "linsolve", "sensitivity")
         tune_kw = {k: v for k, v in kw.items() if k in tune_args}
         dec = broadcast_decision(
             resolve_auto(sub, get_method(kw.get("alg", "tsit5")), **tune_kw))
@@ -127,6 +138,13 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
                        naccept=count_spec, nreject=count_spec, nf=P(),
                        status=P(), njac=P(), nfact=P()),
                    check_rep=False)
+    if kw.get("sensitivity") is not None:
+        # the bounded adjoint loop wraps segments in jax.checkpoint, which
+        # lowers to closed_call — shard_map cannot evaluate that eagerly
+        # ("Eager evaluation of closed_call inside a shard_map isn't yet
+        # supported"), so stage the whole sharded solve through jit; under an
+        # outer jit/grad this inlines and changes nothing
+        fn = jax.jit(fn)
     return fn(u0s, ps)
 
 

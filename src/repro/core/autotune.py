@@ -125,7 +125,8 @@ def resolved_flags(spec: MethodSpec, prob, *, adaptive, w_reuse, error_est,
 
 def config_key(spec: MethodSpec, *, n: int, N: int, dtype, adaptive: bool,
                events: bool, w_reuse: bool, error_est: str,
-               device: Optional[str] = None) -> str:
+               device: Optional[str] = None,
+               sensitivity: Optional[str] = None) -> str:
     """Deterministic cache key — a readable ``k=v|...`` string (field order
     fixed), hashable across processes and debuggable in the JSON by eye."""
     return "|".join((
@@ -137,6 +138,7 @@ def config_key(spec: MethodSpec, *, n: int, N: int, dtype, adaptive: bool,
         f"events={bool(events)}",
         f"w_reuse={bool(w_reuse)}",
         f"error_est={error_est}",
+        f"sens={sensitivity or 'none'}",
         f"device={device_kind() if device is None else device}"))
 
 
@@ -236,18 +238,19 @@ def _family_work_words(spec: MethodSpec, prob, n: int, m: int,
 
 def candidates(spec: MethodSpec, *, n: int, m: int, n_save: int, N: int,
                dtype, adaptive: bool, events: bool, w_reuse: bool,
-               error_est: str, allow_pallas: bool = True):
+               error_est: str, allow_pallas: bool = True, sensitivity=None):
     """Capability-pruned candidate list: every entry would be accepted by
     `solve_ensemble_local` (never time a combination that raises).
     ``array_eager`` is never a candidate — it exists to *reproduce* dispatch
-    overhead, not to win."""
+    overhead, not to win.  ``sensitivity`` prunes combinations the AD rules
+    reject (e.g. forward-mode on the Pallas backend)."""
     ee = error_est if error_est != "none" else None
     out = []
 
     def ok(strategy, backend):
         valid, _ = valid_dispatch(spec, strategy, backend, adaptive=adaptive,
                                   events=events, w_reuse=w_reuse,
-                                  error_est=ee)
+                                  error_est=ee, sensitivity=sensitivity)
         return valid
 
     for strategy in ("vmap", "array"):
@@ -297,7 +300,7 @@ def resolve_auto(eprob: EnsembleProblem, spec: MethodSpec, *, t0=None,
                  adaptive=None, n_steps=None, save_every=1, max_iters=100_000,
                  event=None, key=None, seed=None, noise_table=None,
                  error_est=None, w_reuse=None, linsolve="jnp",
-                 cache_path: Optional[str] = None,
+                 sensitivity=None, cache_path: Optional[str] = None,
                  repeats: Optional[int] = None) -> Decision:
     """Resolve ``ensemble="auto"`` to a concrete (strategy, backend,
     lane_tile) `Decision` — cache hit, fresh micro-benchmark, or static
@@ -313,15 +316,24 @@ def resolve_auto(eprob: EnsembleProblem, spec: MethodSpec, *, t0=None,
                                     w_reuse=w_reuse, error_est=error_est,
                                     event=event)
     ckey = config_key(spec, n=n, N=N, dtype=u0s.dtype, adaptive=ad,
-                      events=ev, w_reuse=wr, error_est=ee)
+                      events=ev, w_reuse=wr, error_est=ee,
+                      sensitivity=sensitivity)
     path = cache_path or default_cache_path()
 
-    # 1. cache (works under jit too: the key is static shape/dtype data)
+    # 1. cache (works under jit too: the key is static shape/dtype data).
+    # A cached winner may predate an AD request — re-check it against the
+    # sensitivity rules and fall through to a constrained re-tune if the
+    # cached combination would be rejected by the front door.
     entries = _load_entries(path)
     hit = entries.get(ckey)
     if hit is not None and hit.get("jax") == jax.__version__:
-        return Decision(hit["strategy"], hit["backend"], hit["lane_tile"],
-                        source="cache", key=ckey)
+        sens_ok, _ = valid_dispatch(spec, hit["strategy"], hit["backend"],
+                                    adaptive=ad, events=ev, w_reuse=wr,
+                                    error_est=ee if ee != "none" else None,
+                                    sensitivity=sensitivity)
+        if sens_ok:
+            return Decision(hit["strategy"], hit["backend"], hit["lane_tile"],
+                            source="cache", key=ckey)
 
     # 2. timing unavailable -> static default
     if (_disabled() or dt0 is None
@@ -340,7 +352,8 @@ def resolve_auto(eprob: EnsembleProblem, spec: MethodSpec, *, t0=None,
         concrete_seed, allow_pallas = 0, spec.family != "sde"
     cands = candidates(spec, n=n, m=m, n_save=S_real, N=min(N, TUNE_MAX_N),
                        dtype=u0s.dtype, adaptive=ad, events=ev, w_reuse=wr,
-                       error_est=ee, allow_pallas=allow_pallas)
+                       error_est=ee, allow_pallas=allow_pallas,
+                       sensitivity=sensitivity)
     if not cands:
         return Decision(*DEFAULT_STRATEGY, source="default", key=ckey)
     if len(cands) == 1:

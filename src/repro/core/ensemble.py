@@ -140,11 +140,14 @@ def _untile(res, N, n):
 # ----------------------------------------------------------------------------
 
 def solve_vmap(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
-               rtol, atol, adaptive, max_iters, event=None) -> EnsembleResult:
+               rtol, atol, adaptive, max_iters, event=None,
+               bounded_steps=None, checkpoint_every=None) -> EnsembleResult:
     def one(u0, p):
         return solve_one(prob.f, tab, u0, p, t0, tf, dt0, saveat=saveat,
                          rtol=rtol, atol=atol, adaptive=adaptive,
-                         max_iters=max_iters, event=event)
+                         max_iters=max_iters, event=event,
+                         bounded_steps=bounded_steps,
+                         checkpoint_every=checkpoint_every)
 
     res = jax.vmap(one)(u0s, ps)
     if event is not None:
@@ -160,13 +163,15 @@ def solve_vmap(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
 # ----------------------------------------------------------------------------
 
 def solve_array(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
-                rtol, atol, adaptive, max_iters, event=None) -> EnsembleResult:
+                rtol, atol, adaptive, max_iters, event=None,
+                bounded_steps=None, checkpoint_every=None) -> EnsembleResult:
     # stack to (n, N): component-style f broadcasts over the trailing lane axis,
     # scalar-control mode gives ONE dt + ensemble-wide norm == §5.1 semantics.
     U0 = u0s.T
     P = ps.T
     opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
-                           adaptive=adaptive)
+                           adaptive=adaptive, bounded_steps=bounded_steps,
+                           checkpoint_every=checkpoint_every)
     res = solve_adaptive(prob.f, tab, U0, P, t0, tf, dt0, saveat=saveat,
                          opts=opts, event=event, lanes=False)
     if event is not None:
@@ -246,7 +251,8 @@ def solve_array_eager(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
 
 def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
                      rtol, atol, adaptive, max_iters, lane_tile=XLA_LANE_TILE,
-                     event=None) -> EnsembleResult:
+                     event=None, bounded_steps=None,
+                     checkpoint_every=None) -> EnsembleResult:
     """Fused-integration lanes path expressed in pure XLA.
 
     Trajectories are packed into (n, B) tiles; each tile runs ONE while_loop to
@@ -257,7 +263,8 @@ def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
     N, n = u0s.shape
     u0p, psp, T, B = _tile_lanes(u0s, ps, lane_tile)
     opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
-                           adaptive=adaptive)
+                           adaptive=adaptive, bounded_steps=bounded_steps,
+                           checkpoint_every=checkpoint_every)
 
     def tile(args):
         u0t, pt = args  # (B,n), (B,m)
@@ -271,11 +278,13 @@ def solve_kernel_xla(prob: ODEProblem, u0s, ps, tab, t0, tf, dt0, saveat,
 
 
 def solve_kernel_fixed(prob: ODEProblem, u0s, ps, tab, t0, dt, n_steps,
-                       save_every, lane_tile=1024) -> EnsembleResult:
+                       save_every, lane_tile=1024, remat=False,
+                       checkpoint_every=None) -> EnsembleResult:
     """Fixed-dt fused path: scan-of-steps over (n, N) lanes — single fused
     computation, O(1) state traffic per step (the paper's fixed-dt kernel)."""
     N, n = u0s.shape
-    res = solve_fixed(prob.f, tab, u0s.T, ps.T, t0, dt, n_steps, save_every)
+    res = solve_fixed(prob.f, tab, u0s.T, ps.T, t0, dt, n_steps, save_every,
+                      remat=remat, checkpoint_every=checkpoint_every)
     ts = res.ts
     return EnsembleResult(
         ts=ts, us=jnp.moveaxis(res.us, -1, 0),
@@ -287,12 +296,41 @@ def solve_kernel_fixed(prob: ODEProblem, u0s, ps, tab, t0, dt, n_steps,
 
 
 # ----------------------------------------------------------------------------
+# sensitivity plumbing shared by the family dispatchers
+# ----------------------------------------------------------------------------
+
+def _resolve_adjoint(sensitivity, adaptive, adjoint_steps, n_steps):
+    """(bounded_steps, remat) for the engines under sensitivity='adjoint'.
+
+    Adaptive stepping has no static iteration count, so reverse mode needs an
+    explicit ``adjoint_steps`` bound (probe the forward solve:
+    ``naccept + nreject``; a bound that turns out too small reports
+    ``status == 1`` — never a silently wrong gradient).  Fixed-dt stepping
+    derives the bound from ``n_steps`` (one attempt per step) and asks the
+    scan-shaped paths for segment remat instead.
+    """
+    if sensitivity != "adjoint":
+        return None, False
+    if adjoint_steps is not None:
+        return int(adjoint_steps), True
+    if adaptive:
+        raise ValueError(
+            "sensitivity='adjoint' with adaptive stepping needs an explicit "
+            "adjoint_steps bound on the attempt count (run the forward solve "
+            "once and use naccept + nreject plus margin; a too-small bound "
+            "surfaces as status == 1, never as a wrong gradient)")
+    # fixed-accept stepping: exactly one attempt per step
+    return int(n_steps) + 1, True
+
+
+# ----------------------------------------------------------------------------
 # family dispatch: erk
 # ----------------------------------------------------------------------------
 
 def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
                dt0, saveat, rtol, atol, adaptive, n_steps, save_every,
-               lane_tile, max_iters, event):
+               lane_tile, max_iters, event, sensitivity=None,
+               adjoint_steps=None, checkpoint_every=None):
     tab = spec.tableau
     if adaptive is None:
         adaptive = True   # family default: embedded-error stepping
@@ -301,6 +339,8 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
     explicit_saveat = saveat is not None
     if not adaptive and n_steps is None:
         n_steps = int(round((tf - t0) / dt0))
+    bounded, remat = _resolve_adjoint(sensitivity, adaptive, adjoint_steps,
+                                      n_steps)
     if saveat is None:
         if not adaptive and ensemble == "kernel" and event is None:
             # mirror solve_kernel_fixed's save_every grid so the pallas and
@@ -316,10 +356,12 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
 
     if ensemble == "vmap":
         return solve_vmap(prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol,
-                          adaptive, max_iters, event)
+                          adaptive, max_iters, event, bounded_steps=bounded,
+                          checkpoint_every=checkpoint_every)
     if ensemble == "array":
         return solve_array(prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol,
-                           adaptive, max_iters, event)
+                           adaptive, max_iters, event, bounded_steps=bounded,
+                           checkpoint_every=checkpoint_every)
     if ensemble == "array_eager":
         if event is not None:
             raise NotImplementedError(
@@ -329,18 +371,37 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
     if ensemble == "kernel":
         if backend == "pallas":
             from repro.kernels.tsit5 import ops as erk_ops
-            return erk_ops.solve_ensemble_pallas(
-                prob, u0s, ps, tab, t0, tf, dt0, saveat, rtol, atol, adaptive,
-                lane_tile=lane_tile, max_iters=max_iters, event=event)
+
+            def run(u, p):
+                return erk_ops.solve_ensemble_pallas(
+                    prob, u, p, tab, t0, tf, dt0, saveat, rtol, atol,
+                    adaptive, lane_tile=lane_tile, max_iters=max_iters,
+                    event=event)
+
+            if sensitivity == "adjoint":
+                from repro.kernels.ensemble_kernel import kernel_adjoint
+
+                def replay(u, p):
+                    return solve_kernel_xla(
+                        prob, u, p, tab, t0, tf, dt0, saveat, rtol, atol,
+                        adaptive, max_iters, lane_tile or XLA_LANE_TILE,
+                        event, bounded_steps=bounded,
+                        checkpoint_every=checkpoint_every)
+
+                return kernel_adjoint(run, replay)(u0s, ps)
+            return run(u0s, ps)
         if not adaptive and event is None and not explicit_saveat:
             return solve_kernel_fixed(prob, u0s, ps, tab, t0, dt0, n_steps,
                                       save_every,
-                                      lane_tile or XLA_LANE_TILE)
+                                      lane_tile or XLA_LANE_TILE, remat=remat,
+                                      checkpoint_every=checkpoint_every)
         # fixed dt with a user saveat: lanes path with adaptive=False honours
         # the requested grid via dense output
         return solve_kernel_xla(prob, u0s, ps, tab, t0, tf, dt0, saveat,
                                 rtol, atol, adaptive, max_iters,
-                                lane_tile or XLA_LANE_TILE, event)
+                                lane_tile or XLA_LANE_TILE, event,
+                                bounded_steps=bounded,
+                                checkpoint_every=checkpoint_every)
     raise ValueError(f"unknown ensemble strategy {ensemble!r}")
 
 
@@ -350,8 +411,13 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
 
 def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                       t0, tf, dt0, saveat, rtol, atol, lane_tile, max_iters,
-                      linsolve, event, w_reuse):
+                      linsolve, event, w_reuse, sensitivity=None,
+                      adjoint_steps=None, checkpoint_every=None):
     from .rosenbrock import solve_rosenbrock
+
+    # the stiff engine is always adaptive: adjoint mode needs the explicit
+    # attempt bound (see _resolve_adjoint)
+    bounded, _ = _resolve_adjoint(sensitivity, True, adjoint_steps, None)
 
     rtab = spec.rtableau
     if not spec.adaptive:
@@ -380,7 +446,9 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
             return solve_rosenbrock(prob.f, rtab, u0, p, t0, tf, dt0,
                                     rtol=rtol, atol=atol, saveat=saveat,
                                     max_iters=max_iters, jac=jac, event=event,
-                                    w_reuse=w_reuse, batch_axis=ax)
+                                    w_reuse=w_reuse, batch_axis=ax,
+                                    bounded_steps=bounded,
+                                    checkpoint_every=checkpoint_every)
 
         res = jax.vmap(one, axis_name=ax)(u0s, ps)
         if event is not None:
@@ -393,8 +461,34 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                               nfact=jnp.sum(res.nfact))
 
     if ensemble in ("array", "kernel"):
+        # "array": whole ensemble as ONE lanes tile. A lock-step scalar-dt
+        # Rosenbrock would need an (N·n)-sized Jacobian per global step, so
+        # the array strategy keeps the one-state-matrix memory layout but
+        # per-lane step control — preserving the cross-strategy trajectory
+        # parity contract (identical per-trajectory dt sequences).
+        tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
+
+        def lanes_run(u, p):
+            u0p, psp, T, B = _tile_lanes(u, p, tile_n)
+
+            def tile(args):
+                u0t, pt = args
+                res = solve_rosenbrock(prob.f, rtab, u0t.T, pt.T, t0, tf, dt0,
+                                       rtol=rtol, atol=atol, saveat=saveat,
+                                       max_iters=max_iters, lanes=True,
+                                       linsolve=linsolve, lane_tile=B, jac=jac,
+                                       event=event, w_reuse=w_reuse,
+                                       bounded_steps=bounded,
+                                       checkpoint_every=checkpoint_every)
+                if event is not None:
+                    res, _ = res
+                return res
+
+            return _untile(jax.lax.map(tile, (u0p, psp)), N, n)
+
         if ensemble == "kernel" and backend == "pallas":
-            from repro.kernels.ensemble_kernel import (rosenbrock_body,
+            from repro.kernels.ensemble_kernel import (kernel_adjoint,
+                                                       rosenbrock_body,
                                                        rosenbrock_work_words,
                                                        run_ensemble_kernel)
             body = rosenbrock_body(prob.f, rtab, jac=jac, t0=float(t0),
@@ -402,33 +496,20 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                                    rtol=float(rtol), atol=float(atol),
                                    max_iters=max_iters, event=event,
                                    w_reuse=w_reuse)
-            return run_ensemble_kernel(
-                body, u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
-                lane_tile=lane_tile,
-                work_words=rosenbrock_work_words(
-                    n, ps.shape[1], stages=rtab.stages,
-                    w_reuse=bool(w_reuse)))
 
-        # "array": whole ensemble as ONE lanes tile. A lock-step scalar-dt
-        # Rosenbrock would need an (N·n)-sized Jacobian per global step, so
-        # the array strategy keeps the one-state-matrix memory layout but
-        # per-lane step control — preserving the cross-strategy trajectory
-        # parity contract (identical per-trajectory dt sequences).
-        tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
-        u0p, psp, T, B = _tile_lanes(u0s, ps, tile_n)
+            def run(u, p):
+                return run_ensemble_kernel(
+                    body, u, p, ts=saveat, extras=[("broadcast", saveat)],
+                    lane_tile=lane_tile,
+                    work_words=rosenbrock_work_words(
+                        n, ps.shape[1], stages=rtab.stages,
+                        w_reuse=bool(w_reuse)))
 
-        def tile(args):
-            u0t, pt = args
-            res = solve_rosenbrock(prob.f, rtab, u0t.T, pt.T, t0, tf, dt0,
-                                   rtol=rtol, atol=atol, saveat=saveat,
-                                   max_iters=max_iters, lanes=True,
-                                   linsolve=linsolve, lane_tile=B, jac=jac,
-                                   event=event, w_reuse=w_reuse)
-            if event is not None:
-                res, _ = res
-            return res
+            if sensitivity == "adjoint":
+                return kernel_adjoint(run, lanes_run)(u0s, ps)
+            return run(u0s, ps)
 
-        return _untile(jax.lax.map(tile, (u0p, psp)), N, n)
+        return lanes_run(u0s, ps)
 
     raise NotImplementedError(
         f"rosenbrock methods do not support ensemble={ensemble!r} "
@@ -452,7 +533,8 @@ def _concrete_seed(seed):
 def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                backend, t0, tf, dt0, saveat, n_steps, save_every, lane_tile,
                key, seed, noise_table, event, adaptive, rtol, atol, max_iters,
-               lane_offset, brownian_depth, error_est):
+               lane_offset, brownian_depth, error_est, sensitivity=None,
+               adjoint_steps=None, checkpoint_every=None):
     from .sde import (SDE_STEPPERS, default_bridge_depth, sde_event_state0,
                       sde_nf_per_step, sde_save_grid, sde_solve_adaptive,
                       sde_step_and_save, sde_step_save_event)
@@ -511,12 +593,14 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
         if saveat is None:
             saveat = [tf]
         saveat = jnp.asarray(saveat, u0s.dtype)
+        bounded, _ = _resolve_adjoint(sensitivity, True, adjoint_steps, None)
         kw = dict(seed=seed, m_noise=m, saveat=saveat, rtol=rtol, atol=atol,
                   max_iters=max_iters, event=event, depth=depth,
                   order=spec.order, nf_per_step=nf_per_step,
                   error_est=error_est,
                   embedded=pair.fn if pair is not None else None,
-                  est_order=est_order, nf_per_attempt=nf_att)
+                  est_order=est_order, nf_per_attempt=nf_att,
+                  bounded_steps=bounded, checkpoint_every=checkpoint_every)
 
         if ensemble == "vmap":
             def one(u0, p, lane):
@@ -535,45 +619,58 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                                   nreject=res.nreject, nf=jnp.sum(res.nf),
                                   status=jnp.max(res.status))
 
-        if ensemble == "kernel" and backend == "pallas":
-            from repro.kernels.ensemble_kernel import (run_ensemble_kernel,
-                                                       sde_adaptive_body,
-                                                       sde_work_words)
-            body = sde_adaptive_body(
-                prob.f, prob.g, stepper, prob.noise, t0=float(t0),
-                tf=float(tf), dt0=float(dt0), rtol=float(rtol),
-                atol=float(atol), max_iters=max_iters, m_noise=m,
-                seed=_concrete_seed(seed), depth=depth, order=spec.order,
-                nf_per_step=nf_per_step, event=event, error_est=error_est,
-                embedded=pair.fn if pair is not None else None,
-                est_order=est_order, nf_per_attempt=nf_att)
-            off = jnp.asarray([lane_offset], jnp.uint32)
-            return run_ensemble_kernel(
-                body, u0s, ps, ts=saveat,
-                extras=[("broadcast", saveat), ("broadcast", off)],
-                lane_tile=lane_tile,
-                work_words=2 * sde_work_words(n, ps.shape[1], m) + 8 * m)
-
         if ensemble in ("array", "kernel"):
             # "array": the whole ensemble as ONE lanes tile (one state
             # matrix); per-lane step control is kept so trajectories agree
             # bitwise with the vmap/kernel strategies.
             tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
-            u0p, psp, T, B = _tile_lanes(u0s, ps, tile_n)
-            lanes_all = ((jnp.arange(T * B, dtype=jnp.uint32)
-                          + jnp.asarray(lane_offset, jnp.uint32))
-                         .reshape(T, B))
 
-            def tile(args):
-                u0t, pt, lt = args
-                res = sde_solve_adaptive(prob.f, prob.g, stepper, prob.noise,
-                                         u0t.T, pt.T, t0, tf, dt0, lane_idx=lt,
-                                         lanes=True, **kw)
-                if event is not None:
-                    res, _ = res
-                return res
+            def lanes_run(u, p):
+                u0p, psp, T, B = _tile_lanes(u, p, tile_n)
+                lanes_all = ((jnp.arange(T * B, dtype=jnp.uint32)
+                              + jnp.asarray(lane_offset, jnp.uint32))
+                             .reshape(T, B))
 
-            return _untile(jax.lax.map(tile, (u0p, psp, lanes_all)), N, n)
+                def tile(args):
+                    u0t, pt, lt = args
+                    res = sde_solve_adaptive(prob.f, prob.g, stepper,
+                                             prob.noise, u0t.T, pt.T, t0, tf,
+                                             dt0, lane_idx=lt, lanes=True,
+                                             **kw)
+                    if event is not None:
+                        res, _ = res
+                    return res
+
+                return _untile(jax.lax.map(tile, (u0p, psp, lanes_all)), N, n)
+
+            if ensemble == "kernel" and backend == "pallas":
+                from repro.kernels.ensemble_kernel import (kernel_adjoint,
+                                                           run_ensemble_kernel,
+                                                           sde_adaptive_body,
+                                                           sde_work_words)
+                body = sde_adaptive_body(
+                    prob.f, prob.g, stepper, prob.noise, t0=float(t0),
+                    tf=float(tf), dt0=float(dt0), rtol=float(rtol),
+                    atol=float(atol), max_iters=max_iters, m_noise=m,
+                    seed=_concrete_seed(seed), depth=depth, order=spec.order,
+                    nf_per_step=nf_per_step, event=event, error_est=error_est,
+                    embedded=pair.fn if pair is not None else None,
+                    est_order=est_order, nf_per_attempt=nf_att)
+                off = jnp.asarray([lane_offset], jnp.uint32)
+
+                def run(u, p):
+                    return run_ensemble_kernel(
+                        body, u, p, ts=saveat,
+                        extras=[("broadcast", saveat), ("broadcast", off)],
+                        lane_tile=lane_tile,
+                        work_words=2 * sde_work_words(n, ps.shape[1], m)
+                        + 8 * m)
+
+                if sensitivity == "adjoint":
+                    return kernel_adjoint(run, lanes_run)(u0s, ps)
+                return run(u0s, ps)
+
+            return lanes_run(u0s, ps)
 
         raise NotImplementedError(
             f"sde methods do not support ensemble={ensemble!r} "
@@ -587,34 +684,52 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
     if n_steps is None:
         n_steps = int(round((tf - t0) / dt0))
     assert n_steps % save_every == 0
-
-    if ensemble == "kernel" and backend == "pallas":
-        from repro.kernels.em.ops import solve_sde_ensemble_kernel
-        return solve_sde_ensemble_kernel(
-            prob, u0s, ps, t0=t0, dt=dt0, n_steps=n_steps, method=spec.name,
-            save_every=save_every, lane_tile=lane_tile,
-            seed=_concrete_seed(seed), noise_table=noise_table, event=event,
-            lane_offset=lane_offset)
+    _, remat = _resolve_adjoint(sensitivity, False, adjoint_steps, n_steps)
 
     ts = sde_save_grid(t0, dt0, n_steps, save_every, u0s.dtype)
 
-    if ensemble in ("array", "kernel"):
+    def ref_run(u, p):
         # XLA lanes path replaying the kernel's exact Threefry counter stream
         # (global lane indices) — the Pallas oracle, bitwise on every backend.
         # "array" is the same lock-step state matrix over the WHOLE ensemble
         # (for fixed dt the §5.1 array semantics and per-lane stepping agree).
         from repro.kernels.em.ref import ref_solve
-        us, uf, estate = ref_solve(prob, u0s, ps, t0=t0, dt=dt0,
+        us, uf, estate = ref_solve(prob, u, p, t0=t0, dt=dt0,
                                    n_steps=n_steps, method=spec.name,
                                    save_every=save_every, seed=seed,
                                    noise_table=noise_table, event=event,
-                                   lane_offset=lane_offset)
+                                   lane_offset=lane_offset, remat=remat,
+                                   checkpoint_every=checkpoint_every)
         return _assemble_sde_result(ts, jnp.moveaxis(us, -1, 0), uf.T, N,
                                     n_steps, nf_per_step, t0, dt0, u0s.dtype,
                                     estate)
 
+    if ensemble == "kernel" and backend == "pallas":
+        from repro.kernels.em.ops import solve_sde_ensemble_kernel
+
+        def run(u, p):
+            return solve_sde_ensemble_kernel(
+                prob, u, p, t0=t0, dt=dt0, n_steps=n_steps,
+                method=spec.name, save_every=save_every, lane_tile=lane_tile,
+                seed=_concrete_seed(seed), noise_table=noise_table,
+                event=event, lane_offset=lane_offset)
+
+        if sensitivity == "adjoint":
+            from repro.kernels.ensemble_kernel import kernel_adjoint
+            return kernel_adjoint(run, ref_run)(u0s, ps)
+        return run(u0s, ps)
+
+    if ensemble in ("array", "kernel"):
+        return ref_run(u0s, ps)
+
     if ensemble == "vmap":
         from repro.kernels.rng import counter_normals_threefry
+
+        if remat:
+            from .loops import checkpointed_fori
+            loop = partial(checkpointed_fori, checkpoint_every=checkpoint_every)
+        else:
+            loop = jax.lax.fori_loop
 
         def one(u0, p, lane, table_col):
             lane_v = jnp.full((m,), lane, jnp.uint32)
@@ -635,7 +750,7 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                         stepper, prob.f, prob.g, prob.noise, u, us, p, t0,
                         dt0, k, noise_fn(k, u.dtype), save_every)
 
-                return jax.lax.fori_loop(0, n_steps, step, (u0, us0)) + (None,)
+                return loop(0, n_steps, step, (u0, us0)) + (None,)
 
             def step(k, carry):
                 u, us, estate = carry
@@ -644,7 +759,7 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                     p, t0, dt0, k, noise_fn(k, u.dtype), save_every)
 
             estate0 = sde_event_state0((), t0, u0.dtype)
-            return jax.lax.fori_loop(0, n_steps, step, (u0, us0, estate0))
+            return loop(0, n_steps, step, (u0, us0, estate0))
 
         lanes = (jnp.arange(N, dtype=jnp.uint32)
                  + jnp.asarray(lane_offset, jnp.uint32))
@@ -691,7 +806,8 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                          max_iters=100_000, event=None, key=None, seed=None,
                          noise_table=None, linsolve="jnp", lane_offset=0,
                          brownian_depth=None, error_est=None,
-                         w_reuse=None) -> EnsembleResult:
+                         w_reuse=None, sensitivity=None, adjoint_steps=None,
+                         checkpoint_every=None) -> EnsembleResult:
     """Single-device ensemble solve — ANY registered method through ANY
     strategy and backend (the unified front door; see docs/architecture.md).
 
@@ -760,6 +876,28 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
         splits an SDE ensemble over a mesh.  Local solves leave it 0.
       brownian_depth: dyadic resolution of the adaptive-SDE Brownian tree
         (default: `repro.core.sde.default_bridge_depth`).
+      sensitivity: gradient capability (docs/architecture.md, "Gradients").
+        ``None`` keeps the while-loop hot paths untouched.  ``"forward"``
+        validates that forward-mode (jvp) sensitivities flow — they ride the
+        while-loop engines as-is (XLA strategies only; the Pallas kernels
+        have no jvp rule).  ``"adjoint"`` swaps the adaptive loops for the
+        bounded, checkpointed reverse-differentiable substitute
+        (`repro.core.loops.solver_loop`) so ``jax.grad``/``jax.vjp`` work
+        through the solve: same accept/reject sequence, states agree with
+        the while path to ulp, O(sqrt-steps) adjoint memory.  On
+        ``backend="pallas"`` the forward solve still runs the fused kernel;
+        a `jax.custom_vjp` on the kernel boundary replays the bitwise XLA
+        twin under the bounded loop for the reverse pass.  Gradients flow
+        through ``us``/``u_final`` w.r.t. (u0s, ps); solver statistics and
+        event times are non-differentiable outputs.  SDE solves get pathwise
+        gradients (the counter-RNG noise replays bitwise under vjp
+        recomputation).
+      adjoint_steps: static bound on the adaptive attempt count for
+        ``sensitivity="adjoint"`` (required for adaptive stepping: probe the
+        forward solve and use ``naccept + nreject`` plus margin; too small a
+        bound reports ``status == 1``).  Fixed-dt paths derive it.
+      checkpoint_every: steps per remat segment of the bounded adjoint loop
+        (default sqrt(adjoint_steps) — `repro.core.loops`).
 
     Returns:
       `EnsembleResult` with trajectory-major ``us (N, S, n)``, per-trajectory
@@ -783,7 +921,7 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                            max_iters=max_iters, event=event, key=key,
                            seed=seed, noise_table=noise_table,
                            error_est=error_est, w_reuse=w_reuse,
-                           linsolve=linsolve)
+                           linsolve=linsolve, sensitivity=sensitivity)
         ensemble, backend = dec.strategy, dec.backend
         if lane_tile is None:
             lane_tile = dec.lane_tile   # an explicit user tile always wins
@@ -792,6 +930,27 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
         raise ValueError(
             f"method {spec.name!r} declares events=False; pick a method whose "
             "MethodSpec supports event handling")
+
+    if sensitivity is not None:
+        # same rules as methods.valid_dispatch(sensitivity=...) — kept in
+        # sync so the autotuner prunes exactly what would raise here
+        if sensitivity not in ("forward", "adjoint"):
+            raise ValueError(f"unknown sensitivity {sensitivity!r} "
+                             "(use 'forward' or 'adjoint')")
+        if sensitivity not in spec.sensitivity:
+            raise ValueError(
+                f"method {spec.name!r} declares differentiable=False; its "
+                "engines do not satisfy the AD contract "
+                "(docs/adding-a-method.md)")
+        if ensemble == "array_eager":
+            raise ValueError(
+                "sensitivity through ensemble='array_eager' is not possible: "
+                "the eager loop is host-driven python, not traceable")
+        if sensitivity == "forward" and backend == "pallas":
+            raise ValueError(
+                "forward sensitivities ride jvp through the while-loop "
+                "engines; the Pallas kernels support sensitivity='adjoint' "
+                "(custom_vjp boundary) only — use backend='xla' for jvp")
 
     if w_reuse and spec.family != "rosenbrock":
         # only a truthy request is an error: w_reuse=False/None stays the
@@ -838,7 +997,10 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                           seed=seed, noise_table=noise_table, event=event,
                           adaptive=adaptive, rtol=rtol, atol=atol,
                           max_iters=max_iters, lane_offset=lane_offset,
-                          brownian_depth=brownian_depth, error_est=error_est)
+                          brownian_depth=brownian_depth, error_est=error_est,
+                          sensitivity=sensitivity,
+                          adjoint_steps=adjoint_steps,
+                          checkpoint_every=checkpoint_every)
 
     if error_est is not None:
         raise ValueError(
@@ -856,14 +1018,19 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                                 saveat=saveat, rtol=rtol, atol=atol,
                                 lane_tile=lane_tile, max_iters=max_iters,
                                 linsolve=linsolve, event=event,
-                                w_reuse=w_reuse)
+                                w_reuse=w_reuse, sensitivity=sensitivity,
+                                adjoint_steps=adjoint_steps,
+                                checkpoint_every=checkpoint_every)
     else:
         res = _solve_erk(spec, prob, u0s, ps, ensemble=ensemble,
                          backend=backend, t0=t0, tf=tf, dt0=dt0,
                          saveat=saveat, rtol=rtol, atol=atol,
                          adaptive=adaptive, n_steps=n_steps,
                          save_every=save_every, lane_tile=lane_tile,
-                         max_iters=max_iters, event=event)
+                         max_iters=max_iters, event=event,
+                         sensitivity=sensitivity,
+                         adjoint_steps=adjoint_steps,
+                         checkpoint_every=checkpoint_every)
     if auto_dt_nf:
         res = res._replace(nf=res.nf + auto_dt_nf)
     return res

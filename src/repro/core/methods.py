@@ -68,6 +68,14 @@ class MethodSpec:
                per-lane termination (`repro.core.events`).  True for every
                built-in family; a capability flag so the front door can reject
                unsupported combinations up front instead of deep in dispatch.
+    differentiable: the method's engines satisfy the AD contract
+               (docs/adding-a-method.md): pure-JAX step math, so forward-mode
+               sensitivities flow through the while-loop hot path and
+               reverse-mode (checkpointed discrete adjoint) through the
+               bounded loop substitute.  True for every built-in family; a
+               method whose stepper leaves JAX (callbacks, host code) must
+               declare False and the front door rejects `sensitivity=` up
+               front.  The derived `sensitivity` property lists the modes.
     stiff:     suitable for stiff problems (implicit/semi-implicit).
     noise:     supported SDEProblem.noise kinds (sde only).
     aliases:   alternative lookup names (paper-facing spellings).
@@ -87,6 +95,8 @@ class MethodSpec:
     ('doubling',)
     >>> sorted(get_method("gpuem").noise)
     ['diagonal', 'general']
+    >>> get_method("tsit5").sensitivity   # AD capability, derived
+    ('forward', 'adjoint')
     """
 
     name: str
@@ -101,8 +111,14 @@ class MethodSpec:
     events: bool = True
     stiff: bool = False
     w_reuse: bool = False
+    differentiable: bool = True
     noise: Tuple[str, ...] = ()
     aliases: Tuple[str, ...] = ()
+
+    @property
+    def sensitivity(self) -> Tuple[str, ...]:
+        """Supported sensitivity modes, derived from `differentiable`."""
+        return ("forward", "adjoint") if self.differentiable else ()
 
     def __post_init__(self):
         if self.family not in FAMILIES:
@@ -172,7 +188,8 @@ def get_method(alg: Any) -> MethodSpec:
 def valid_dispatch(spec: MethodSpec, ensemble: str, backend: str = "xla", *,
                    adaptive: Optional[bool] = None, events: bool = False,
                    w_reuse: bool = False,
-                   error_est: Optional[str] = None) -> Tuple[bool, str]:
+                   error_est: Optional[str] = None,
+                   sensitivity: Optional[str] = None) -> Tuple[bool, str]:
     """Is (strategy, backend) a combination the front door would accept?
 
     Returns ``(ok, reason)`` — the same capability rules
@@ -207,6 +224,20 @@ def valid_dispatch(spec: MethodSpec, ensemble: str, backend: str = "xla", *,
         if error_est not in spec.error_est:
             return False, (f"method {spec.name!r} supports error_est "
                            f"{spec.error_est}, not {error_est!r}")
+    if sensitivity is not None:
+        if sensitivity not in ("forward", "adjoint"):
+            return False, (f"unknown sensitivity {sensitivity!r} "
+                           "(use 'forward' or 'adjoint')")
+        if sensitivity not in spec.sensitivity:
+            return False, (f"method {spec.name!r} declares "
+                           "differentiable=False")
+        if ensemble == "array_eager":
+            return False, ("array_eager is a host-driven python loop — "
+                           "not traceable, so not differentiable")
+        if sensitivity == "forward" and backend == "pallas":
+            return False, ("forward sensitivities ride jvp through the "
+                           "while-loop engines; the Pallas kernels support "
+                           "sensitivity='adjoint' (custom_vjp boundary) only")
     return True, "ok"
 
 

@@ -41,6 +41,7 @@ from .controller import (STATUS_DTMIN_EXHAUSTED, PIController, WReusePolicy,
                          hairer_norm, pi_propose, w_dt_blame, w_mark_stale,
                          w_refresh)
 from .events import Event, handle_event, hermite_interp
+from .loops import solver_loop
 from .solvers import SolveResult
 from .tableaus import ROS23W, RosenbrockTableau
 
@@ -258,7 +259,8 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                      lanes=False, linsolve="jnp", lane_tile=None, jac=None,
                      controller: Optional[PIController] = None,
                      event: Optional[Event] = None, w_reuse=None,
-                     batch_axis: Optional[str] = None):
+                     batch_axis: Optional[str] = None, bounded_steps=None,
+                     checkpoint_every=None):
     """Adaptive s-stage Rosenbrock solve with dense output.
 
     `jac` is the analytic-Jacobian hook (component-style (u, p, t) -> (n, n)
@@ -293,6 +295,14 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
     whenever no trajectory in the batch asked for it.
     `repro.core.ensemble.solve_ensemble_local` wires this automatically for
     ``ensemble="vmap"``.
+
+    ``bounded_steps``/``checkpoint_every`` select the reverse-differentiable
+    bounded loop (`repro.core.loops.solver_loop`) with the frozen-step
+    discrete adjoint: the controller/freshness chain is severed from the
+    autodiff graph and the differentiated stage solves re-run at
+    ``where(accept, dt, 0)``, so the reverse pass only transposes accepted
+    steps.  Same step sequence as the while path whenever the bound covers
+    the true iteration count (too small => ``status == 1``).
     """
     policy = (None if (w_reuse is None or w_reuse is False)
               else (w_reuse if isinstance(w_reuse, WReusePolicy)
@@ -365,11 +375,16 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
     def cond(c):
         return (c["iters"] < max_iters) & jnp.any(~c["done"])
 
+    bounded = bounded_steps is not None
+
     def body(c):
         t, u, dt = c["t"], c["u"], c["dt"]
         active = ~c["done"]
+        # done lanes step at dt = 0 — an exact no-op of the stage solves
+        # (output-invariant either way, but nonzero dt lets finished lanes
+        # synthesize garbage that would poison the reverse pass via 0 * inf)
         dt_step = jnp.where(active, jnp.minimum(dt, tf - t),
-                            jnp.asarray(1.0, dtype))
+                            jnp.asarray(0.0, dtype))
         if policy is None:
             u_cand, err, F0, F_new, kds = rosenbrock_step(
                 f, rtab, u, p, t, dt_step, lanes=lanes, linsolve=linsolve,
@@ -397,7 +412,7 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
             dt_step = jnp.where(
                 need_fact, dt_step,
                 jnp.where(active, jnp.minimum(c["dt_fact"], tf - t),
-                          jnp.asarray(1.0, dtype)))
+                          jnp.asarray(0.0, dtype)))
 
             def refresh(state):
                 J_old, fac_old, dtf_old = state
@@ -420,6 +435,11 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                 lambda rhs: _w_resolve(fac, rhs, linsolve, lanes, lane_tile),
                 F0=F0)
         enorm = hairer_norm(err, u, u_cand, atol, rtol, axes=axes)
+        if bounded:
+            # Frozen-step discrete adjoint: the controller/freshness chain is
+            # severed from the autodiff graph — we differentiate the realized
+            # step sequence, not the step-size policy.
+            enorm = jax.lax.stop_gradient(enorm)
         finite = jnp.isfinite(u_cand)
         finite = jnp.all(finite, axis=0) if lanes else jnp.all(finite)
         accept = (enorm <= 1.0) & finite & active
@@ -431,6 +451,24 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
             # cached J already tracks the state, so a rejection is a genuine
             # dt problem and the PI shrink stands.
             dt_next = w_dt_blame(accept, need_jac, dt_step, dt_next)
+        dt_try = dt_step   # pre-adjoint-mask attempt size (dtmin-floor check)
+        if bounded:
+            # Adjoint-safe second pass (same pattern as solvers.solve_adaptive):
+            # the cascade above was a primal-only probe; re-run the stage
+            # solves at where(accept, dt, 0) — an exact no-op on rejected
+            # attempts — so the reverse pass never transposes a stage solve
+            # at an off-trajectory (possibly overflowed) rejected candidate.
+            dt_step = jnp.where(accept, dt_step, jnp.asarray(0.0, dtype))
+            if policy is None:
+                u_cand, err, F0, F_new, kds = rosenbrock_step(
+                    f, rtab, u, p, t, dt_step, lanes=lanes, linsolve=linsolve,
+                    lane_tile=lane_tile, jac=jac)
+            else:
+                u_cand, err, _, F_new, kds = _stage_loop(
+                    f, rtab, u, p, t, dt_step,
+                    lambda rhs: _w_resolve(fac, rhs, linsolve, lanes,
+                                           lane_tile),
+                    F0=F0)
         t_new = jnp.where(accept, t + dt_step, t)
 
         # ---- events: shared machinery on the method's dense output ---------
@@ -457,14 +495,17 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
             crossed = ((saveat[:, None] > t[None]) &
                        (saveat[:, None] <= t_new[None] + eps[None]) &
                        accept[None])
-            theta = jnp.clip((saveat[:, None] - t[None]) / dt_step[None],
-                             0.0, 1.0)
+            theta = jnp.clip((saveat[:, None] - t[None])
+                             / jnp.where(dt_step[None] == 0, 1.0,
+                                         dt_step[None]), 0.0, 1.0)
             th = theta[:, None, :]
             dtb = dt_step[None, None, :]
             mask = crossed[:, None, :]
         else:
             crossed = (saveat > t) & (saveat <= t_new + eps) & accept
-            theta = jnp.clip((saveat - t) / dt_step, 0.0, 1.0)
+            theta = jnp.clip((saveat - t)
+                             / jnp.where(dt_step == 0, 1.0, dt_step),
+                             0.0, 1.0)
             sh = (S,) + (1,) * u.ndim
             th = theta.reshape(sh)
             dtb = dt_step
@@ -481,7 +522,7 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
         # lazy path a rejection taken on a REUSED J is exempt: the next
         # attempt refreshes J (w_mark_stale / w_dt_blame), so its retry is
         # NOT identical and may well accept at the same dt.
-        hopeless = active & ~accept & ~(dt_step > ctrl.dtmin)
+        hopeless = active & ~accept & ~(dt_try > ctrl.dtmin)
         if policy is not None:
             hopeless = hopeless & need_jac
         statusv = jnp.where(hopeless,
@@ -509,7 +550,8 @@ def solve_rosenbrock(f, rtab: RosenbrockTableau, u0, p, t0, tf, dt0, *,
                 nfact=c["nfact"] + need_fact.astype(jnp.int32))
         return out
 
-    out = jax.lax.while_loop(cond, body, carry0)
+    out = solver_loop(cond, body, carry0, bounded_steps=bounded_steps,
+                      checkpoint_every=checkpoint_every)
     nsteps = out["naccept"] + out["nreject"]
     res = SolveResult(
         ts=saveat, us=out["us"], t_final=out["t"], u_final=out["u"],

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from .controller import (STATUS_DTMIN_EXHAUSTED, PIController, hairer_norm,
                          pi_propose)
 from .events import Event, handle_event, linear_interp
+from .loops import solver_loop
 from .problem import EnsembleProblem, SDEProblem
 from .solvers import SolveResult
 
@@ -308,11 +309,17 @@ def sde_step_save_event(stepper, f, g, noise: str, ev: Event, u, us, estate,
 
 def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
                     method: str = "em", save_every: int = 1,
-                    noise_table: Optional[Array] = None) -> SolveResult:
+                    noise_table: Optional[Array] = None,
+                    remat: bool = False) -> SolveResult:
     """Fixed-dt SDE integration as scan(fori(step)); kernel-shaped state flow.
 
     u0: (n,) or (n, B) lanes. Noise per step: (m,) / (m, B).
     noise_table: optional (n_steps, m[, B]) pre-drawn N(0,1) (pathwise tests).
+    remat=True checkpoints each save segment for reverse-mode AD: bitwise
+    the same primal, the backward pass replays the counter-RNG increments
+    from the segment-boundary carry instead of storing every step
+    (O(S + save_every) adjoint memory; pathwise replay is exact because the
+    noise is a pure function of the step index).
     """
     assert n_steps % save_every == 0
     S = n_steps // save_every
@@ -342,6 +349,8 @@ def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
         u, t = jax.lax.fori_loop(0, save_every, body, (u, t))
         return (u, t), u
 
+    if remat:
+        inner = jax.checkpoint(inner)
     (u_f, t_f), us = jax.lax.scan(inner, (u0, jnp.asarray(t0, dtype)),
                                   jnp.arange(S))
     ts = jnp.asarray(t0, dtype) + dt * save_every * jnp.arange(1, S + 1,
@@ -382,7 +391,9 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
                        embedded: Optional[Callable] = None,
                        est_order: Optional[int] = None,
                        nf_per_attempt: Optional[int] = None,
-                       controller: Optional["PIController"] = None):
+                       controller: Optional["PIController"] = None,
+                       bounded_steps: Optional[int] = None,
+                       checkpoint_every: Optional[int] = None):
     """Adaptive SDE integration with per-element dt control and events.
 
     The missing half of the paper's "fully featured" claim for the SDE family:
@@ -429,6 +440,16 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
     trajectory's GLOBAL index — the RNG stream key); lanes=True integrates
     u0 (n, B) with per-lane control and lane_idx (B,).  Returns SolveResult,
     or (SolveResult, {"event_t", "event_count"}) when an event is supplied.
+
+    ``bounded_steps``/``checkpoint_every`` select the reverse-differentiable
+    bounded loop (`repro.core.loops.solver_loop`), enabling pathwise
+    gradients through the accepted step sequence.  The step-size chain here
+    is ALREADY gradient-frozen by construction — dt is consumed through a
+    uint32 grid-cell count, and the Brownian increments are pure functions
+    of integer indices, so vjp recomputation replays the virtual tree
+    bitwise; the only extra severing needed is ``stop_gradient`` on the
+    error norm (zero-cotangent sqrt hazard).  Too-small bound surfaces as
+    ``status == 1``.
     """
     dtype = u0.dtype
     if error_est not in ("embedded", "doubling"):
@@ -549,6 +570,12 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
             # local error for the solution they actually advance
             err = (u_2 - u_c) * (1.0 / (2.0 ** order - 1.0))
         enorm = hairer_norm(err, u, u_2, atol, rtol, axes=axes)
+        if bounded_steps is not None:
+            # pathwise discrete adjoint: the controller chain is primal-only
+            # (dt is consumed via an integer cell count anyway); this severs
+            # the hairer_norm sqrt from the transpose so a zero local error
+            # cannot inject NaN through sqrt'(0)
+            enorm = jax.lax.stop_gradient(enorm)
         finite = jnp.isfinite(u_2)
         finite = jnp.all(finite, axis=0) if lanes else jnp.all(finite)
         accept = ((enorm <= 1.0) | at_floor) & finite & active
@@ -646,7 +673,8 @@ def sde_solve_adaptive(f, g, stepper, noise: str, u0, p, t0, tf, dt0, *,
             status=statusv, iters=c["iters"] + 1,
             event_t=ev_t, event_count=ev_n)
 
-    out = jax.lax.while_loop(cond, body, carry0)
+    out = solver_loop(cond, body, carry0, bounded_steps=bounded_steps,
+                      checkpoint_every=checkpoint_every)
     res = SolveResult(
         ts=saveat, us=out["us"], t_final=out["t_out"], u_final=out["u"],
         naccept=out["naccept"], nreject=out["nreject"],

@@ -1,84 +1,120 @@
 """Sensitivity analysis / automatic differentiation through the solvers (§6.6).
 
-The paper demonstrates forward AND reverse (adjoint) differentiation through the
-GPU kernels. In JAX:
+The paper demonstrates forward AND reverse (adjoint) differentiation through
+the GPU kernels.  Here both are capabilities of the unified front door
+(`repro.core.ensemble.solve_ensemble_local` / `repro.core.api.solve_ensemble`,
+``sensitivity=``) — this module is the convenience layer on top:
 
-  forward_sensitivity  — jvp/jacfwd through any solver (works through
-                         lax.while_loop, so ADAPTIVE solves differentiate too).
-  grad (discrete adjoint) — reverse AD through the fixed-step scan solver with
-                         per-chunk rematerialization (jax.checkpoint): memory
-                         O(S + save_every), exact gradient of the discretization.
-  adjoint_continuous   — continuous adjoint: solve λ' = -(∂f/∂u)ᵀ λ backwards
-                         alongside a backward replay of u, accumulating
-                         ∂L/∂p = ∫ λᵀ ∂f/∂p dt. Memory O(1) in steps; gradient
-                         accurate to O(dt^order).
+  forward_sensitivity      — du(t)/dθ for every trajectory and save point:
+                             one jvp pass per parameter column through the
+                             while-loop engines (forward mode crosses
+                             lax.while_loop, so ADAPTIVE solves differentiate
+                             without any bound).
+  ensemble_value_and_grad  — loss(EnsembleResult) and its gradient w.r.t.
+                             (u0s, ps) via reverse AD through the bounded,
+                             checkpointed discrete adjoint
+                             (``sensitivity="adjoint"`` — see
+                             `repro.core.loops`): memory O(sqrt-steps),
+                             exact gradient of the realized discretization.
+  suggest_adjoint_steps    — probe the forward solve for the attempt-count
+                             bound the adaptive adjoint needs.
+  adjoint_continuous       — continuous adjoint λ' = -(∂f/∂u)ᵀλ on a backward
+                             replay: O(1)-in-steps memory, gradient accurate
+                             to O(dt^order).  Kept as the independent
+                             mathematical oracle the discrete adjoint is
+                             tested against.
 
-All three are exposed per-trajectory and compose with vmap/shard_map for
-GPU-parallel parameter estimation (examples/parameter_estimation.py reproduces
-the paper's minibatched-AD tutorial).
+Everything composes with vmap/shard_map for GPU-parallel parameter estimation
+(examples/parameter_estimation.py reproduces the paper's calibration demo).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable
+import math
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .solvers import rk_step, solve_fixed
+from .ensemble import solve_ensemble_local
+from .problem import EnsembleProblem
+from .solvers import solve_fixed
 from .tableaus import Tableau
 
 Array = Any
 
 
-def forward_sensitivity(f, tab: Tableau, u0, p, t0, dt, n_steps,
-                        save_every=1):
-    """du(t)/dp for all save points via jacfwd (forward-mode, one pass per
-    parameter column — the GPU-parallel direction the paper uses)."""
-
-    def final_us(p_):
-        return solve_fixed(f, tab, u0, p_, t0, dt, n_steps, save_every).us
-
-    return jax.jacfwd(final_us)(p)
+def _resolve(eprob: EnsembleProblem, u0s, ps) -> EnsembleProblem:
+    return EnsembleProblem(eprob.prob, u0s.shape[0], u0s=u0s, ps=ps)
 
 
-def solve_fixed_remat(f, tab: Tableau, u0, p, t0, dt, n_steps, save_every=1):
-    """Fixed-step solve whose scan body is rematerialized: reverse AD stores
-    only the S chunk boundaries, recomputing the inner save_every steps in the
-    backward pass (the standard checkpointed discrete adjoint)."""
-    assert n_steps % save_every == 0
-    S = n_steps // save_every
-    dt = jnp.asarray(dt, u0.dtype)
+def forward_sensitivity(eprob: EnsembleProblem, *, wrt: str = "ps",
+                        **solve_kw) -> Array:
+    """Forward-mode sensitivities du(t)/dθ through the front door.
 
-    @jax.checkpoint
-    def chunk(u, t):
-        def one(i, uk):
-            u, t = uk
-            k1 = f(u, p, t)
-            u2, _, _ = rk_step(f, tab, u, p, t, dt, k1)
-            return (u2, t + dt)
+    One `jax.jvp` pass per column of ``wrt`` ("ps" or "u0s") — the
+    GPU-parallel direction the paper uses: each pass is a full ensemble solve
+    carrying one tangent, and forward mode crosses the adaptive
+    ``lax.while_loop`` hot path untouched (no step bound needed).
 
-        return jax.lax.fori_loop(0, save_every, one, (u, t))
+    Returns ``(N, S, n, k)``: d ``us[i, s, :]`` / d ``θ[i, j]`` for each
+    trajectory i — per-trajectory sensitivities (trajectory i's output w.r.t.
+    trajectory i's own parameters).
 
-    def body(carry, _):
-        u, t = carry
-        u, t = chunk(u, t)
-        return (u, t), u
+    ``solve_kw`` are `solve_ensemble_local` kwargs (alg/ensemble/backend/
+    saveat/rtol/...).  ``sensitivity="forward"`` is implied (and validated).
+    """
+    if wrt not in ("ps", "u0s"):
+        raise ValueError(f"wrt must be 'ps' or 'u0s', got {wrt!r}")
+    u0s, ps = eprob.materialize()
+    kw = dict(solve_kw, sensitivity="forward")
 
-    (u_f, _), us = jax.lax.scan(body, (u0, jnp.asarray(t0, u0.dtype)), None,
-                                length=S)
-    return us, u_f
+    def us_of(u, p):
+        return solve_ensemble_local(_resolve(eprob, u, p), **kw).us
+
+    target = ps if wrt == "ps" else u0s
+    cols = []
+    for j in range(target.shape[1]):
+        tangent = jnp.zeros_like(target).at[:, j].set(1.0)
+        if wrt == "ps":
+            _, dus = jax.jvp(lambda p_: us_of(u0s, p_), (ps,), (tangent,))
+        else:
+            _, dus = jax.jvp(lambda u_: us_of(u_, ps), (u0s,), (tangent,))
+        cols.append(dus)
+    return jnp.stack(cols, axis=-1)
 
 
-def grad_discrete_adjoint(loss_of_us: Callable, f, tab, u0, p, t0, dt,
-                          n_steps, save_every=1):
-    """∂/∂(u0, p) of loss(us) via reverse AD over the rematerialized solve."""
+def suggest_adjoint_steps(eprob: EnsembleProblem, *, margin: float = 0.25,
+                          **solve_kw) -> int:
+    """Attempt-count bound for ``sensitivity="adjoint"`` on adaptive solves.
 
-    def L(u0_, p_):
-        us, _ = solve_fixed_remat(f, tab, u0_, p_, t0, dt, n_steps, save_every)
-        return loss_of_us(us)
+    Runs the forward solve once (while-loop hot path, no AD) and returns the
+    worst-case ``naccept + nreject`` over the ensemble plus ``margin``
+    headroom.  The bound is safe by construction: if a later solve under the
+    returned bound still runs out (different parameters, tighter tolerance),
+    it reports ``status == 1`` — never a silently truncated gradient.
+    """
+    res = solve_ensemble_local(eprob, **solve_kw)
+    worst = int(jnp.max(res.naccept + res.nreject))
+    return worst + max(4, int(math.ceil(worst * float(margin))))
 
-    return jax.value_and_grad(L, argnums=(0, 1))(u0, p)
+
+def ensemble_value_and_grad(loss_fn: Callable, eprob: EnsembleProblem,
+                            **solve_kw) -> Tuple[Array, Tuple[Array, Array]]:
+    """``(loss, (dL/du0s, dL/dps))`` through the checkpointed discrete adjoint.
+
+    ``loss_fn`` maps the `EnsembleResult` to a scalar (use ``res.us`` /
+    ``res.u_final``; solver statistics and event times are non-differentiable
+    outputs).  ``solve_kw`` are `solve_ensemble_local` kwargs — pass
+    ``adjoint_steps=`` for adaptive solves (see `suggest_adjoint_steps`);
+    ``sensitivity="adjoint"`` is implied.
+    """
+    u0s, ps = eprob.materialize()
+    kw = dict(solve_kw, sensitivity="adjoint")
+
+    def L(u, p):
+        return loss_fn(solve_ensemble_local(_resolve(eprob, u, p), **kw))
+
+    return jax.value_and_grad(L, argnums=(0, 1))(u0s, ps)
 
 
 def adjoint_continuous(loss_of_uf: Callable, f, tab: Tableau, u0, p, t0, dt,
@@ -90,7 +126,10 @@ def adjoint_continuous(loss_of_uf: Callable, f, tab: Tableau, u0, p, t0, dt,
         u'  = f(u)          (replayed backwards)
         λ' = -(∂f/∂u)ᵀ λ
         μ' = -(∂f/∂p)ᵀ λ
-    Returns (loss, dL/du0, dL/dp).
+    Returns (loss, dL/du0, dL/dp).  The gradient differs from the discrete
+    adjoint by the discretization error O(dt^order) — which is exactly why it
+    stays: an INDEPENDENT oracle for gradcheck (`tests/test_grad_parity.py`),
+    agreeing with reverse AD as dt → 0 without sharing a code path with it.
     """
     res = solve_fixed(f, tab, u0, p, t0, dt, n_steps, save_every=n_steps)
     u_f = res.u_final
@@ -111,7 +150,6 @@ def adjoint_continuous(loss_of_uf: Callable, f, tab: Tableau, u0, p, t0, dt,
 
     n = u0.shape[0]
     aug0 = jnp.concatenate([u_f, dL_duf, jnp.zeros_like(p)])
-    tf = t0 + dt * n_steps
     back = solve_fixed(aug_rhs, tab, aug0, p, 0.0, dt, n_steps,
                        save_every=n_steps)
     out = back.u_final

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from .controller import (STATUS_DTMIN_EXHAUSTED, PIController, hairer_norm,
                          pi_propose)
 from .events import Event, handle_event
+from .loops import checkpointed_fori, solver_loop
 from .tableaus import Tableau
 
 Array = Any
@@ -151,11 +152,18 @@ def interp_step(f, tab: Tableau, u_old, u_new, ks, p, t, dt, theta,
 # ----------------------------------------------------------------------------
 
 def solve_fixed(f, tab: Tableau, u0, p, t0, dt, n_steps: int,
-                save_every: int = 1):
+                save_every: int = 1, remat: bool = False,
+                checkpoint_every: Optional[int] = None):
     """Fixed-dt integration as scan(fori(rk_step)). Differentiable (fwd+rev).
 
     Saves every `save_every`-th step => S = n_steps // save_every snapshots.
-    Works for any state shape (scalar/array/lanes).
+    Works for any state shape (scalar/array/lanes).  ``remat=True`` wraps each
+    save chunk in `jax.checkpoint` and segments the chunk's step loop with
+    `repro.core.loops.checkpointed_fori` (``checkpoint_every`` steps per
+    segment, default sqrt(save_every)) — the primal is bitwise-unchanged, but
+    the reverse pass stores one (u, t) carry per snapshot plus one per
+    segment and recomputes stages inside segments, bounding adjoint memory at
+    O(S + save_every/ck + ck) states instead of O(n_steps).
     """
     assert n_steps % save_every == 0, "n_steps must be divisible by save_every"
     S = n_steps // save_every
@@ -171,9 +179,15 @@ def solve_fixed(f, tab: Tableau, u0, p, t0, dt, n_steps: int,
             u_new, _, _ = rk_step(f, tab, u, p, t, dt, k1)
             return (u_new, t + dt)
 
-        u, t = jax.lax.fori_loop(0, save_every, one, (u, t))
+        if remat:
+            u, t = checkpointed_fori(0, save_every, one, (u, t),
+                                     checkpoint_every=checkpoint_every)
+        else:
+            u, t = jax.lax.fori_loop(0, save_every, one, (u, t))
         return (u, t), u
 
+    if remat:
+        inner = jax.checkpoint(inner)
     (u_f, t_f), us = jax.lax.scan(inner, (u0, t0), None, length=S)
     ts = t0 + dt * save_every * jnp.arange(1, S + 1, dtype=u0.dtype)
     nf = jnp.asarray(n_steps * (tab.stages - (1 if tab.fsal else 0)) + (1 if tab.fsal else 0))
@@ -195,6 +209,15 @@ class AdaptiveOptions:
     adaptive: bool = True            # False => accept every step at fixed dt
     save: str = "grid"               # "grid" | "final"
     norm_axes: Optional[Any] = "auto"  # "auto": lanes->0, else None
+    # Reverse-mode AD (repro.core.loops / repro.core.sensitivity): replace the
+    # while_loop with bounded_steps checkpointed scan segments and freeze the
+    # step-size controller out of the autodiff graph (discrete adjoint of the
+    # realized step sequence).  Whenever the bound covers the true iteration
+    # count (too small => status == 1) the accept/step sequence is identical
+    # to the while path; values agree to ulp (the adjoint-safe probe changes
+    # XLA fusion, so exact bits may differ — see docs/architecture.md).
+    bounded_steps: Optional[int] = None
+    checkpoint_every: Optional[int] = None
 
 
 def _grid_save(f, tab, us, saveat, u_old, u_new, ks, p, t_old, dt_step,
@@ -278,12 +301,18 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
     def cond(c):
         return (c["iters"] < opts.max_iters) & jnp.any(~c["done"])
 
+    bounded = opts.bounded_steps is not None
+
     def body(c):
         t, u, dt, k1 = c["t"], c["u"], c["dt"], c["k1"]
         active = ~c["done"]
         remaining = tf - t
         dt_step = jnp.minimum(dt, remaining)
-        dt_step = jnp.where(active, dt_step, jnp.asarray(1.0, dtype))
+        # done lanes step at dt = 0: the stage cascade is an exact no-op on
+        # them (any value is output-invariant — every write is accept-masked —
+        # but a nonzero dt lets finished stiff lanes synthesize inf/NaN
+        # candidates, which poisons the reverse pass via 0 * inf cotangents)
+        dt_step = jnp.where(active, dt_step, jnp.asarray(0.0, dtype))
 
         u_cand, err, ks = rk_step(f, tab, u, p, t, dt_step, k1)
 
@@ -295,6 +324,12 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
             else:
                 finite = jnp.all(finite)
             accept = (enorm <= 1.0) & finite
+            if bounded:
+                # Frozen-step discrete adjoint: the controller chain (enorm ->
+                # dt) is severed from the autodiff graph — we differentiate
+                # the realized step sequence, not the step-size policy.  This
+                # also keeps hairer_norm's sqrt out of the transposed graph.
+                enorm = jax.lax.stop_gradient(enorm)
             dt_next, enorm_prev = pi_propose(ctrl, dt, enorm, c["enorm_prev"],
                                              accept)
         else:
@@ -303,6 +338,17 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
             dt_next, enorm_prev = dt, c["enorm_prev"]
 
         accept = accept & active
+        dt_try = dt_step   # pre-adjoint-mask attempt size (dtmin-floor check)
+        if bounded and opts.adaptive:
+            # Adjoint-safe second pass: the first cascade above was a primal-
+            # only probe (its only consumers are the frozen accept/controller
+            # values); re-run it at where(accept, dt, 0) so the DIFFERENTIATED
+            # stage cascade is an exact no-op on rejected attempts.  Accepted
+            # lanes recompute bit-identical values; the reverse pass never
+            # transposes an f evaluation at an off-trajectory (possibly
+            # overflowed) rejected candidate.
+            dt_step = jnp.where(accept, dt_step, jnp.asarray(0.0, dtype))
+            u_cand, err, ks = rk_step(f, tab, u, p, t, dt_step, k1)
         t_new = jnp.where(accept, t + dt_step, t)
 
         # ---- events: detect/locate/apply via the shared machinery ----------
@@ -344,7 +390,7 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
         # dt pinned at the controller floor and still rejecting: retrying the
         # identical step is a deterministic live-lock — terminate the lane
         # with a distinct status instead of spinning to max_iters
-        hopeless = active & ~accept & ~(dt_step > ctrl.dtmin) if opts.adaptive \
+        hopeless = active & ~accept & ~(dt_try > ctrl.dtmin) if opts.adaptive \
             else jnp.zeros(cshape, bool)
         statusv = jnp.where(hopeless,
                             jnp.asarray(STATUS_DTMIN_EXHAUSTED, jnp.int32),
@@ -362,7 +408,8 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
             event_t=ev_t, event_count=ev_n,
         )
 
-    out = jax.lax.while_loop(cond, body, carry0)
+    out = solver_loop(cond, body, carry0, bounded_steps=opts.bounded_steps,
+                      checkpoint_every=opts.checkpoint_every)
     status = jnp.where(out["status"] > 0, out["status"],
                        jnp.where(out["done"], 0, 1)).astype(jnp.int32)
     res = SolveResult(ts=saveat, us=out["us"], t_final=out["t"],
@@ -379,8 +426,11 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
 
 def solve_one(f, tab: Tableau, u0, p, t0, tf, dt0, saveat=None,
               rtol=1e-6, atol=1e-6, adaptive=True, max_iters=100_000,
-              event=None, save="grid", controller=None):
+              event=None, save="grid", controller=None, bounded_steps=None,
+              checkpoint_every=None):
     opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
-                           adaptive=adaptive, save=save, controller=controller)
+                           adaptive=adaptive, save=save, controller=controller,
+                           bounded_steps=bounded_steps,
+                           checkpoint_every=checkpoint_every)
     return solve_adaptive(f, tab, u0, p, t0, tf, dt0, saveat=saveat, opts=opts,
                           event=event, lanes=False)

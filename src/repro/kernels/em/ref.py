@@ -6,17 +6,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.loops import checkpointed_fori
 from repro.core.sde import (SDE_STEPPERS, sde_event_state0, sde_step_and_save,
                             sde_step_save_event)
 from repro.kernels.rng import counter_normals_threefry
 
 
 def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
-              seed=0, noise_table=None, event=None, lane_offset=0):
+              seed=0, noise_table=None, event=None, lane_offset=0,
+              remat=False, checkpoint_every=None):
     """u0s (N, n), ps (N, m). Replays the kernel's exact noise stream
     (threefry counters over GLOBAL lane indices: local index + lane_offset)
     or a supplied table.  With an event, runs the shared event-aware loop
     body (per-lane termination masks).
+    remat=True swaps the step loop for `repro.core.loops.checkpointed_fori`:
+    the identical index sequence (bitwise-equal primal), but reverse-mode AD
+    stores one carry per `checkpoint_every` steps and replays the counter-RNG
+    noise inside segments — the memory-bounded pathwise adjoint.
     Returns (us (S, n, N), uf (n, N), estate-or-None)."""
     stepper = SDE_STEPPERS[method]
     u0 = u0s.T
@@ -28,6 +34,13 @@ def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
     gl = jnp.arange(N, dtype=jnp.uint32) + jnp.asarray(lane_offset, jnp.uint32)
     lane = jnp.broadcast_to(gl[None], (m, N))
     rows = jnp.broadcast_to(jnp.arange(m, dtype=jnp.uint32)[:, None], (m, N))
+
+    if remat:
+        def loop(lo, hi, body, init):
+            return checkpointed_fori(lo, hi, body, init,
+                                     checkpoint_every=checkpoint_every)
+    else:
+        loop = jax.lax.fori_loop
 
     def noise(k):
         if noise_table is not None:
@@ -42,7 +55,7 @@ def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
             return sde_step_and_save(stepper, prob.f, prob.g, prob.noise, u,
                                      us, p, t0, dt, k, noise(k), save_every)
 
-        u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
+        u_f, us = loop(0, n_steps, step, (u0, us0))
         return us, u_f, None
 
     def step(k, carry):
@@ -52,5 +65,5 @@ def ref_solve(prob, u0s, ps, *, t0, dt, n_steps, method="em", save_every=1,
                                    save_every)
 
     estate0 = sde_event_state0((N,), t0, dtype)
-    u_f, us, estate = jax.lax.fori_loop(0, n_steps, step, (u0, us0, estate0))
+    u_f, us, estate = loop(0, n_steps, step, (u0, us0, estate0))
     return us, u_f, estate

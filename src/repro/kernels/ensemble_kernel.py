@@ -266,6 +266,49 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
         njac=jnp.sum(stats[4, :N]), nfact=jnp.sum(stats[5, :N]))
 
 
+def kernel_adjoint(primal_fn: Callable, replay_fn: Callable) -> Callable:
+    """Reverse-mode AD across the Pallas kernel boundary.
+
+    ``pallas_call`` has no transpose rule, so the fused kernels cannot be
+    vjp'd directly.  This factory keeps the FORWARD solve on the kernel
+    (``primal_fn``) and installs a `jax.custom_vjp` whose backward pass
+    re-runs the kernel's XLA twin (``replay_fn`` — the bounded, checkpointed
+    `repro.core.loops.solver_loop` path of the same family) under `jax.vjp`.
+    The forward pass stores only the (u0s, ps) residuals; the replay's
+    checkpointed segments bound the reverse-pass memory (periodic carry
+    checkpoints — u, t, dt, RNG counters, J/LU freshness — with recompute
+    inside segments), so peak memory stays O(sqrt-steps), never O(steps).
+    SDE replays are exact: the counter-RNG noise is a pure function of
+    (seed; step/grid index, row, global lane), so the recomputed path is the
+    path the kernel integrated, bitwise.
+
+    Both callables map ``(u0s, ps) -> EnsembleResult``.  Gradients flow
+    through the continuous state outputs ``us`` and ``u_final``; solver
+    statistics, snapshot times and event locations are non-differentiable
+    outputs (their cotangents are dropped).
+    """
+
+    @jax.custom_vjp
+    def run(u0s, ps):
+        return primal_fn(u0s, ps)
+
+    def fwd(u0s, ps):
+        return primal_fn(u0s, ps), (u0s, ps)
+
+    def bwd(residuals, ct):
+        u0s, ps = residuals
+
+        def states(u, p):
+            res = replay_fn(u, p)
+            return res.us, res.u_final
+
+        _, vjp = jax.vjp(states, u0s, ps)
+        return vjp((ct.us, ct.u_final))
+
+    run.defvjp(fwd, bwd)
+    return run
+
+
 # ---------------------------------------------------------------------------
 # double-buffered HBM<->VMEM save staging (large save grids / large n)
 # ---------------------------------------------------------------------------

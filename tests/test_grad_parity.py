@@ -1,0 +1,368 @@
+"""Gradcheck suite: gradients as a dispatch capability (§6.6).
+
+``sensitivity="adjoint"`` swaps the while-loop engines for the bounded,
+checkpointed reverse-differentiable substitute; ``sensitivity="forward"``
+rides jvp through the untouched hot paths.  Contracts proven here:
+
+  * per family, `jax.grad` through `solve_ensemble_local` matches central
+    finite differences (f64, rtol <= 1e-4);
+  * vmap-XLA, kernel-XLA and kernel-Pallas gradients agree to ~1e-10 (the
+    Pallas path forward-runs the fused kernel and reverse-replays its
+    bitwise XLA twin via `jax.custom_vjp`);
+  * SDE gradients are PATHWISE: the counter-RNG/Brownian-tree noise replays
+    bitwise under vjp recomputation, so the GBM gradient hits the per-path
+    closed form dS_T/ds0 = S_T/s0 at machine precision, sharded == local;
+  * a too-small ``adjoint_steps`` bound surfaces as ``status == 1``, never a
+    silently truncated gradient;
+  * checkpointing demonstrably bounds the reverse-pass memory (XLA
+    compiled-memory proxy).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnsembleProblem
+from repro.core.ensemble import solve_ensemble_local
+from repro.core.sensitivity import (adjoint_continuous, ensemble_value_and_grad,
+                                    suggest_adjoint_steps)
+from repro.core.tableaus import get_tableau
+from repro.configs.de_problems import (gbm_problem, lorenz_problem,
+                                       vdp_problem)
+
+STRATEGIES = [("vmap", "xla"), ("kernel", "xla"), ("kernel", "pallas")]
+
+
+def lorenz_ens(N=4):
+    prob = lorenz_problem(jnp.float64)
+    rng = np.random.default_rng(0)
+    u0s = jnp.asarray(np.array([-8.0, 7.0, 27.0])
+                      + 0.1 * rng.standard_normal((N, 3)))
+    ps = jnp.asarray(np.array([10.0, 28.0, 8.0 / 3.0])
+                     + 0.05 * rng.standard_normal((N, 3)))
+    return prob, u0s, ps
+
+
+LORENZ_KW = dict(alg="tsit5", t0=0.0, tf=1.5, dt0=1e-2, rtol=1e-8, atol=1e-8,
+                 saveat=jnp.linspace(0.0, 1.5, 4))
+
+
+def loss_of(res):
+    return jnp.sum(res.us ** 2) + jnp.sum(res.u_final ** 2)
+
+
+# ---------------------------------------------------------------------------
+# per-family jax.grad vs central finite differences (f64)
+# ---------------------------------------------------------------------------
+
+def test_erk_adaptive_grad_matches_fd():
+    prob, u0s, ps = lorenz_ens()
+    ep = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=ps)
+    bound = suggest_adjoint_steps(ep, ensemble="vmap", **LORENZ_KW)
+
+    def L(p):
+        sub = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=p)
+        return loss_of(solve_ensemble_local(sub, ensemble="vmap",
+                                            sensitivity="adjoint",
+                                            adjoint_steps=bound, **LORENZ_KW))
+
+    g = jax.grad(L)(ps)
+    eps = 1e-6
+    for i, j in [(0, 0), (1, 1), (2, 2), (3, 0)]:
+        d = jnp.zeros_like(ps).at[i, j].set(eps)
+        fd = (L(ps + d) - L(ps - d)) / (2 * eps)
+        np.testing.assert_allclose(float(g[i, j]), float(fd), rtol=1e-4)
+
+
+def test_rosenbrock_grad_matches_fd():
+    prob = vdp_problem()
+    N = 3
+    rng = np.random.default_rng(1)
+    u0s = jnp.asarray(np.array([2.0, 0.0])
+                      + 0.05 * rng.standard_normal((N, 2)))
+    ps = jnp.asarray(np.array([5.0]) + 0.2 * rng.standard_normal((N, 1)))
+    kw = dict(alg="rosenbrock23", t0=0.0, tf=3.0, dt0=1e-3, rtol=1e-7,
+              atol=1e-9, saveat=jnp.linspace(0.0, 3.0, 4))
+    ep = EnsembleProblem(prob, N, u0s=u0s, ps=ps)
+    bound = suggest_adjoint_steps(ep, ensemble="kernel", backend="xla", **kw)
+
+    def L(p):
+        sub = EnsembleProblem(prob, N, u0s=u0s, ps=p)
+        return loss_of(solve_ensemble_local(sub, ensemble="kernel",
+                                            backend="xla",
+                                            sensitivity="adjoint",
+                                            adjoint_steps=bound, **kw))
+
+    g = jax.grad(L)(ps)
+    eps = 1e-6
+    for i in range(N):
+        d = jnp.zeros_like(ps).at[i, 0].set(eps)
+        fd = (L(ps + d) - L(ps - d)) / (2 * eps)
+        np.testing.assert_allclose(float(g[i, 0]), float(fd), rtol=1e-4)
+
+
+def test_discrete_adjoint_matches_continuous_adjoint_oracle():
+    """Front-door reverse AD vs the independent continuous-adjoint ODE."""
+    prob = lorenz_problem(jnp.float64)
+    tab = get_tableau("tsit5")
+    dt, n = 0.001, 400
+    loss_c, gu_c, gp_c = adjoint_continuous(
+        lambda uf: jnp.sum(uf ** 2), prob.f, tab, prob.u0, prob.p, 0.0, dt, n)
+
+    ep = EnsembleProblem(prob, 1, u0s=prob.u0[None], ps=prob.p[None])
+    loss_d, (gu_d, gp_d) = ensemble_value_and_grad(
+        lambda r: jnp.sum(r.u_final ** 2), ep, alg="tsit5", ensemble="vmap",
+        t0=0.0, tf=dt * n, dt0=dt, rtol=1e-9, atol=1e-9,
+        saveat=jnp.asarray([dt * n]), adjoint_steps=2 * n)
+    np.testing.assert_allclose(float(loss_c), float(loss_d), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gp_c), np.asarray(gp_d)[0],
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(gu_c), np.asarray(gu_d)[0],
+                               rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# cross-strategy / cross-backend gradient parity
+# ---------------------------------------------------------------------------
+
+def _strategy_grads(prob, u0s, ps, kw, bound):
+    out = {}
+    for strat, back in STRATEGIES:
+        def L(u, p, strat=strat, back=back):
+            sub = EnsembleProblem(prob, u0s.shape[0], u0s=u, ps=p)
+            return loss_of(solve_ensemble_local(
+                sub, ensemble=strat, backend=back, sensitivity="adjoint",
+                adjoint_steps=bound, **kw))
+        out[(strat, back)] = jax.value_and_grad(L, argnums=(0, 1))(u0s, ps)
+    return out
+
+
+def test_erk_grad_parity_vmap_kernel_pallas():
+    prob, u0s, ps = lorenz_ens()
+    ep = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=ps)
+    bound = suggest_adjoint_steps(ep, ensemble="vmap", **LORENZ_KW)
+    grads = _strategy_grads(prob, u0s, ps, LORENZ_KW, bound)
+    v_ref, g_ref = grads[("vmap", "xla")]
+    for key, (v, g) in grads.items():
+        np.testing.assert_allclose(float(v), float(v_ref), rtol=1e-12)
+        for a, b in zip(g_ref, g):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-10, atol=1e-12)
+
+
+def test_rosenbrock_grad_parity_vmap_kernel_pallas():
+    prob = vdp_problem()
+    N = 3
+    u0s = jnp.tile(jnp.asarray([2.0, 0.0]), (N, 1))
+    ps = jnp.linspace(4.0, 6.0, N)[:, None]
+    kw = dict(alg="rosenbrock23", t0=0.0, tf=2.0, dt0=1e-3, rtol=1e-7,
+              atol=1e-9, saveat=jnp.linspace(0.0, 2.0, 3))
+    ep = EnsembleProblem(prob, N, u0s=u0s, ps=ps)
+    bound = suggest_adjoint_steps(ep, ensemble="kernel", backend="xla", **kw)
+    grads = _strategy_grads(prob, u0s, ps, kw, bound)
+    v_ref, g_ref = grads[("kernel", "xla")]
+    for key, (v, g) in grads.items():
+        np.testing.assert_allclose(float(v), float(v_ref), rtol=1e-12)
+        for a, b in zip(g_ref, g):
+            np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                       rtol=1e-10, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# SDE pathwise gradients: bitwise noise replay, closed forms, sharding
+# ---------------------------------------------------------------------------
+
+GBM_KW = dict(alg="em", t0=0.0, tf=1.0, n_steps=128, save_every=32, seed=7)
+
+
+def _gbm_ens(N, r=0.05, v=0.2):
+    prob = gbm_problem(dtype=jnp.float64)
+    s0 = jnp.full((N, 3), 1.0, jnp.float64)
+    ps = jnp.tile(jnp.asarray([[r, v]], jnp.float64), (N, 1))
+    return prob, s0, ps
+
+
+def test_sde_pathwise_grad_closed_form_and_parity():
+    """GBM is linear: dS_T/ds0 = S_T/s0 exactly, per path, per scheme."""
+    prob, s0, ps = _gbm_ens(64)
+    grads = {}
+    for strat, back in STRATEGIES:
+        def L(u, strat=strat, back=back):
+            sub = EnsembleProblem(prob, u.shape[0], u0s=u, ps=ps)
+            res = solve_ensemble_local(sub, ensemble=strat, backend=back,
+                                       sensitivity="adjoint", **GBM_KW)
+            return jnp.sum(res.u_final)
+        grads[(strat, back)] = jax.grad(L)(s0)
+
+    res = solve_ensemble_local(EnsembleProblem(prob, s0.shape[0], u0s=s0,
+                                               ps=ps),
+                               ensemble="vmap", **GBM_KW)
+    exact = res.u_final / s0            # pathwise delta of the EM scheme
+    for key, g in grads.items():
+        np.testing.assert_allclose(np.asarray(g), np.asarray(exact),
+                                   rtol=1e-12)
+
+
+def test_sde_gbm_expected_delta_matches_black_scholes():
+    """E[dS_T/ds0] = e^{rT} up to EM bias + MC error (the §6.8 greek)."""
+    r = 0.05
+    prob, s0, ps = _gbm_ens(512, r=r)
+    ep = EnsembleProblem(prob, 512, u0s=s0, ps=ps)
+
+    _, (g_u0, _) = ensemble_value_and_grad(
+        lambda res: jnp.mean(res.u_final), ep, ensemble="kernel",
+        backend="xla", **GBM_KW)
+    delta = float(jnp.sum(g_u0))        # mean over (512 lanes x 3 components)
+    np.testing.assert_allclose(delta, float(jnp.exp(r * 1.0)), rtol=0.05)
+
+
+def test_sde_sharded_grad_equals_local_via_lane_offset():
+    """Counter-RNG streams are global: grad(half at lane_offset) == the
+    corresponding rows of grad(full) bitwise — shard-invariant gradients."""
+    prob, s0, ps = _gbm_ens(8)
+
+    def grad_slab(u0_slab, ps_slab, offset):
+        def L(u):
+            sub = EnsembleProblem(prob, u.shape[0], u0s=u, ps=ps_slab)
+            res = solve_ensemble_local(sub, ensemble="kernel", backend="xla",
+                                       sensitivity="adjoint",
+                                       lane_offset=offset, **GBM_KW)
+            return jnp.sum(res.u_final)
+        return jax.grad(L)(u0_slab)
+
+    g_full = grad_slab(s0, ps, 0)
+    g_lo = grad_slab(s0[:4], ps[:4], 0)
+    g_hi = grad_slab(s0[4:], ps[4:], 4)
+    assert jnp.array_equal(jnp.concatenate([g_lo, g_hi]), g_full)
+
+
+def test_sde_adaptive_pathwise_grad():
+    """The virtual-Brownian-tree adaptive path is differentiable too: the
+    uint32 cell-count dt quantization freezes the step sequence, noise
+    replays bitwise, and GBM linearity again gives dS_T/ds0 = S_T/s0."""
+    prob, s0, ps = _gbm_ens(16)
+    kw = dict(alg="em", t0=0.0, tf=1.0, dt0=1e-2, adaptive=True, rtol=1e-3,
+              atol=1e-4, seed=11, saveat=jnp.linspace(0.0, 1.0, 3))
+    ep = EnsembleProblem(prob, 16, u0s=s0, ps=ps)
+    bound = suggest_adjoint_steps(ep, ensemble="vmap", **kw)
+
+    def L(u):
+        sub = EnsembleProblem(prob, u.shape[0], u0s=u, ps=ps)
+        res = solve_ensemble_local(sub, ensemble="vmap",
+                                   sensitivity="adjoint",
+                                   adjoint_steps=bound, **kw)
+        return jnp.sum(res.u_final), res
+
+    g, res = jax.grad(L, has_aux=True)(s0)
+    assert int(jnp.max(res.status)) == 0
+    np.testing.assert_allclose(np.asarray(g), np.asarray(res.u_final / s0),
+                               rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# failure modes and memory bounds
+# ---------------------------------------------------------------------------
+
+def test_too_small_adjoint_steps_reports_status():
+    prob, u0s, ps = lorenz_ens()
+    ep = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=ps)
+    res = solve_ensemble_local(ep, ensemble="vmap", sensitivity="adjoint",
+                               adjoint_steps=8, **LORENZ_KW)
+    assert int(jnp.max(res.status)) == 1
+
+
+def test_checkpointing_bounds_reverse_memory():
+    """XLA compiled-memory proxy: the sqrt-checkpointed adjoint's temp
+    allocation must be well below the single-segment (store-everything
+    inside one remat block) variant on a long fixed-dt solve."""
+    prob, u0s, ps = lorenz_ens()
+    n_steps = 4096
+
+    def make_grad(every):
+        def L(p):
+            sub = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=p)
+            res = solve_ensemble_local(
+                sub, alg="tsit5", ensemble="kernel", backend="xla",
+                t0=0.0, tf=1.0, adaptive=False, n_steps=n_steps,
+                save_every=n_steps, sensitivity="adjoint",
+                checkpoint_every=every)
+            return jnp.sum(res.u_final ** 2)
+        return jax.jit(jax.grad(L))
+
+    def temp_bytes(fn):
+        mem = fn.lower(ps).compile().memory_analysis()
+        if mem is None or not hasattr(mem, "temp_size_in_bytes"):
+            pytest.skip("memory_analysis unavailable on this backend")
+        return mem.temp_size_in_bytes
+
+    sqrt_ck = temp_bytes(make_grad(None))              # default: sqrt(bound)
+    unrolled = temp_bytes(make_grad(n_steps + 1))      # one giant segment
+    assert sqrt_ck * 4 < unrolled, (sqrt_ck, unrolled)
+
+
+def test_grad_capability_validation():
+    prob, u0s, ps = lorenz_ens()
+    ep = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=ps)
+    with pytest.raises(ValueError, match="array_eager"):
+        solve_ensemble_local(ep, ensemble="array_eager",
+                             sensitivity="adjoint", **LORENZ_KW)
+    with pytest.raises(ValueError, match="[Pp]allas"):
+        solve_ensemble_local(ep, ensemble="kernel", backend="pallas",
+                             sensitivity="forward", **LORENZ_KW)
+    with pytest.raises(ValueError, match="adjoint_steps"):
+        solve_ensemble_local(ep, ensemble="vmap", sensitivity="adjoint",
+                             **LORENZ_KW)
+    with pytest.raises(ValueError, match="sensitivity"):
+        solve_ensemble_local(ep, ensemble="vmap", sensitivity="backprop",
+                             **LORENZ_KW)
+
+
+def test_mesh_adjoint_grad_matches_local():
+    # the mesh front door must stage the checkpointed adjoint through jit
+    # (shard_map cannot eagerly evaluate jax.checkpoint's closed_call) and
+    # its gradients must match the local dispatcher exactly
+    from repro.core.api import solve_ensemble
+    from repro.launch.mesh import make_local_mesh
+
+    prob, u0s, ps = lorenz_ens()
+    ep = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=ps)
+    kw = dict(LORENZ_KW, ensemble="kernel", backend="xla")
+    bound = suggest_adjoint_steps(ep, **kw)
+    mesh = make_local_mesh()
+
+    # eager sharded solve with sensitivity set (the closed_call trap)
+    res = solve_ensemble(ep, mesh=mesh, sensitivity="adjoint",
+                         adjoint_steps=bound, **kw)
+    assert int(jnp.max(res.status)) == 0
+
+    def L_mesh(p):
+        sub = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=p)
+        return loss_of(solve_ensemble(sub, mesh=mesh, sensitivity="adjoint",
+                                      adjoint_steps=bound, **kw))
+
+    def L_local(p):
+        sub = EnsembleProblem(prob, u0s.shape[0], u0s=u0s, ps=p)
+        return loss_of(solve_ensemble_local(sub, sensitivity="adjoint",
+                                            adjoint_steps=bound, **kw))
+
+    g_mesh = jax.grad(L_mesh)(ps)
+    g_local = jax.grad(L_local)(ps)
+    np.testing.assert_allclose(np.asarray(g_mesh), np.asarray(g_local),
+                               rtol=1e-12, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# example rides the front door (satellite: examples/parameter_estimation.py)
+# ---------------------------------------------------------------------------
+
+def test_parameter_estimation_example_smoke():
+    import importlib.util
+    import pathlib
+    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
+            / "parameter_estimation.py")
+    spec = importlib.util.spec_from_file_location("parameter_estimation", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    data = mod.make_data()
+    rhos, _ = mod.fit(jnp.asarray([14.0, 22.0]), data, iters=25, lr=0.15)
+    assert np.allclose(np.asarray(rhos), mod.TRUE_RHO, atol=0.5)

@@ -1,25 +1,50 @@
-"""AD through solvers (§6.6): forward sens vs FD, discrete vs continuous adjoint."""
+"""AD through solvers (§6.6) — the sensitivity convenience layer, through the
+unified front door: forward sensitivities vs analytic/FD oracles, forward
+mode through the adaptive while_loop, and the vmapped-gradients pattern."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import get_tableau, solve_fixed, solve_one
-from repro.core.sensitivity import (adjoint_continuous, forward_sensitivity,
-                                    grad_discrete_adjoint, solve_fixed_remat)
+from repro.core import EnsembleProblem, get_tableau, solve_fixed, solve_one
+from repro.core.sensitivity import (adjoint_continuous, ensemble_value_and_grad,
+                                    forward_sensitivity, suggest_adjoint_steps)
 from repro.configs.de_problems import linear_decay_problem, lorenz_problem
 
 TAB = get_tableau("tsit5")
 
 
+def decay_ensemble(lams, lam0=0.7):
+    prob = linear_decay_problem(lam=lam0)
+    lams = jnp.asarray(lams, jnp.float64)
+    N = lams.shape[0]
+    return prob, EnsembleProblem(prob, N, u0s=jnp.tile(prob.u0[None], (N, 1)),
+                                 ps=lams[:, None])
+
+
 def test_forward_sensitivity_vs_analytic():
-    """d/dλ e^{-λ t} = -t e^{-λ t} for the decay problem."""
-    prob = linear_decay_problem(lam=0.7)
-    sens = forward_sensitivity(prob.f, TAB, prob.u0, prob.p, 0.0, 0.01, 200,
-                               save_every=200)
-    # sens: (S=1, n=1, m=1)
+    """d/dλ e^{-λ t} = -t e^{-λ t}, per trajectory, through the front door."""
+    lams = [0.4, 0.7, 1.3]
+    prob, ep = decay_ensemble(lams)
     t = 2.0
-    want = -t * np.exp(-0.7 * t)
-    np.testing.assert_allclose(float(sens[0, 0, 0]), want, rtol=1e-6)
+    sens = forward_sensitivity(ep, wrt="ps", ensemble="vmap", alg="tsit5",
+                               t0=0.0, tf=t, dt0=0.01, rtol=1e-10, atol=1e-10,
+                               saveat=jnp.asarray([t]))
+    assert sens.shape == (3, 1, 1, 1)     # (N, S, n, k)
+    for i, lam in enumerate(lams):
+        want = -t * np.exp(-lam * t)
+        np.testing.assert_allclose(float(sens[i, 0, 0, 0]), want, rtol=1e-6)
+
+
+def test_forward_sensitivity_wrt_u0():
+    """d/du0 [u0 e^{-λ t}] = e^{-λ t}."""
+    prob, ep = decay_ensemble([0.7, 1.1])
+    t = 1.5
+    sens = forward_sensitivity(ep, wrt="u0s", ensemble="vmap", alg="tsit5",
+                               t0=0.0, tf=t, dt0=0.01, rtol=1e-10, atol=1e-10,
+                               saveat=jnp.asarray([t]))
+    for i, lam in enumerate([0.7, 1.1]):
+        np.testing.assert_allclose(float(sens[i, 0, 0, 0]),
+                                   np.exp(-lam * t), rtol=1e-6)
 
 
 def test_jvp_through_adaptive_solver():
@@ -35,49 +60,43 @@ def test_jvp_through_adaptive_solver():
     np.testing.assert_allclose(float(g[0]), -2.0 * np.exp(-1.4), rtol=1e-5)
 
 
-def test_discrete_adjoint_vs_finite_difference_lorenz():
-    prob = lorenz_problem(jnp.float64)
-    dt, n = 0.002, 250
-
-    def loss_of_us(us):
-        return jnp.sum(us[-1] ** 2)
-
-    val, (g_u0, g_p) = grad_discrete_adjoint(loss_of_us, prob.f, TAB,
-                                             prob.u0, prob.p, 0.0, dt, n,
-                                             save_every=50)
-    # FD check on rho (param index 1)
-    eps = 1e-6
-
-    def L(p):
-        us, _ = solve_fixed_remat(prob.f, TAB, prob.u0, p, 0.0, dt, n,
-                                  save_every=50)
-        return float(loss_of_us(us))
-
-    p = np.asarray(prob.p)
-    fd = (L(jnp.asarray(p + np.array([0, eps, 0]))) -
-          L(jnp.asarray(p - np.array([0, eps, 0])))) / (2 * eps)
-    np.testing.assert_allclose(float(g_p[1]), fd, rtol=1e-4)
+def test_adjoint_grad_vs_analytic_decay():
+    """Reverse mode through the front door against the closed form:
+    L = u(T)^2 has dL/dλ = -2 T u(T)^2 and dL/du0 = 2 u(T)^2 (u0 = 1)."""
+    lams = [0.4, 0.9]
+    prob, ep = decay_ensemble(lams)
+    T = 2.0
+    kw = dict(alg="tsit5", ensemble="vmap", t0=0.0, tf=T, dt0=0.01,
+              rtol=1e-10, atol=1e-10, saveat=jnp.asarray([T]))
+    bound = suggest_adjoint_steps(ep, **kw)
+    _, (g_u0, g_p) = ensemble_value_and_grad(
+        lambda r: jnp.sum(r.u_final ** 2), ep, adjoint_steps=bound, **kw)
+    for i, lam in enumerate(lams):
+        uT = np.exp(-lam * T)
+        np.testing.assert_allclose(float(g_p[i, 0]), -2 * T * uT ** 2,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(g_u0[i, 0]), 2 * uT ** 2, rtol=1e-6)
 
 
-def test_continuous_adjoint_matches_discrete():
+def test_continuous_adjoint_oracle_lorenz():
+    """The O(1)-memory continuous adjoint agrees with front-door reverse AD
+    to the discretization error (the independent-oracle contract)."""
     prob = lorenz_problem(jnp.float64)
     dt, n = 0.001, 400
 
-    def loss_uf(uf):
-        return jnp.sum(uf ** 2)
+    loss_c, gu_c, gp_c = adjoint_continuous(
+        lambda uf: jnp.sum(uf ** 2), prob.f, TAB, prob.u0, prob.p, 0.0, dt, n)
 
-    loss_c, gu_c, gp_c = adjoint_continuous(loss_uf, prob.f, TAB, prob.u0,
-                                            prob.p, 0.0, dt, n)
-
-    def loss_of_us(us):
-        return jnp.sum(us[-1] ** 2)
-
-    loss_d, (gu_d, gp_d) = grad_discrete_adjoint(loss_of_us, prob.f, TAB,
-                                                 prob.u0, prob.p, 0.0, dt, n,
-                                                 save_every=n)
-    np.testing.assert_allclose(float(loss_c), float(loss_d), rtol=1e-10)
-    np.testing.assert_allclose(np.asarray(gp_c), np.asarray(gp_d), rtol=2e-3)
-    np.testing.assert_allclose(np.asarray(gu_c), np.asarray(gu_d), rtol=2e-3)
+    ep = EnsembleProblem(prob, 1, u0s=prob.u0[None], ps=prob.p[None])
+    loss_d, (gu_d, gp_d) = ensemble_value_and_grad(
+        lambda r: jnp.sum(r.u_final ** 2), ep, alg="tsit5", ensemble="kernel",
+        backend="xla", t0=0.0, tf=dt * n, dt0=dt, adaptive=False, n_steps=n,
+        save_every=n)
+    np.testing.assert_allclose(float(loss_c), float(loss_d), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gp_c), np.asarray(gp_d)[0],
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(gu_c), np.asarray(gu_d)[0],
+                               rtol=2e-3)
 
 
 def test_vmapped_gradients_gpu_parallel_param_estimation_shape():
