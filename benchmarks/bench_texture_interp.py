@@ -1,58 +1,130 @@
 """§6.7: dataset interpolation inside the RHS (texture-memory analogue).
 
-Wind-drag bouncing-ball RHS with a 1-D lookup table: gather path vs one-hot
-MXU path vs a no-table control, integrated by the fused kernel ensemble.
-The paper reports 2x vs CPU-interpolation; our structural analogue reports
-the overhead of in-RHS interpolation per mode.
+A forced oscillator whose drive term comes from a 1-D lookup table — the
+paper's data-driven-DE workload.  Two implementation extremes:
+
+  * ``callback``: the table lookup leaves the accelerator — a
+    ``jax.pure_callback`` into ``np.interp`` on the host, inside a vmap'd
+    fixed-dt solve.  This is the "interpolate in Python" strategy the paper's
+    texture-memory section argues against: every RHS evaluation round-trips
+    through the host.
+  * fused kernel (``gather`` / ``onehot`` / ``cubic`` modes): the table rides
+    the `prob.data` slot into the fused ensemble kernel — broadcast into
+    VMEM once per lane tile (see docs/kernels.md), interpolated in-register.
+
+Writes results/BENCH_texture_interp.json.  All numbers are single-core CPU
+(interpret-mode Pallas): they measure the *structural* cost of leaving the
+device per step vs keeping the dataset resident, not TPU texture hardware.
 """
 from __future__ import annotations
 
+import json
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import EnsembleProblem, ODEProblem
+from repro.core import EnsembleProblem, ODEProblem, UniformTable1D
 from repro.core.ensemble import solve_ensemble_local
-from repro.core.interp import UniformTable1D, interp1d
+from repro.core.interp import interp1d
 
 from .common import HEADER, bench, row
 
 N = 1024
+N_STEPS = 200
+DT = 1.0 / N_STEPS
+K = 64
 
 
-def make_prob(mode):
-    wind = UniformTable1D(0.1 * jnp.sin(0.25 * jnp.arange(64,
-                                                          dtype=jnp.float32)),
-                          0.0, 0.25)
+def _table(dtype):
+    xs = np.linspace(0.0, 1.0, K)
+    F = np.sin(6.0 * xs) + 0.5 * np.cos(17.0 * xs)
+    return UniformTable1D(jnp.asarray(F, dtype), 0.0, float(xs[1] - xs[0]))
+
+
+def _ensemble(prob):
+    u0s = jnp.stack([jnp.asarray([1.0, 0.0], prob.u0.dtype)] * N)
+    u0s = u0s * jnp.linspace(0.5, 1.5, N, dtype=prob.u0.dtype)[:, None]
+    ps = jnp.stack([jnp.asarray([4.0, 0.2], prob.p.dtype)] * N)
+    return EnsembleProblem(prob, N, u0s=u0s, ps=ps)
+
+
+def make_table_prob(mode, dtype=jnp.float32):
+    tab = _table(dtype)
+
+    def rhs(u, p, t, data):
+        force = interp1d(data["force"], t, mode)
+        return jnp.stack([u[1], -p[0] * u[0] - p[1] * u[1] + force])
+
+    return ODEProblem(rhs, jnp.asarray([1.0, 0.0], dtype),
+                      jnp.asarray([4.0, 0.2], dtype), (0.0, 1.0),
+                      data={"force": tab}, name=f"forced_osc_{mode}")
+
+
+def make_callback_prob(dtype=jnp.float32):
+    """Host-interpolation baseline: np.interp behind jax.pure_callback."""
+    xs = np.linspace(0.0, 1.0, K)
+    F = (np.sin(6.0 * xs) + 0.5 * np.cos(17.0 * xs)).astype(np.float32)
+
+    def host_interp(t):
+        return np.interp(np.asarray(t), xs, F).astype(np.asarray(t).dtype)
 
     def rhs(u, p, t):
-        if mode == "none":
-            drag = 0.0
-        else:
-            drag = interp1d(wind, u[0], mode)
-        return jnp.stack([u[1], -9.8 - drag * u[1]])
+        force = jax.pure_callback(
+            host_interp, jax.ShapeDtypeStruct(jnp.shape(t), dtype), t,
+            vmap_method="expand_dims")
+        return jnp.stack([u[1], -p[0] * u[0] - p[1] * u[1] + force])
 
-    return ODEProblem(rhs, jnp.asarray([10.0, 0.0], jnp.float32),
-                      jnp.zeros(1, jnp.float32), (0.0, 1.0),
-                      name=f"drag_{mode}")
+    return ODEProblem(rhs, jnp.asarray([1.0, 0.0], dtype),
+                      jnp.asarray([4.0, 0.2], dtype), (0.0, 1.0),
+                      name="forced_osc_callback")
 
 
 def main() -> None:
     print(HEADER)
-    base = None
-    for mode in ("none", "gather", "onehot"):
-        prob = make_prob(mode)
-        ep = EnsembleProblem(prob, N)
+    records = {}
 
-        def run():
-            return solve_ensemble_local(ep, ensemble="kernel",
-                                        adaptive=False, dt0=1e-3, t0=0.0,
-                                        tf=1.0, save_every=1000).u_final
+    # host-callback baseline: vmap strategy (a pure_callback cannot live
+    # inside the fused Pallas kernel at all — that asymmetry is the point)
+    ep = _ensemble(make_callback_prob())
 
-        t = bench(jax.jit(run))
-        if mode == "none":
-            base = t
-        print(row(f"texture/{mode}", t, f"{t / base:.2f}x_vs_no_table"))
+    def run_cb():
+        return solve_ensemble_local(ep, alg="tsit5", ensemble="vmap",
+                                    adaptive=False, dt0=DT, n_steps=N_STEPS,
+                                    save_every=N_STEPS).u_final
+
+    t_cb = bench(jax.jit(run_cb))
+    print(row("texture/callback_vmap", t_cb, "host_np.interp_baseline"))
+    records["callback_vmap"] = {"seconds": t_cb}
+
+    # fused kernel, table resident in VMEM, one row per interpolation mode
+    for mode in ("gather", "onehot", "cubic"):
+        epk = _ensemble(make_table_prob(mode))
+
+        def run_kernel(ep_=epk):
+            return solve_ensemble_local(ep_, alg="tsit5", ensemble="kernel",
+                                        backend="pallas", adaptive=False,
+                                        dt0=DT, n_steps=N_STEPS,
+                                        save_every=N_STEPS).u_final
+
+        t = bench(jax.jit(run_kernel))
+        print(row(f"texture/kernel_{mode}", t,
+                  f"{t_cb / t:.1f}x_vs_callback"))
+        records[f"kernel_{mode}"] = {"seconds": t,
+                                     "speedup_vs_callback": t_cb / t}
+
+    os.makedirs("results", exist_ok=True)
+    out = os.path.join("results", "BENCH_texture_interp.json")
+    with open(out, "w") as fp:
+        json.dump({"N": N, "n_steps": N_STEPS, "table_K": K,
+                   "problem": "forced_oscillator", "records": records},
+                  fp, indent=2, sort_keys=True)
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
     main()

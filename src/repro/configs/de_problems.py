@@ -95,6 +95,31 @@ def sho_problem(omega=2.0, dtype=jnp.float64) -> ODEProblem:
 
 
 # ---------------------------------------------------------------------------
+# Forced oscillator — the data-driven demo problem (paper §6.7): the drive
+# term is a UniformTable1D riding `prob.data` into every dispatch path
+# ---------------------------------------------------------------------------
+
+def forced_oscillator_rhs(u, p, t, data):
+    # u'' + p[1] u' + p[0] u = F(t), F interpolated from the dataset
+    from repro.core.interp import interp1d
+    return jnp.stack([u[1], -p[0] * u[0] - p[1] * u[1]
+                      + interp1d(data["force"], t)])
+
+
+def forced_oscillator_problem(K=65, t_max=10.0, tspan=(0.0, 5.0),
+                              dtype=jnp.float64) -> ODEProblem:
+    """Damped oscillator driven by a K-knot force table over [0, t_max]."""
+    import numpy as _np
+    from repro.core.interp import UniformTable1D
+    xs = _np.linspace(0.0, t_max, K)
+    F = _np.sin(1.3 * xs) + 0.5 * _np.cos(0.4 * xs)
+    tab = UniformTable1D(jnp.asarray(F, dtype), 0.0, float(xs[1] - xs[0]))
+    return ODEProblem(forced_oscillator_rhs, jnp.asarray([1.0, 0.0], dtype),
+                      jnp.asarray([2.0, 0.1], dtype), tspan,
+                      data={"force": tab}, name="forced_oscillator")
+
+
+# ---------------------------------------------------------------------------
 # Van der Pol — the standard stiff benchmark (paper §7's missing frontier,
 # served here by the rosenbrock23 registry method + batched-LU W solves)
 # ---------------------------------------------------------------------------

@@ -3,7 +3,9 @@
 # kernel), adaptive embedded RK with dense output, family-agnostic events,
 # fixed-dt AND adaptive SDE steppers, sensitivity analysis and a distributed
 # front door (api.solve_ensemble).  See docs/architecture.md for the map.
-from .problem import EnsembleProblem, ODEProblem, SDEProblem
+from .problem import (EnsembleProblem, ODEProblem, SDEProblem,
+                      bind_problem_data)
+from .interp import UniformTable1D, UniformTable2D, interp1d, interp2d
 from .tableaus import (ROSENBROCK_TABLEAUS, TABLEAUS, RosenbrockTableau,
                        get_rosenbrock_tableau, get_tableau)
 from .controller import (STATUS_DTMIN_EXHAUSTED, STATUS_MAX_ITERS,
@@ -18,7 +20,8 @@ from .solvers import (AdaptiveOptions, SolveResult, interp_step,
 from .ensemble import EnsembleResult, solve_ensemble_local
 
 __all__ = [
-    "EnsembleProblem", "ODEProblem", "SDEProblem",
+    "EnsembleProblem", "ODEProblem", "SDEProblem", "bind_problem_data",
+    "UniformTable1D", "UniformTable2D", "interp1d", "interp2d",
     "TABLEAUS", "get_tableau", "ROSENBROCK_TABLEAUS", "RosenbrockTableau",
     "get_rosenbrock_tableau", "PIController", "WReusePolicy", "hairer_norm",
     "initial_dt", "STATUS_SUCCESS", "STATUS_MAX_ITERS",

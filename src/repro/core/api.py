@@ -9,6 +9,7 @@ the 2^30-trajectory configuration of §6.3 is exercised by the dry-run.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Optional, Sequence
 
@@ -18,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .ensemble import EnsembleResult, solve_ensemble_local
+from .interp import data_flatten, data_unflatten
 from .problem import EnsembleProblem
 
 Array = Any
@@ -48,6 +50,14 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     solves produce bitwise-identical trajectories, and distinct shards never
     replay each other's noise.
 
+    Dataset tables (``prob.data``) are BROADCAST, never sharded: every shard
+    receives the full table set as replicated shard_map inputs (in_specs=P())
+    and solves its trajectory chunk against the identical dataset, so
+    sharded == local holds for data-driven problems too — and gradients
+    w.r.t. table values flow through the shard_map (each shard contributes
+    its trajectories' table cotangents; a mean-reducing loss psums them in
+    its own backward pass).
+
     Gradients compose with sharding: pass ``sensitivity="adjoint"`` (plus
     ``adjoint_steps`` for adaptive stepping — see `solve_ensemble_local`) and
     `jax.grad` of a scalar loss over the sharded result differentiates
@@ -75,6 +85,21 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     spec = P(axes)
     base_offset = kw.pop("lane_offset", 0)
 
+    # Dataset tables are BROADCAST, not sharded: every shard solves against
+    # the identical dataset, so the leaves enter shard_map as explicit
+    # replicated inputs (in_specs=P()) and the problem is rebuilt per shard.
+    # Explicit — rather than closure-captured — so sharded == local holds by
+    # construction AND `jax.grad` w.r.t. table values differentiates through
+    # the shard_map (closure-captured tracers would be rejected).
+    data = getattr(prob, "data", None)
+    dleaves, dtreedef = data_flatten(data)
+
+    def _shard_prob(dlv):
+        if data is None:
+            return prob
+        return dataclasses.replace(
+            prob, data=data_unflatten(dtreedef, dlv))
+
     if kw.get("ensemble") == "auto":
         # resolve BEFORE shard_map: timing cannot run under tracing, and all
         # shards must dispatch one program.  Tune once per host on a
@@ -101,20 +126,21 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     # (trace only, no compile) so the out_specs match whatever dispatch
     # (explicit or auto-resolved above) actually returns
     shard_shapes = jax.eval_shape(
-        lambda u, p: solve_ensemble_local(
-            EnsembleProblem(prob, n_local, u0s=u, ps=p),
+        lambda u, p, *dlv: solve_ensemble_local(
+            EnsembleProblem(_shard_prob(dlv), n_local, u0s=u, ps=p),
             lane_offset=base_offset, **kw),
         jax.ShapeDtypeStruct((n_local,) + u0s.shape[1:], u0s.dtype),
-        jax.ShapeDtypeStruct((n_local,) + ps.shape[1:], ps.dtype))
+        jax.ShapeDtypeStruct((n_local,) + ps.shape[1:], ps.dtype),
+        *dleaves)
     per_traj_counts = shard_shapes.naccept.ndim > 0
 
-    def local(u0c, pc):
+    def local(u0c, pc, *dlv):
         # linear shard index in the same axis order the PartitionSpec uses,
         # -> this shard's first global trajectory index
         idx = jnp.asarray(0, jnp.uint32)
         for a in axes:
             idx = idx * mesh.shape[a] + jax.lax.axis_index(a).astype(jnp.uint32)
-        sub = EnsembleProblem(prob, u0c.shape[0], u0s=u0c, ps=pc)
+        sub = EnsembleProblem(_shard_prob(dlv), u0c.shape[0], u0s=u0c, ps=pc)
         res = solve_ensemble_local(sub, lane_offset=base_offset + idx * n_local,
                                    **kw)
         # per-shard scalars -> global via psum (lightweight stats only)
@@ -132,7 +158,7 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
 
     count_spec = spec if per_traj_counts else P()
     fn = shard_map(local, mesh=mesh,
-                   in_specs=(spec, spec),
+                   in_specs=(spec, spec) + (P(),) * len(dleaves),
                    out_specs=EnsembleResult(
                        ts=P(), us=spec, u_final=spec, t_final=spec,
                        naccept=count_spec, nreject=count_spec, nf=P(),
@@ -145,7 +171,7 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
         # supported"), so stage the whole sharded solve through jit; under an
         # outer jit/grad this inlines and changes nothing
         fn = jax.jit(fn)
-    return fn(u0s, ps)
+    return fn(u0s, ps, *dleaves)
 
 
 def ensemble_moments(us: Array, mesh: Optional[Mesh] = None,

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .interp import data_signature, data_words
 from .methods import MethodSpec, valid_dispatch
 from .problem import EnsembleProblem
 
@@ -126,9 +127,14 @@ def resolved_flags(spec: MethodSpec, prob, *, adaptive, w_reuse, error_est,
 def config_key(spec: MethodSpec, *, n: int, N: int, dtype, adaptive: bool,
                events: bool, w_reuse: bool, error_est: str,
                device: Optional[str] = None,
-               sensitivity: Optional[str] = None) -> str:
+               sensitivity: Optional[str] = None,
+               data_sig: str = "none") -> str:
     """Deterministic cache key — a readable ``k=v|...`` string (field order
-    fixed), hashable across processes and debuggable in the JSON by eye."""
+    fixed), hashable across processes and debuggable in the JSON by eye.
+    ``data_sig`` is the dataset-shape signature
+    (`repro.core.interp.data_signature`): VMEM-resident tables shift the
+    kernel crossovers (and the auto lane_tile), so a data-driven solve must
+    not reuse the data-free profile of the same method."""
     return "|".join((
         f"method={spec.name}",
         f"n={int(n)}",
@@ -139,6 +145,7 @@ def config_key(spec: MethodSpec, *, n: int, N: int, dtype, adaptive: bool,
         f"w_reuse={bool(w_reuse)}",
         f"error_est={error_est}",
         f"sens={sensitivity or 'none'}",
+        f"data={data_sig}",
         f"device={device_kind() if device is None else device}"))
 
 
@@ -238,19 +245,25 @@ def _family_work_words(spec: MethodSpec, prob, n: int, m: int,
 
 def candidates(spec: MethodSpec, *, n: int, m: int, n_save: int, N: int,
                dtype, adaptive: bool, events: bool, w_reuse: bool,
-               error_est: str, allow_pallas: bool = True, sensitivity=None):
+               error_est: str, allow_pallas: bool = True, sensitivity=None,
+               data: bool = False, data_words: int = 0):
     """Capability-pruned candidate list: every entry would be accepted by
     `solve_ensemble_local` (never time a combination that raises).
     ``array_eager`` is never a candidate — it exists to *reproduce* dispatch
     overhead, not to win.  ``sensitivity`` prunes combinations the AD rules
-    reject (e.g. forward-mode on the Pallas backend)."""
+    reject (e.g. forward-mode on the Pallas backend).  ``data``/``data_words``
+    describe the problem's dataset tables: the flag prunes methods that
+    declare ``data_rhs=False``, and the word count is charged to the §5.2
+    VMEM budget as a fixed (per-tile, not per-lane) footprint so the
+    lane_tile ladder stays honest for data-driven kernels."""
     ee = error_est if error_est != "none" else None
     out = []
 
     def ok(strategy, backend):
         valid, _ = valid_dispatch(spec, strategy, backend, adaptive=adaptive,
                                   events=events, w_reuse=w_reuse,
-                                  error_est=ee, sensitivity=sensitivity)
+                                  error_est=ee, sensitivity=sensitivity,
+                                  data=data)
         return valid
 
     for strategy in ("vmap", "array"):
@@ -261,7 +274,8 @@ def candidates(spec: MethodSpec, *, n: int, m: int, n_save: int, N: int,
         ladder = lane_tile_ladder(
             n, m, max(1, n_save), itemsize=jnp.dtype(dtype).itemsize,
             work_words=_family_work_words(spec, None, n, m, w_reuse)
-            if spec.family != "sde" else None, N=N)
+            if spec.family != "sde" else None, N=N,
+            fixed_words=data_words)
         for backend in ("xla", "pallas"):
             if backend == "pallas" and (not allow_pallas
                                         or not ok("kernel", "pallas")):
@@ -315,9 +329,11 @@ def resolve_auto(eprob: EnsembleProblem, spec: MethodSpec, *, t0=None,
     ad, ev, wr, ee = resolved_flags(spec, prob, adaptive=adaptive,
                                     w_reuse=w_reuse, error_est=error_est,
                                     event=event)
+    pdata = getattr(prob, "data", None)
     ckey = config_key(spec, n=n, N=N, dtype=u0s.dtype, adaptive=ad,
                       events=ev, w_reuse=wr, error_est=ee,
-                      sensitivity=sensitivity)
+                      sensitivity=sensitivity,
+                      data_sig=data_signature(pdata))
     path = cache_path or default_cache_path()
 
     # 1. cache (works under jit too: the key is static shape/dtype data).
@@ -337,7 +353,7 @@ def resolve_auto(eprob: EnsembleProblem, spec: MethodSpec, *, t0=None,
 
     # 2. timing unavailable -> static default
     if (_disabled() or dt0 is None
-            or _is_traced(u0s, ps, t0, tf, dt0, saveat, seed, key)):
+            or _is_traced(u0s, ps, t0, tf, dt0, saveat, seed, key, pdata)):
         return Decision(*DEFAULT_STRATEGY, source="default", key=ckey)
 
     # 3. candidate set (capability-pruned)
@@ -353,7 +369,8 @@ def resolve_auto(eprob: EnsembleProblem, spec: MethodSpec, *, t0=None,
     cands = candidates(spec, n=n, m=m, n_save=S_real, N=min(N, TUNE_MAX_N),
                        dtype=u0s.dtype, adaptive=ad, events=ev, w_reuse=wr,
                        error_est=ee, allow_pallas=allow_pallas,
-                       sensitivity=sensitivity)
+                       sensitivity=sensitivity, data=pdata is not None,
+                       data_words=data_words(pdata))
     if not cands:
         return Decision(*DEFAULT_STRATEGY, source="default", key=ckey)
     if len(cands) == 1:

@@ -60,8 +60,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .controller import PIController
+from .interp import data_flatten, data_unflatten, data_words
 from .methods import MethodSpec, get_method
-from .problem import EnsembleProblem, ODEProblem, SDEProblem
+from .problem import (EnsembleProblem, ODEProblem, SDEProblem,
+                      bind_problem_data)
 from .solvers import (AdaptiveOptions, Event, SolveResult, interp_step,
                       rk_step, solve_adaptive, solve_fixed, solve_one)
 from .tableaus import Tableau
@@ -330,7 +332,13 @@ def _resolve_adjoint(sensitivity, adaptive, adjoint_steps, n_steps):
 def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
                dt0, saveat, rtol, atol, adaptive, n_steps, save_every,
                lane_tile, max_iters, event, sensitivity=None,
-               adjoint_steps=None, checkpoint_every=None):
+               adjoint_steps=None, checkpoint_every=None, raw_prob=None):
+    # `prob` arrives with any dataset CLOSED OVER its callbacks
+    # (bind_problem_data) — every XLA path below consumes it unchanged.  The
+    # Pallas branch instead needs the RAW 4-arg callbacks plus the dataset
+    # leaves as real kernel/custom_vjp arguments, hence `raw_prob`.
+    data = getattr(raw_prob, "data", None)
+    dleaves, dtreedef = data_flatten(data)
     tab = spec.tableau
     if adaptive is None:
         adaptive = True   # family default: embedded-error stepping
@@ -371,25 +379,30 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
     if ensemble == "kernel":
         if backend == "pallas":
             from repro.kernels.tsit5 import ops as erk_ops
+            kprob = raw_prob if data is not None else prob
 
-            def run(u, p):
+            def run(u, p, *lv):
+                d = data_unflatten(dtreedef, lv) if data is not None else None
                 return erk_ops.solve_ensemble_pallas(
-                    prob, u, p, tab, t0, tf, dt0, saveat, rtol, atol,
+                    kprob, u, p, tab, t0, tf, dt0, saveat, rtol, atol,
                     adaptive, lane_tile=lane_tile, max_iters=max_iters,
-                    event=event)
+                    event=event, data=d)
 
             if sensitivity == "adjoint":
                 from repro.kernels.ensemble_kernel import kernel_adjoint
 
-                def replay(u, p):
+                def replay(u, p, *lv):
+                    bp = (bind_problem_data(raw_prob,
+                                            data_unflatten(dtreedef, lv))
+                          if data is not None else prob)
                     return solve_kernel_xla(
-                        prob, u, p, tab, t0, tf, dt0, saveat, rtol, atol,
+                        bp, u, p, tab, t0, tf, dt0, saveat, rtol, atol,
                         adaptive, max_iters, lane_tile or XLA_LANE_TILE,
                         event, bounded_steps=bounded,
                         checkpoint_every=checkpoint_every)
 
-                return kernel_adjoint(run, replay)(u0s, ps)
-            return run(u0s, ps)
+                return kernel_adjoint(run, replay)(u0s, ps, *dleaves)
+            return run(u0s, ps, *dleaves)
         if not adaptive and event is None and not explicit_saveat:
             return solve_kernel_fixed(prob, u0s, ps, tab, t0, dt0, n_steps,
                                       save_every,
@@ -412,8 +425,14 @@ def _solve_erk(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend, t0, tf,
 def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                       t0, tf, dt0, saveat, rtol, atol, lane_tile, max_iters,
                       linsolve, event, w_reuse, sensitivity=None,
-                      adjoint_steps=None, checkpoint_every=None):
+                      adjoint_steps=None, checkpoint_every=None,
+                      raw_prob=None):
     from .rosenbrock import solve_rosenbrock
+
+    # dataset plumbing mirrors _solve_erk: bound closures (f AND jac) on the
+    # XLA paths, raw callbacks + leaf arguments on the Pallas/adjoint ones
+    data = getattr(raw_prob, "data", None)
+    dleaves, dtreedef = data_flatten(data)
 
     # the stiff engine is always adaptive: adjoint mode needs the explicit
     # attempt bound (see _resolve_adjoint)
@@ -468,15 +487,24 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
         # parity contract (identical per-trajectory dt sequences).
         tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
 
-        def lanes_run(u, p):
+        def lanes_run(u, p, *lv):
+            # `*lv` = dataset leaves when replaying a data-driven Pallas
+            # solve under kernel_adjoint (grads must reach the tables); a
+            # direct XLA solve closes over them via `prob`/`jac` instead
+            if lv:
+                bp = bind_problem_data(raw_prob, data_unflatten(dtreedef, lv))
+                f_loc, jac_loc = bp.f, getattr(bp, "jac", None)
+            else:
+                f_loc, jac_loc = prob.f, jac
             u0p, psp, T, B = _tile_lanes(u, p, tile_n)
 
             def tile(args):
                 u0t, pt = args
-                res = solve_rosenbrock(prob.f, rtab, u0t.T, pt.T, t0, tf, dt0,
+                res = solve_rosenbrock(f_loc, rtab, u0t.T, pt.T, t0, tf, dt0,
                                        rtol=rtol, atol=atol, saveat=saveat,
                                        max_iters=max_iters, lanes=True,
-                                       linsolve=linsolve, lane_tile=B, jac=jac,
+                                       linsolve=linsolve, lane_tile=B,
+                                       jac=jac_loc,
                                        event=event, w_reuse=w_reuse,
                                        bounded_steps=bounded,
                                        checkpoint_every=checkpoint_every)
@@ -491,23 +519,29 @@ def _solve_rosenbrock(spec: MethodSpec, prob, u0s, ps, *, ensemble, backend,
                                                        rosenbrock_body,
                                                        rosenbrock_work_words,
                                                        run_ensemble_kernel)
-            body = rosenbrock_body(prob.f, rtab, jac=jac, t0=float(t0),
+            kf = raw_prob.f if data is not None else prob.f
+            kjac = (getattr(raw_prob, "jac", None) if data is not None
+                    else jac)
+            body = rosenbrock_body(kf, rtab, jac=kjac, t0=float(t0),
                                    tf=float(tf), dt0=float(dt0),
                                    rtol=float(rtol), atol=float(atol),
                                    max_iters=max_iters, event=event,
-                                   w_reuse=w_reuse)
+                                   w_reuse=w_reuse, data=data)
 
-            def run(u, p):
+            def run(u, p, *lv):
                 return run_ensemble_kernel(
-                    body, u, p, ts=saveat, extras=[("broadcast", saveat)],
+                    body, u, p, ts=saveat,
+                    extras=([("broadcast", saveat)]
+                            + [("table", leaf) for leaf in lv]),
                     lane_tile=lane_tile,
                     work_words=rosenbrock_work_words(
                         n, ps.shape[1], stages=rtab.stages,
-                        w_reuse=bool(w_reuse)))
+                        w_reuse=bool(w_reuse)),
+                    fixed_words=data_words(data))
 
             if sensitivity == "adjoint":
-                return kernel_adjoint(run, lanes_run)(u0s, ps)
-            return run(u0s, ps)
+                return kernel_adjoint(run, lanes_run)(u0s, ps, *dleaves)
+            return run(u0s, ps, *dleaves)
 
         return lanes_run(u0s, ps)
 
@@ -534,10 +568,15 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                backend, t0, tf, dt0, saveat, n_steps, save_every, lane_tile,
                key, seed, noise_table, event, adaptive, rtol, atol, max_iters,
                lane_offset, brownian_depth, error_est, sensitivity=None,
-               adjoint_steps=None, checkpoint_every=None):
+               adjoint_steps=None, checkpoint_every=None, raw_prob=None):
     from .sde import (SDE_STEPPERS, default_bridge_depth, sde_event_state0,
                       sde_nf_per_step, sde_save_grid, sde_solve_adaptive,
                       sde_step_and_save, sde_step_save_event)
+
+    # dataset plumbing mirrors _solve_erk: bound closures (f AND g) on the
+    # XLA paths, raw callbacks + leaf arguments on the Pallas/adjoint ones
+    data = getattr(raw_prob, "data", None)
+    dleaves, dtreedef = data_flatten(data)
 
     if prob.noise not in spec.noise:
         raise ValueError(
@@ -625,7 +664,13 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
             # bitwise with the vmap/kernel strategies.
             tile_n = N if ensemble == "array" else (lane_tile or XLA_LANE_TILE)
 
-            def lanes_run(u, p):
+            def lanes_run(u, p, *lv):
+                if lv:
+                    bp = bind_problem_data(raw_prob,
+                                           data_unflatten(dtreedef, lv))
+                    f_loc, g_loc = bp.f, bp.g
+                else:
+                    f_loc, g_loc = prob.f, prob.g
                 u0p, psp, T, B = _tile_lanes(u, p, tile_n)
                 lanes_all = ((jnp.arange(T * B, dtype=jnp.uint32)
                               + jnp.asarray(lane_offset, jnp.uint32))
@@ -633,7 +678,7 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
 
                 def tile(args):
                     u0t, pt, lt = args
-                    res = sde_solve_adaptive(prob.f, prob.g, stepper,
+                    res = sde_solve_adaptive(f_loc, g_loc, stepper,
                                              prob.noise, u0t.T, pt.T, t0, tf,
                                              dt0, lane_idx=lt, lanes=True,
                                              **kw)
@@ -648,27 +693,30 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
                                                            run_ensemble_kernel,
                                                            sde_adaptive_body,
                                                            sde_work_words)
+                kf = raw_prob.f if data is not None else prob.f
+                kg = raw_prob.g if data is not None else prob.g
                 body = sde_adaptive_body(
-                    prob.f, prob.g, stepper, prob.noise, t0=float(t0),
+                    kf, kg, stepper, prob.noise, t0=float(t0),
                     tf=float(tf), dt0=float(dt0), rtol=float(rtol),
                     atol=float(atol), max_iters=max_iters, m_noise=m,
                     seed=_concrete_seed(seed), depth=depth, order=spec.order,
                     nf_per_step=nf_per_step, event=event, error_est=error_est,
                     embedded=pair.fn if pair is not None else None,
-                    est_order=est_order, nf_per_attempt=nf_att)
+                    est_order=est_order, nf_per_attempt=nf_att, data=data)
                 off = jnp.asarray([lane_offset], jnp.uint32)
 
-                def run(u, p):
+                def run(u, p, *lv):
                     return run_ensemble_kernel(
                         body, u, p, ts=saveat,
-                        extras=[("broadcast", saveat), ("broadcast", off)],
+                        extras=([("broadcast", saveat), ("broadcast", off)]
+                                + [("table", leaf) for leaf in lv]),
                         lane_tile=lane_tile,
                         work_words=2 * sde_work_words(n, ps.shape[1], m)
-                        + 8 * m)
+                        + 8 * m, fixed_words=data_words(data))
 
                 if sensitivity == "adjoint":
-                    return kernel_adjoint(run, lanes_run)(u0s, ps)
-                return run(u0s, ps)
+                    return kernel_adjoint(run, lanes_run)(u0s, ps, *dleaves)
+                return run(u0s, ps, *dleaves)
 
             return lanes_run(u0s, ps)
 
@@ -688,13 +736,16 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
 
     ts = sde_save_grid(t0, dt0, n_steps, save_every, u0s.dtype)
 
-    def ref_run(u, p):
+    def ref_run(u, p, *lv):
         # XLA lanes path replaying the kernel's exact Threefry counter stream
         # (global lane indices) — the Pallas oracle, bitwise on every backend.
         # "array" is the same lock-step state matrix over the WHOLE ensemble
         # (for fixed dt the §5.1 array semantics and per-lane stepping agree).
+        # `*lv` = dataset leaves when replaying for the data-driven adjoint.
         from repro.kernels.em.ref import ref_solve
-        us, uf, estate = ref_solve(prob, u, p, t0=t0, dt=dt0,
+        bp = (bind_problem_data(raw_prob, data_unflatten(dtreedef, lv))
+              if lv else prob)
+        us, uf, estate = ref_solve(bp, u, p, t0=t0, dt=dt0,
                                    n_steps=n_steps, method=spec.name,
                                    save_every=save_every, seed=seed,
                                    noise_table=noise_table, event=event,
@@ -706,18 +757,20 @@ def _solve_sde(spec: MethodSpec, prob: SDEProblem, u0s, ps, *, ensemble,
 
     if ensemble == "kernel" and backend == "pallas":
         from repro.kernels.em.ops import solve_sde_ensemble_kernel
+        kprob = raw_prob if data is not None else prob
 
-        def run(u, p):
+        def run(u, p, *lv):
+            d = data_unflatten(dtreedef, lv) if data is not None else None
             return solve_sde_ensemble_kernel(
-                prob, u, p, t0=t0, dt=dt0, n_steps=n_steps,
+                kprob, u, p, t0=t0, dt=dt0, n_steps=n_steps,
                 method=spec.name, save_every=save_every, lane_tile=lane_tile,
                 seed=_concrete_seed(seed), noise_table=noise_table,
-                event=event, lane_offset=lane_offset)
+                event=event, lane_offset=lane_offset, data=d)
 
         if sensitivity == "adjoint":
             from repro.kernels.ensemble_kernel import kernel_adjoint
-            return kernel_adjoint(run, ref_run)(u0s, ps)
-        return run(u0s, ps)
+            return kernel_adjoint(run, ref_run)(u0s, ps, *dleaves)
+        return run(u0s, ps, *dleaves)
 
     if ensemble in ("array", "kernel"):
         return ref_run(u0s, ps)
@@ -813,7 +866,15 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
 
     Args:
       eprob: `EnsembleProblem` wrapping an ODEProblem or SDEProblem with the
-        per-trajectory (u0s, ps) variations materialized.
+        per-trajectory (u0s, ps) variations materialized.  A problem with a
+        dataset (``prob.data`` — tables consumed by 4-arg callbacks
+        ``f(u, p, t, data)``; the texture-memory analog) dispatches through
+        every strategy/backend below identically: XLA paths bind the tables
+        over the callbacks, the Pallas kernels hold one VMEM-resident copy
+        per lane tile (broadcast BlockSpec, footprint charged to the §5.2
+        budget), and ``sensitivity="adjoint"`` reaches the table values
+        (forcing-curve calibration) — see docs/architecture.md
+        "Data-driven RHS".
       alg: a registry name (``"tsit5"``, ``"rosenbrock23"``, ``"em"``, ...),
         a `MethodSpec`, or a bare `Tableau` (auto-wrapped as an erk method).
       ensemble: execution strategy — ``"vmap"`` (per-trajectory baseline),
@@ -910,6 +971,19 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
     t0 = prob.tspan[0] if t0 is None else t0
     tf = prob.tspan[1] if tf is None else tf
 
+    # data-driven RHS (`prob.data`, the texture-memory analog): a capability
+    # like events/w_reuse/sensitivity.  Validate it against the method, then
+    # bind the dataset over the callbacks once — every XLA path downstream
+    # sees a plain 3-arg problem; the Pallas branches receive `raw_prob`
+    # (4-arg callbacks) and pass the table leaves as real kernel arguments.
+    raw_prob = prob
+    if getattr(prob, "data", None) is not None:
+        if not spec.data_rhs:
+            raise ValueError(
+                f"method {spec.name!r} declares data_rhs=False; its engines "
+                "cannot consume data-driven problems (prob.data)")
+        prob = bind_problem_data(prob)
+
     if ensemble == "auto":
         # measured dispatch (repro.core.autotune): profile-cache hit or a
         # one-off micro-benchmark of the capability-pruned candidate set on
@@ -1000,7 +1074,8 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                           brownian_depth=brownian_depth, error_est=error_est,
                           sensitivity=sensitivity,
                           adjoint_steps=adjoint_steps,
-                          checkpoint_every=checkpoint_every)
+                          checkpoint_every=checkpoint_every,
+                          raw_prob=raw_prob)
 
     if error_est is not None:
         raise ValueError(
@@ -1020,7 +1095,8 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                                 linsolve=linsolve, event=event,
                                 w_reuse=w_reuse, sensitivity=sensitivity,
                                 adjoint_steps=adjoint_steps,
-                                checkpoint_every=checkpoint_every)
+                                checkpoint_every=checkpoint_every,
+                                raw_prob=raw_prob)
     else:
         res = _solve_erk(spec, prob, u0s, ps, ensemble=ensemble,
                          backend=backend, t0=t0, tf=tf, dt0=dt0,
@@ -1030,7 +1106,8 @@ def solve_ensemble_local(eprob: EnsembleProblem, alg="tsit5",
                          max_iters=max_iters, event=event,
                          sensitivity=sensitivity,
                          adjoint_steps=adjoint_steps,
-                         checkpoint_every=checkpoint_every)
+                         checkpoint_every=checkpoint_every,
+                         raw_prob=raw_prob)
     if auto_dt_nf:
         res = res._replace(nf=res.nf + auto_dt_nf)
     return res

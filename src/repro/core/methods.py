@@ -68,6 +68,16 @@ class MethodSpec:
                per-lane termination (`repro.core.events`).  True for every
                built-in family; a capability flag so the front door can reject
                unsupported combinations up front instead of deep in dispatch.
+    data_rhs:  the method's engines accept data-driven problems
+               (`ODEProblem.data` / `SDEProblem.data` — a pytree of
+               interpolation tables the RHS consumes as a fourth argument,
+               the paper's texture-memory workloads).  True for every
+               built-in family: the XLA engines see data through bound
+               closures (`repro.core.problem.bind_problem_data`) and the
+               Pallas bodies re-bind from VMEM-resident table arguments.  A
+               method whose engine bypasses both mechanisms (e.g. a
+               hand-rolled kernel with a baked-in RHS) declares False and
+               the front door rejects data-driven problems up front.
     differentiable: the method's engines satisfy the AD contract
                (docs/adding-a-method.md): pure-JAX step math, so forward-mode
                sensitivities flow through the while-loop hot path and
@@ -111,6 +121,7 @@ class MethodSpec:
     events: bool = True
     stiff: bool = False
     w_reuse: bool = False
+    data_rhs: bool = True
     differentiable: bool = True
     noise: Tuple[str, ...] = ()
     aliases: Tuple[str, ...] = ()
@@ -189,7 +200,8 @@ def valid_dispatch(spec: MethodSpec, ensemble: str, backend: str = "xla", *,
                    adaptive: Optional[bool] = None, events: bool = False,
                    w_reuse: bool = False,
                    error_est: Optional[str] = None,
-                   sensitivity: Optional[str] = None) -> Tuple[bool, str]:
+                   sensitivity: Optional[str] = None,
+                   data: bool = False) -> Tuple[bool, str]:
     """Is (strategy, backend) a combination the front door would accept?
 
     Returns ``(ok, reason)`` — the same capability rules
@@ -214,6 +226,9 @@ def valid_dispatch(spec: MethodSpec, ensemble: str, backend: str = "xla", *,
         return False, "events are not supported on array_eager"
     if w_reuse and spec.family != "rosenbrock":
         return False, "w_reuse is rosenbrock-only (no W to reuse)"
+    if data and not spec.data_rhs:
+        return False, (f"method {spec.name!r} declares data_rhs=False "
+                       "(no data-driven RHS support)")
     if spec.family == "rosenbrock" and not spec.adaptive:
         return False, "rosenbrock engine requires an embedded pair"
     if adaptive and not spec.adaptive:

@@ -32,6 +32,17 @@ class ODEProblem:
         (Rosenbrock) engines on every strategy/backend; None means the
         solvers fall back to forward-mode AD (jacfwd) — the "automated
         translation" default where users never write Jacobians.
+    data: optional dataset pytree (any nest of `repro.core.interp`
+        UniformTable1D / UniformTable2D — the paper's texture-memory
+        workloads: dosing schedules, forcing curves, market data).  When
+        set, the callback contract grows a fourth argument: ``f(u, p, t,
+        data)`` (and likewise ``jac``, and ``g`` on SDEProblem), with the
+        dataset identical for every trajectory — tables are BROADCAST
+        across lanes and shards, never sharded.  The dispatch layers pass
+        the table values as real arguments (VMEM-resident BlockSpecs in
+        the Pallas kernels, replicated shard_map inputs on a mesh), so
+        `jax.grad` w.r.t. table values works end to end — see
+        docs/architecture.md "Data-driven RHS".
     """
 
     f: Callable[[Array, Array, Array], Array]
@@ -40,6 +51,7 @@ class ODEProblem:
     tspan: Tuple[float, float]
     name: str = "ode"
     jac: Optional[Callable[[Array, Array, Array], Array]] = None
+    data: Optional[Any] = None
 
     @property
     def n_states(self) -> int:
@@ -57,6 +69,7 @@ class SDEProblem:
     noise:
       "diagonal":     g returns (n,)   — one Wiener process per state.
       "general":      g returns (n, m) — m Wiener processes, dense coupling.
+    data: as on ODEProblem — when set, f and g take ``(u, p, t, data)``.
     """
 
     f: Callable[[Array, Array, Array], Array]
@@ -67,6 +80,7 @@ class SDEProblem:
     noise: str = "diagonal"
     n_noise: Optional[int] = None  # m; defaults to n for diagonal
     name: str = "sde"
+    data: Optional[Any] = None
 
     @property
     def n_states(self) -> int:
@@ -104,3 +118,33 @@ class EnsembleProblem:
         if ps is None:
             ps = jnp.broadcast_to(self.prob.p, (N,) + jnp.shape(self.prob.p))
         return u0s, ps
+
+
+def bind_problem_data(prob, data=None):
+    """Close the problem's callbacks over its dataset.
+
+    Returns a problem whose f / g / jac are plain 3-argument ``(u, p, t)``
+    callables again (``data=None``), with the dataset captured by closure.
+    This is how every XLA execution path consumes a data-driven problem: the
+    engines (`solvers`/`rosenbrock`/`sde`) never learn about data, and
+    closure-captured tracers are fine under jit/vmap/while_loop/grad.  The
+    Pallas paths cannot use this (kernel arguments must be explicit
+    BlockSpecs, and custom_vjp closures must not capture tracers), so they
+    instead pass `data`'s leaves as real kernel arguments and re-bind inside
+    the kernel body — see `repro.kernels.ensemble_kernel`.
+
+    `data` overrides `prob.data` when given (the kernel bodies re-bind with
+    leaf-rebuilt tables); a problem without data is returned unchanged.
+    """
+    d = prob.data if data is None else data
+    if d is None:
+        return prob
+    f = prob.f
+    rep = {"data": None, "f": lambda u, p, t: f(u, p, t, d)}
+    jac = getattr(prob, "jac", None)
+    if jac is not None:
+        rep["jac"] = lambda u, p, t: jac(u, p, t, d)
+    g = getattr(prob, "g", None)
+    if g is not None:
+        rep["g"] = lambda u, p, t: g(u, p, t, d)
+    return dataclasses.replace(prob, **rep)

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.interp import data_flatten, data_words
 from repro.core.sde import (SDE_STEPPERS, EnsembleSDEResult, sde_nf_per_step,
                             sde_save_grid)
 from repro.kernels.ensemble_kernel import (run_ensemble_kernel, sde_body,
@@ -32,25 +33,29 @@ def solve_sde_ensemble_pallas(prob, u0s, ps, key, t0, dt, n_steps,
 def solve_sde_ensemble_kernel(prob, u0s, ps, *, t0, dt, n_steps,
                               method="em", save_every=1, lane_tile=None,
                               seed=0, noise_table=None, interpret=None,
-                              event=None, lane_offset=0):
+                              event=None, lane_offset=0, data=None):
     """Unified-result SDE kernel entry (returns an EnsembleResult).
 
     noise_table: optional (n_steps, m, N) pre-drawn N(0,1), tiled over the
     trajectory axis alongside the state. lane_tile=None derives the tile from
     the §5.2 VMEM formula.  lane_offset shifts the counter-RNG lane indices to
-    this shard's GLOBAL trajectory indices (mesh-sharded ensembles)."""
+    this shard's GLOBAL trajectory indices (mesh-sharded ensembles).
+    `data` (the problem's dataset pytree) broadcasts its table leaves into
+    VMEM as trailing "table" extras, charged to the budget as fixed_words."""
     assert n_steps % save_every == 0
     m_noise = prob.noise_dim()
     body = sde_body(prob.f, prob.g, SDE_STEPPERS[method], prob.noise,
                     t0=float(t0), dt=float(dt), n_steps=n_steps,
                     save_every=save_every, m_noise=m_noise, seed=seed,
                     use_table=noise_table is not None,
-                    nf_per_step=sde_nf_per_step(method), event=event)
+                    nf_per_step=sde_nf_per_step(method), event=event,
+                    data=data)
     ts = sde_save_grid(t0, dt, n_steps, save_every, u0s.dtype)
     extras = [("broadcast", jnp.asarray([lane_offset], jnp.uint32))]
     if noise_table is not None:
         extras.append(("lanes", noise_table))
+    extras += [("table", leaf) for leaf in data_flatten(data)[0]]
     return run_ensemble_kernel(
         body, u0s, ps, ts=ts, extras=extras, lane_tile=lane_tile,
         work_words=sde_work_words(u0s.shape[1], ps.shape[1], m_noise),
-        interpret=interpret)
+        interpret=interpret, fixed_words=data_words(data))

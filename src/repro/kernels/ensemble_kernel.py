@@ -52,18 +52,23 @@ LANE_WIDTH = 128
 def auto_lane_tile(n_state: int, n_param: int, n_save: int, *,
                    itemsize: int = 4, work_words: Optional[int] = None,
                    vmem_budget: Optional[int] = None,
-                   max_tile: int = 4096) -> int:
+                   max_tile: int = 4096, fixed_words: int = 0) -> int:
     """Largest 128-multiple tile whose per-lane VMEM footprint fits the budget.
 
     Per-lane bytes ≈ itemsize * (2*S*n  [output block + loop-carried copy]
                                  + work_words [state, stages, params, control]).
     `work_words` defaults to a generic ERK estimate; family-specific callers
     (Rosenbrock carries an n×n Jacobian per lane) pass their own.
+    `fixed_words` is the tile-resident footprint SHARED by all lanes —
+    broadcast dataset tables ("table" extras: one VMEM copy per grid cell,
+    not per lane) — charged against the budget before the per-lane division
+    so data-driven kernels don't over-subscribe VMEM.
     """
     if work_words is None:
         work_words = 12 * n_state + n_param + 16
     per_lane = itemsize * (2 * n_save * n_state + work_words)
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    budget = max(0, budget - itemsize * fixed_words)
     tile = (budget // per_lane) // LANE_WIDTH * LANE_WIDTH
     return int(max(LANE_WIDTH, min(tile, max_tile)))
 
@@ -71,7 +76,8 @@ def auto_lane_tile(n_state: int, n_param: int, n_save: int, *,
 def lane_tile_ladder(n_state: int, n_param: int, n_save: int, *,
                      itemsize: int = 4, work_words: Optional[int] = None,
                      vmem_budget: Optional[int] = None, max_tile: int = 4096,
-                     N: Optional[int] = None) -> Tuple[int, ...]:
+                     N: Optional[int] = None,
+                     fixed_words: int = 0) -> Tuple[int, ...]:
     """Candidate lane tiles bracketing the §5.2 VMEM-optimal tile.
 
     The occupancy formula (`auto_lane_tile`) yields ONE tile; the real
@@ -84,7 +90,7 @@ def lane_tile_ladder(n_state: int, n_param: int, n_save: int, *,
     """
     auto = auto_lane_tile(n_state, n_param, n_save, itemsize=itemsize,
                           work_words=work_words, vmem_budget=vmem_budget,
-                          max_tile=max_tile)
+                          max_tile=max_tile, fixed_words=fixed_words)
     half = max(LANE_WIDTH, (auto // 2) // LANE_WIDTH * LANE_WIDTH)
     cand = {LANE_WIDTH, half, auto, min(max_tile, 2 * auto)}
     if N is not None:
@@ -165,6 +171,13 @@ class KernelContext(NamedTuple):
 # extras are (kind, array) with kind:
 #   "broadcast" — (K,) array identical for every tile (e.g. the saveat grid)
 #   "lanes"     — (..., N) array tiled over the trajectory axis (noise tables)
+#   "table"     — any-rank array identical for every tile (dataset table
+#                 values: `prob.data` leaves).  Broadcast like "broadcast"
+#                 but rank-preserving: the leaf rides its own BlockSpec into
+#                 VMEM once per grid cell (the texture-memory economy) and
+#                 the body sees it in its natural shape.  Convention: data
+#                 leaves are always appended LAST in an extras list, so the
+#                 family bodies can peel `extras[-n_leaves:]` off the tail.
 Extra = Tuple[str, Array]
 
 
@@ -173,7 +186,8 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
                         lane_tile: Optional[int] = None,
                         work_words: Optional[int] = None,
                         vmem_budget: Optional[int] = None,
-                        interpret: Optional[bool] = None):
+                        interpret: Optional[bool] = None,
+                        fixed_words: int = 0):
     """Launch `body` over the ensemble and assemble an EnsembleResult.
 
     u0s (N, n), ps (N, m) trajectory-major; ts (S,) save-time grid for the
@@ -189,7 +203,8 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
     if lane_tile is None:
         lane_tile = auto_lane_tile(n, m, S, itemsize=dtype.itemsize,
                                    work_words=work_words,
-                                   vmem_budget=vmem_budget)
+                                   vmem_budget=vmem_budget,
+                                   fixed_words=fixed_words)
     # clamp to the ensemble size (no point padding a small ensemble up to the
     # VMEM-optimal tile); large ragged ensembles round up to a LANE_WIDTH
     # multiple.  The XLA lanes path (`core.ensemble._tile_lanes`) derives its
@@ -222,6 +237,16 @@ def run_ensemble_kernel(body: Callable, u0s: Array, ps: Array, *, ts: Array,
             in_specs.append(pl.BlockSpec(
                 blk, lambda i, _nd=nd: (0,) * (_nd - 1) + (i,)))
             unwrap.append(lambda v: v)
+        elif kind == "table":
+            # dataset leaf: flatten to one VMEM row broadcast to every grid
+            # cell, restore the natural shape inside the kernel
+            a = jnp.asarray(arr)
+            sh = a.shape
+            flat = a.reshape(1, -1)
+            K = flat.shape[1]
+            args.append(flat)
+            in_specs.append(pl.BlockSpec((1, K), lambda i: (0, 0)))
+            unwrap.append(lambda v, _sh=sh: v.reshape(_sh))
         else:
             raise ValueError(f"unknown extra kind {kind!r}")
 
@@ -282,27 +307,32 @@ def kernel_adjoint(primal_fn: Callable, replay_fn: Callable) -> Callable:
     (seed; step/grid index, row, global lane), so the recomputed path is the
     path the kernel integrated, bitwise.
 
-    Both callables map ``(u0s, ps) -> EnsembleResult``.  Gradients flow
-    through the continuous state outputs ``us`` and ``u_final``; solver
-    statistics, snapshot times and event locations are non-differentiable
-    outputs (their cotangents are dropped).
+    Both callables map ``(u0s, ps, *extra) -> EnsembleResult``; the variadic
+    tail exists for data-driven problems, whose dataset leaves must be REAL
+    custom_vjp arguments (a custom_vjp closure must not capture tracers — the
+    way a bound closure would under `jax.grad` of table values), so gradients
+    flow to the tables too: calibrating a forcing curve from data is just
+    `jax.grad` over the leaf arguments.  Gradients flow through the
+    continuous state outputs ``us`` and ``u_final``; solver statistics,
+    snapshot times and event locations are non-differentiable outputs (their
+    cotangents are dropped).
     """
 
     @jax.custom_vjp
-    def run(u0s, ps):
-        return primal_fn(u0s, ps)
+    def run(u0s, ps, *extra):
+        return primal_fn(u0s, ps, *extra)
 
-    def fwd(u0s, ps):
-        return primal_fn(u0s, ps), (u0s, ps)
+    def fwd(u0s, ps, *extra):
+        return primal_fn(u0s, ps, *extra), (u0s, ps, extra)
 
     def bwd(residuals, ct):
-        u0s, ps = residuals
+        u0s, ps, extra = residuals
 
-        def states(u, p):
-            res = replay_fn(u, p)
+        def states(u, p, *ex):
+            res = replay_fn(u, p, *ex)
             return res.us, res.u_final
 
-        _, vjp = jax.vjp(states, u0s, ps)
+        _, vjp = jax.vjp(states, u0s, ps, *extra)
         return vjp((ct.us, ct.u_final))
 
     run.defvjp(fwd, bwd)
@@ -315,7 +345,8 @@ def kernel_adjoint(primal_fn: Callable, replay_fn: Callable) -> Callable:
 
 def save_chunk_count(n_state: int, n_param: int, n_save: int, *,
                      itemsize: int = 4, work_words: Optional[int] = None,
-                     vmem_budget: Optional[int] = None) -> int:
+                     vmem_budget: Optional[int] = None,
+                     fixed_words: int = 0) -> int:
     """How many saveat segments the staged driver needs (1 = no staging).
 
     `run_ensemble_kernel` keeps the whole (S, n, B) output block VMEM-resident
@@ -328,6 +359,9 @@ def save_chunk_count(n_state: int, n_param: int, n_save: int, *,
     if work_words is None:
         work_words = 12 * n_state + n_param + 16
     budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else vmem_budget
+    # broadcast tables are tile-resident in every segment — same charge as
+    # auto_lane_tile, or staging re-over-subscribes exactly what it fixes
+    budget = max(0, budget - itemsize * fixed_words)
     per_lane_words = budget // (LANE_WIDTH * itemsize)
     max_saves = (per_lane_words - work_words) // (2 * n_state)
     if max_saves >= n_save:
@@ -340,7 +374,8 @@ def run_ensemble_kernel_staged(body_factory: Callable, u0s: Array, ps: Array,
                                lane_tile: Optional[int] = None,
                                work_words: Optional[int] = None,
                                vmem_budget: Optional[int] = None,
-                               interpret: Optional[bool] = None):
+                               interpret: Optional[bool] = None,
+                               fixed_words: int = 0):
     """Segmented launch: double-buffer the save block between HBM and VMEM.
 
     The save grid `ts` (concrete, ascending, all > t0) is split into
@@ -376,7 +411,8 @@ def run_ensemble_kernel_staged(body_factory: Callable, u0s: Array, ps: Array,
         res = run_ensemble_kernel(
             body, u_cur, ps, ts=jnp.asarray(seg_ts, u0s.dtype),
             extras=extras, lane_tile=lane_tile, work_words=work_words,
-            vmem_budget=vmem_budget, interpret=interpret)
+            vmem_budget=vmem_budget, interpret=interpret,
+            fixed_words=fixed_words)
         u_cur = res.u_final
         parts.append(res.us)
         if acc is None:
@@ -399,16 +435,47 @@ def run_ensemble_kernel_staged(body_factory: Callable, u0s: Array, ps: Array,
 # generator compiles the problem definition into the device kernel.
 # ---------------------------------------------------------------------------
 
+def _data_binder(data):
+    """Plumbing for data-driven problems inside kernel bodies.
+
+    `data` is the problem's dataset pytree, used as a TEMPLATE (treedef +
+    leaf count) only: the actual table values arrive as the trailing "table"
+    extras (the extras-last convention above), so they are real kernel
+    arguments — VMEM-resident, and differentiable through `kernel_adjoint`'s
+    variadic tail.  Returns `rebind(extras) -> (core_extras, d)` peeling the
+    leaf tail off and rebuilding the dataset pytree, or None without data.
+    """
+    if data is None:
+        return None
+    leaves, treedef = jax.tree_util.tree_flatten(data)
+    k = len(leaves)
+
+    def rebind(extras):
+        split = len(extras) - k
+        d = jax.tree_util.tree_unflatten(treedef, list(extras[split:]))
+        return extras[:split], d
+
+    return rebind
+
+
 def erk_body(f, tab, *, t0: float, tf: float, dt0: float, rtol: float,
-             atol: float, adaptive: bool, max_iters: int, event=None):
-    """Adaptive embedded-RK integration; extras[0] = saveat grid (S,)."""
+             atol: float, adaptive: bool, max_iters: int, event=None,
+             data=None):
+    """Adaptive embedded-RK integration; extras[0] = saveat grid (S,);
+    data-driven problems append their table leaves last (see _data_binder)."""
     from repro.core.solvers import AdaptiveOptions, solve_adaptive
 
+    rebind = _data_binder(data)
+
     def body(ctx, u0, p, extras):
+        fb = f
+        if rebind is not None:
+            extras, d = rebind(extras)
+            fb = lambda u_, p_, t_: f(u_, p_, t_, d)
         saveat_v = extras[0]
         opts = AdaptiveOptions(rtol=rtol, atol=atol, max_iters=max_iters,
                                adaptive=adaptive)
-        res = solve_adaptive(f, tab, u0, p, t0, tf, dt0, saveat=saveat_v,
+        res = solve_adaptive(fb, tab, u0, p, t0, tf, dt0, saveat=saveat_v,
                              opts=opts, event=event, lanes=True)
         if event is not None:
             res, _ = res
@@ -423,7 +490,7 @@ def erk_body(f, tab, *, t0: float, tf: float, dt0: float, rtol: float,
 
 def rosenbrock_body(f, rtab, *, jac=None, t0: float, tf: float, dt0: float,
                     rtol: float, atol: float, max_iters: int, event=None,
-                    w_reuse=None):
+                    w_reuse=None, data=None):
     """s-stage Rosenbrock stiff integration (any `RosenbrockTableau`:
     Rosenbrock23 / Rodas4 / Rodas5P) with the batched-LU W-solves *inlined*
     (linsolve="lanes": paper §5.1.3 inside the fused kernel, lanes-wide
@@ -435,15 +502,23 @@ def rosenbrock_body(f, rtab, *, jac=None, t0: float, tf: float, dt0: float,
     kernel's dominant per-step cost (jacfwd + O(n³) elimination) is then paid
     only on refresh steps.  Events run the shared per-lane machinery
     (`repro.core.events`) inside the fused loop.  extras[0] = saveat grid
-    (S,)."""
+    (S,); data-driven problems append their table leaves last."""
     from repro.core.rosenbrock import solve_rosenbrock
 
+    rebind = _data_binder(data)
+
     def body(ctx, u0, p, extras):
+        fb, jb = f, jac
+        if rebind is not None:
+            extras, d = rebind(extras)
+            fb = lambda u_, p_, t_: f(u_, p_, t_, d)
+            if jac is not None:
+                jb = lambda u_, p_, t_: jac(u_, p_, t_, d)
         saveat_v = extras[0]
-        res = solve_rosenbrock(f, rtab, u0, p, t0, tf, dt0, rtol=rtol,
+        res = solve_rosenbrock(fb, rtab, u0, p, t0, tf, dt0, rtol=rtol,
                                atol=atol, saveat=saveat_v,
                                max_iters=max_iters, lanes=True,
-                               linsolve="lanes", jac=jac, event=event,
+                               linsolve="lanes", jac=jb, event=event,
                                w_reuse=w_reuse)
         if event is not None:
             res, _ = res
@@ -457,28 +532,36 @@ def rosenbrock_body(f, rtab, *, jac=None, t0: float, tf: float, dt0: float,
 
 def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
              n_steps: int, save_every: int, m_noise: int, seed: int,
-             use_table: bool, nf_per_step: int = 1, event=None):
+             use_table: bool, nf_per_step: int = 1, event=None, data=None):
     """Fixed-dt SDE integration with in-kernel counter RNG (threefry keyed by
     (seed; step, noise-row, GLOBAL lane) — replayable, no noise storage), or a
-    pre-drawn table via extras[-1] ("lanes" kind, (n_steps, m, N)).
+    pre-drawn table via extras[1] ("lanes" kind, (n_steps, m, N)).
 
-    extras[0] ("broadcast", (1,)) is the shard's global lane offset; events
-    run the shared per-lane machinery (`repro.core.events`) inside the fused
-    loop, with termination masks freezing finished lanes."""
+    extras[0] ("broadcast", (1,)) is the shard's global lane offset;
+    data-driven problems append their dataset table leaves LAST (after the
+    optional noise table — the extras-last convention).  Events run the
+    shared per-lane machinery (`repro.core.events`) inside the fused loop,
+    with termination masks freezing finished lanes."""
     from repro.core.sde import (sde_event_state0, sde_step_and_save,
                                 sde_step_save_event)
     from repro.kernels.rng import counter_normals_threefry
 
     S = n_steps // save_every
+    rebind = _data_binder(data)
 
     def body(ctx, u0, p, extras):
+        f_, g_ = f, g
+        if rebind is not None:
+            extras, d = rebind(extras)
+            f_ = lambda u_, p_, t_: f(u_, p_, t_, d)
+            g_ = lambda u_, p_, t_: g(u_, p_, t_, d)
         B = ctx.lane_tile
         dtype = u0.dtype
         offset = jnp.asarray(extras[0], jnp.uint32)[0]
         lane = (offset + jnp.uint32(ctx.tile) * jnp.uint32(B)
                 + jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 1))
         rows = jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 0)
-        table = extras[-1] if use_table else None
+        table = extras[1] if use_table else None
 
         def noise_fn(k):
             if use_table:
@@ -491,7 +574,7 @@ def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
         if event is None:
             def step(k, carry):
                 u, us = carry
-                return sde_step_and_save(stepper, f, g, noise, u, us, p, t0,
+                return sde_step_and_save(stepper, f_, g_, noise, u, us, p, t0,
                                          dt, k, noise_fn(k), save_every)
 
             u_f, us = jax.lax.fori_loop(0, n_steps, step, (u0, us0))
@@ -500,9 +583,9 @@ def sde_body(f, g, stepper, noise: str, *, t0: float, dt: float,
         else:
             def step(k, carry):
                 u, us, estate = carry
-                return sde_step_save_event(stepper, f, g, noise, event, u, us,
-                                           estate, p, t0, dt, k, noise_fn(k),
-                                           save_every)
+                return sde_step_save_event(stepper, f_, g_, noise, event, u,
+                                           us, estate, p, t0, dt, k,
+                                           noise_fn(k), save_every)
 
             estate0 = sde_event_state0((B,), t0, dtype)
             u_f, us, estate = jax.lax.fori_loop(0, n_steps, step,
@@ -520,23 +603,31 @@ def sde_adaptive_body(f, g, stepper, noise: str, *, t0: float, tf: float,
                       dt0: float, rtol: float, atol: float, max_iters: int,
                       m_noise: int, seed: int, depth: int, order: float,
                       nf_per_step: int, event=None, error_est: str = "doubling",
-                      embedded=None, est_order=None, nf_per_attempt=None):
+                      embedded=None, est_order=None, nf_per_attempt=None,
+                      data=None):
     """Adaptive SDE integration fused into the kernel: embedded-pair or
     step-doubling error control with virtual-Brownian-tree noise
     (rejection-safe: the SAME (seed; lane, row, dyadic-time) stream on every
     strategy/backend — see `repro.core.sde.sde_solve_adaptive`, which this
     body wraps unchanged, so estimator choice cannot split the backends).
     extras[0] = saveat grid (S,), extras[1] = ("broadcast", (1,)) global lane
-    offset."""
+    offset; data-driven problems append their table leaves last."""
     from repro.core.sde import sde_solve_adaptive
 
+    rebind = _data_binder(data)
+
     def body(ctx, u0, p, extras):
+        f_, g_ = f, g
+        if rebind is not None:
+            extras, d = rebind(extras)
+            f_ = lambda u_, p_, t_: f(u_, p_, t_, d)
+            g_ = lambda u_, p_, t_: g(u_, p_, t_, d)
         B = ctx.lane_tile
         saveat_v = extras[0]
         offset = jnp.asarray(extras[1], jnp.uint32)[0]
         lane = (offset + jnp.uint32(ctx.tile) * jnp.uint32(B)
                 + jax.lax.broadcasted_iota(jnp.uint32, (B,), 0))
-        res = sde_solve_adaptive(f, g, stepper, noise, u0, p, t0, tf, dt0,
+        res = sde_solve_adaptive(f_, g_, stepper, noise, u0, p, t0, tf, dt0,
                                  seed=seed, lane_idx=lane, m_noise=m_noise,
                                  saveat=saveat_v, rtol=rtol, atol=atol,
                                  max_iters=max_iters, event=event, lanes=True,

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ensemble import EnsembleResult
+from repro.core.interp import data_flatten, data_words
 from repro.core.tableaus import Tableau
 from repro.kernels.ensemble_kernel import (erk_body, erk_work_words,
                                            run_ensemble_kernel,
@@ -22,7 +23,8 @@ from repro.kernels.ensemble_kernel import (erk_body, erk_work_words,
 def solve_ensemble_pallas(prob, u0s, ps, tab: Tableau, t0, tf, dt0, saveat,
                           rtol, atol, adaptive, lane_tile=None,
                           max_iters=100_000, event=None,
-                          interpret=None, save_chunks=None) -> EnsembleResult:
+                          interpret=None, save_chunks=None,
+                          data=None) -> EnsembleResult:
     """EnsembleGPUKernel entry point (called via ensemble="kernel",
     backend="pallas"). lane_tile=None derives the tile from the §5.2 VMEM
     formula.
@@ -34,19 +36,29 @@ def solve_ensemble_pallas(prob, u0s, ps, tab: Tableau, t0, tf, dt0, saveat,
     ascending, post-t0 save grid and no event (event counters cannot thread
     across segment boundaries) — anything else falls back to the single
     launch unchanged.
+
+    `data` is the problem's dataset pytree (tables): its leaves ride "table"
+    BlockSpecs into VMEM (appended LAST in the extras — the factory
+    convention), the body re-binds `f(u, p, t, data)` over the rebuilt
+    tables, and the broadcast footprint is charged to the VMEM budget as
+    `fixed_words` so auto lane_tile and staging stay honest.
     """
     saveat = jnp.asarray(saveat, u0s.dtype)
     work_words = erk_work_words(u0s.shape[1], ps.shape[1], tab.stages)
+    fixed_words = data_words(data)
+    data_extras = [("table", leaf) for leaf in data_flatten(data)[0]]
     if save_chunks is None:
         save_chunks = save_chunk_count(u0s.shape[1], ps.shape[1],
                                        int(saveat.shape[0]),
                                        itemsize=u0s.dtype.itemsize,
-                                       work_words=work_words)
+                                       work_words=work_words,
+                                       fixed_words=fixed_words)
 
     def mk_body(t_start, t_end):
         return erk_body(prob.f, tab, t0=float(t_start), tf=float(t_end),
                         dt0=float(dt0), rtol=float(rtol), atol=float(atol),
-                        adaptive=adaptive, max_iters=max_iters, event=event)
+                        adaptive=adaptive, max_iters=max_iters, event=event,
+                        data=data)
 
     stageable = (save_chunks > 1 and event is None
                  and not isinstance(saveat, jax.core.Tracer)
@@ -58,12 +70,15 @@ def solve_ensemble_pallas(prob, u0s, ps, tab: Tableau, t0, tf, dt0, saveat,
             seg_t0 = t0 if t_start is None else t_start
             seg_tf = tf if last else float(seg_ts[-1])
             sv = jnp.asarray(seg_ts, u0s.dtype)
-            return mk_body(seg_t0, seg_tf), [("broadcast", sv)]
+            return mk_body(seg_t0, seg_tf), [("broadcast", sv)] + data_extras
 
         return run_ensemble_kernel_staged(
             body_factory, u0s, ps, ts=saveat, save_chunks=save_chunks,
-            lane_tile=lane_tile, work_words=work_words, interpret=interpret)
+            lane_tile=lane_tile, work_words=work_words, interpret=interpret,
+            fixed_words=fixed_words)
 
     return run_ensemble_kernel(
-        mk_body(t0, tf), u0s, ps, ts=saveat, extras=[("broadcast", saveat)],
-        lane_tile=lane_tile, work_words=work_words, interpret=interpret)
+        mk_body(t0, tf), u0s, ps, ts=saveat,
+        extras=[("broadcast", saveat)] + data_extras,
+        lane_tile=lane_tile, work_words=work_words, interpret=interpret,
+        fixed_words=fixed_words)
