@@ -1,0 +1,213 @@
+"""Continuous-batching serving throughput (the tentpole claim of the
+serving subsystem, docs/architecture.md "Serving").
+
+Workload: a burst of small heterogeneous ensemble requests (4 lanes each,
+mixed time spans / step counts) arriving at t=0.  Two ways to serve it:
+
+  * serial   — one-batch-at-a-time: each request is its own
+    `solve_ensemble_local(..., ensemble="kernel", backend="xla")` dispatch,
+    run to completion before the next starts (the pre-PR9 front-door shape).
+  * serving  — `EnsembleService`: all requests share one compiled slot pool;
+    finished lanes retire early and are refilled from the queue without
+    recompilation, so the device runs at full lane width the whole time.
+
+Reported per section: problems/sec for both paths, the throughput speedup
+(bar: >= 1.5x), and request-latency p50/p99 (serial latency for request i is
+the cumulative completion time — everything arrived at t=0).  Compilation is
+excluded from both paths (untimed warmup per distinct signature); the serving
+path's additional no-recompile advantage under signature churn is therefore
+NOT counted — the measured speedup is pure occupancy.
+
+Writes results/BENCH_serving.json (sections: ode, sde, summary).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+SPEEDUP_BAR = 1.5
+
+
+def _percentiles(lat):
+    lat = np.asarray(sorted(lat))
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def _serial_solve(reqs, solve_one):
+    """One-batch-at-a-time baseline: returns (total_s, latencies)."""
+    lat, t_start = [], time.perf_counter()
+    for req in reqs:
+        solve_one(req)
+        lat.append(time.perf_counter() - t_start)  # arrived at t=0
+    return time.perf_counter() - t_start, lat
+
+
+def _served_solve(svc, reqs, submit_one):
+    tickets = [submit_one(svc, r) for r in reqs]
+    t0 = time.perf_counter()
+    svc.drain()
+    total = time.perf_counter() - t0
+    return total, [t.latency for t in tickets]
+
+
+def _section(name, n_req, t_serial, lat_serial, t_serve, lat_serve):
+    p50s, p99s = _percentiles(lat_serial)
+    p50v, p99v = _percentiles(lat_serve)
+    speedup = t_serial / t_serve
+    rec = dict(
+        n_requests=n_req,
+        serial=dict(total_s=t_serial, problems_per_s=n_req / t_serial,
+                    p50_s=p50s, p99_s=p99s),
+        serving=dict(total_s=t_serve, problems_per_s=n_req / t_serve,
+                     p50_s=p50v, p99_s=p99v),
+        speedup=speedup, bar=SPEEDUP_BAR, meets_bar=bool(speedup >= SPEEDUP_BAR),
+    )
+    from .common import row
+    print(row(f"serving/{name}/serial", t_serial / n_req,
+              f"{n_req / t_serial:.1f} problems_per_s"))
+    print(row(f"serving/{name}/continuous", t_serve / n_req,
+              f"{n_req / t_serve:.1f} problems_per_s "
+              f"speedup={speedup:.2f}x p50={p50v * 1e3:.1f}ms "
+              f"p99={p99v * 1e3:.1f}ms"))
+    return rec
+
+
+def _ode_section():
+    from repro.configs.de_problems import lorenz_ensemble
+    from repro.core import EnsembleProblem, solve_ensemble_local
+    from repro.serve import EnsembleService
+
+    TFS = (0.5, 1.0, 2.0)
+    N_REQ = 18
+    ep = lorenz_ensemble(4 * N_REQ, dtype=jnp.float32)
+    u0s, ps = (np.asarray(a) for a in ep.materialize())
+    reqs = [(EnsembleProblem(ep.prob, 4, u0s=u0s[4 * i:4 * i + 4],
+                             ps=ps[4 * i:4 * i + 4]), TFS[i % len(TFS)])
+            for i in range(N_REQ)]
+
+    def solve_one(req):
+        sub, tf = req
+        r = solve_ensemble_local(sub, alg="tsit5", ensemble="kernel",
+                                 backend="xla", t0=0.0, tf=tf, dt0=1e-2,
+                                 rtol=1e-6, atol=1e-6, lane_tile=4)
+        np.asarray(r.u_final)  # block
+
+    def submit_one(svc, req):
+        sub, tf = req
+        return svc.submit(sub, alg="tsit5", tf=tf, dt0=1e-2)
+
+    # warmup: compile each distinct serial signature + the slot program
+    for tf in TFS:
+        solve_one((reqs[0][0], tf))
+    wsvc = EnsembleService(slot_width=16, segment_steps=64)
+    submit_one(wsvc, reqs[0])
+    wsvc.drain()
+
+    t_serial, lat_serial = _serial_solve(reqs, solve_one)
+    svc = EnsembleService(slot_width=16, segment_steps=64,
+                          max_pending=2 * N_REQ)
+    t_serve, lat_serve = _served_solve(svc, reqs, submit_one)
+    return _section("ode_tsit5", N_REQ, t_serial, lat_serial,
+                    t_serve, lat_serve)
+
+
+def _sde_section():
+    from repro.configs.de_problems import gbm_problem
+    from repro.core import EnsembleProblem, solve_ensemble_local
+    from repro.serve import EnsembleService
+
+    NSTEPS = (512, 1024, 2048)
+    N_REQ = 18
+    SEED = 0
+    prob = gbm_problem(dtype=jnp.float32)
+    u0 = np.full((4, 3), 1.0, np.float32)
+    p = np.tile(np.asarray([1.5, 0.1], np.float32), (4, 1))
+    reqs = [(EnsembleProblem(prob, 4, u0s=u0, ps=p), NSTEPS[i % len(NSTEPS)],
+             4 * i) for i in range(N_REQ)]
+
+    def solve_one(req):
+        sub, n_steps, off = req
+        r = solve_ensemble_local(sub, alg="em", ensemble="kernel",
+                                 backend="xla", t0=0.0, tf=n_steps * 1e-3,
+                                 dt0=1e-3, n_steps=n_steps,
+                                 save_every=n_steps, seed=SEED,
+                                 lane_offset=off)
+        np.asarray(r.u_final)  # block
+
+    def submit_one(svc, req):
+        sub, n_steps, _ = req
+        return svc.submit(sub, alg="em", t0=0.0, tf=n_steps * 1e-3,
+                          dt0=1e-3, n_steps=n_steps)
+
+    for n_steps in NSTEPS:
+        solve_one((reqs[0][0], n_steps, 0))
+    wsvc = EnsembleService(seed=SEED, slot_width=16, segment_steps=256)
+    submit_one(wsvc, reqs[0])
+    wsvc.drain()
+
+    t_serial, lat_serial = _serial_solve(reqs, solve_one)
+    svc = EnsembleService(seed=SEED, slot_width=16, segment_steps=256,
+                          max_pending=2 * N_REQ)
+    t_serve, lat_serve = _served_solve(svc, reqs, submit_one)
+    return _section("sde_em", N_REQ, t_serial, lat_serial, t_serve, lat_serve)
+
+
+def _stiff_section():
+    """Non-resumable leg: rosenbrock requests coalesce into ONE BatchPool
+    solve per pump (lazy-W refresh gates are batch-reduced — lanes cannot
+    retire early), so the serving win here is pure batch amortization."""
+    from repro.configs.de_problems import rober_problem
+    from repro.core import EnsembleProblem, solve_ensemble_local
+    from repro.serve import EnsembleService
+
+    N_REQ = 8
+    rp = rober_problem(dtype=jnp.float64)
+    u0 = np.tile(np.asarray([1.0, 0.0, 0.0]), (4, 1))
+    p = np.tile(np.asarray([0.04, 3e7, 1e4]), (4, 1))
+    reqs = [EnsembleProblem(rp, 4, u0s=u0, ps=p) for _ in range(N_REQ)]
+    kw = dict(t0=0.0, tf=1.0, dt0=1e-6, rtol=1e-5, atol=1e-8)
+
+    def solve_one(sub):
+        r = solve_ensemble_local(sub, alg="rosenbrock23", ensemble="kernel",
+                                 backend="xla", **kw)
+        np.asarray(r.u_final)  # block
+
+    def submit_one(svc, sub):
+        return svc.submit(sub, alg="rosenbrock23", **kw)
+
+    solve_one(reqs[0])                       # serial signature compile
+    wsvc = EnsembleService(max_pending=2 * N_REQ)
+    for sub in reqs:                         # coalesced-width compile
+        submit_one(wsvc, sub)
+    wsvc.drain()
+
+    t_serial, lat_serial = _serial_solve(reqs, solve_one)
+    svc = EnsembleService(max_pending=2 * N_REQ)
+    t_serve, lat_serve = _served_solve(svc, reqs, submit_one)
+    return _section("stiff_rosenbrock23", N_REQ, t_serial, lat_serial,
+                    t_serve, lat_serve)
+
+
+def main() -> None:
+    from .common import HEADER, update_results_json
+    print(HEADER)
+    ode = _ode_section()
+    sde = _sde_section()
+    stiff = _stiff_section()
+    summary = dict(
+        speedup_bar=SPEEDUP_BAR,
+        meets_bar=bool(ode["meets_bar"] and sde["meets_bar"]
+                       and stiff["meets_bar"]),
+        note="occupancy-only speedup; no-recompile advantage not counted",
+    )
+    path = "results/BENCH_serving.json"
+    update_results_json(path, "ode", ode)
+    update_results_json(path, "sde", sde)
+    update_results_json(path, "stiff", stiff)
+    update_results_json(path, "summary", summary)
+
+
+if __name__ == "__main__":
+    main()

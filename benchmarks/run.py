@@ -29,7 +29,7 @@ MODULES = [
     ("gradients", "benchmarks.bench_gradients"),
     ("fig11", "benchmarks.bench_fig11_crn"),
     ("texture", "benchmarks.bench_texture_interp"),
-    ("mpi", "benchmarks.bench_mpi_scale"),
+    ("serving", "benchmarks.bench_serving"),
 ]
 
 

@@ -184,3 +184,32 @@ fres = solve_ensemble_local(fens, alg="tsit5", ensemble="kernel",
                             dt0=1e-2, rtol=1e-7, atol=1e-7)
 print(f"\nforced oscillator from a 65-knot force table "
       f"(kernel/pallas, table in VMEM):\n  u_final[0] = {fres.u_final[0]}")
+
+# --- serving: async submit/poll with continuous batching -------------------
+# Production traffic is many small heterogeneous requests, not one blob.
+# EnsembleService keeps ONE compiled slot program running: finished lanes
+# retire early and are refilled from the queue without recompilation, and
+# every served result is bitwise a fresh solve_ensemble_local of that
+# request (docs/architecture.md "Serving").
+from repro.serve import EnsembleService
+
+svc = EnsembleService(slot_width=8, segment_steps=64)
+svc.start()                                  # pump loop on a background thread
+sigma, beta = 10.0, 8.0 / 3.0
+sprob = ODEProblem(lorenz, jnp.asarray([1.0, 0.0, 0.0]),
+                   jnp.asarray([sigma, 21.0, beta]), (0.0, 2.0))
+tickets = []
+for tf in (0.5, 1.0, 2.0):                   # three tenants, three horizons
+    rhos = jnp.linspace(19.0, 24.0, 4)
+    sps = jnp.stack([jnp.full((4,), sigma), rhos, jnp.full((4,), beta)], 1)
+    tickets.append(svc.submit(EnsembleProblem(sprob, 4, ps=sps), alg="tsit5",
+                              tf=tf, dt0=1e-2, tenant=f"tenant-{tf}"))
+for tk in tickets:
+    tk.wait(timeout=120.0)                   # or poll tk.done, non-blocking
+svc.stop()
+print("\nserved 3 async requests through one continuously-batched program:")
+for tk, tf in zip(tickets, (0.5, 1.0, 2.0)):
+    print(f"  tf={tf}: status={tk.result.status} nf={tk.result.nf} "
+          f"latency={tk.latency:.3f}s")
+print(f"  per-tenant accounting: "
+      f"{ {t: a['nf'] for t, a in svc.accounting.items()} }")

@@ -36,8 +36,14 @@ import dataclasses
 import json
 import os
 import tempfile
+import threading
 import time
 from typing import Any, Dict, Optional, Tuple
+
+try:
+    import fcntl
+except ImportError:          # non-POSIX: single-process semantics only
+    fcntl = None
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +160,7 @@ def config_key(spec: MethodSpec, *, n: int, N: int, dtype, adaptive: bool,
 # ---------------------------------------------------------------------------
 
 _MEM: Dict[str, Dict[str, Any]] = {}   # cache-file path -> entries
+_MEM_LOCK = threading.Lock()           # concurrent tuners (serve pool pumps)
 
 
 def default_cache_path() -> str:
@@ -166,12 +173,12 @@ def default_cache_path() -> str:
 
 def clear_memory_cache() -> None:
     """Drop the in-process cache layer (tests; the JSON file is untouched)."""
-    _MEM.clear()
+    with _MEM_LOCK:
+        _MEM.clear()
 
 
-def _load_entries(path: str) -> Dict[str, Any]:
-    if path in _MEM:
-        return _MEM[path]
+def _read_file_entries(path: str) -> Dict[str, Any]:
+    """Entries as currently on disk — never consults the in-memory layer."""
     entries: Dict[str, Any] = {}
     try:
         with open(path) as fh:
@@ -180,22 +187,57 @@ def _load_entries(path: str) -> Dict[str, Any]:
             entries = dict(data.get("entries", {}))
     except (OSError, ValueError):
         pass
-    _MEM[path] = entries
     return entries
 
 
+def _load_entries(path: str) -> Dict[str, Any]:
+    with _MEM_LOCK:
+        if path in _MEM:
+            return _MEM[path]
+    entries = _read_file_entries(path)
+    with _MEM_LOCK:
+        return _MEM.setdefault(path, entries)
+
+
 def _save_entries(path: str, entries: Dict[str, Any]) -> None:
-    _MEM[path] = entries
-    payload = {"version": CACHE_VERSION, "entries": entries}
+    """Persist `entries`, MERGING with concurrent writers.
+
+    Two processes tuning different configs race on the JSON file: each did
+    load -> add-own-key -> replace, and the last replace silently dropped the
+    other's entry (a classic lost update).  The critical section below holds
+    an `fcntl.flock` on a sidecar lock file while it re-reads the file,
+    unions the disk entries under ours (our fresher timings win ties), and
+    atomically replaces — so every writer's keys survive every interleaving.
+    The merged view also refreshes the in-memory layer.
+    """
+    merged = dict(entries)
     try:
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                                   suffix=".tmp")
-        with os.fdopen(fd, "w") as fh:
-            json.dump(payload, fh, indent=1, sort_keys=True)
-        os.replace(tmp, path)
+        lock_fh = open(path + ".lock", "a+") if fcntl is not None else None
     except OSError:
-        pass   # read-only FS etc: the in-memory layer still serves this run
+        lock_fh = None
+    try:
+        if lock_fh is not None:
+            try:
+                fcntl.flock(lock_fh.fileno(), fcntl.LOCK_EX)
+            except OSError:
+                pass
+        disk = _read_file_entries(path)
+        merged = {**disk, **entries}
+        payload = {"version": CACHE_VERSION, "entries": merged}
+        try:
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                       suffix=".tmp")
+            with os.fdopen(fd, "w") as fh:
+                json.dump(payload, fh, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass   # read-only FS etc: the in-memory layer still serves us
+    finally:
+        if lock_fh is not None:
+            lock_fh.close()          # releases the flock
+    with _MEM_LOCK:
+        _MEM[path] = merged
 
 
 # ---------------------------------------------------------------------------

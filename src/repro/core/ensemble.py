@@ -848,6 +848,107 @@ def _assemble_sde_result(ts, us, uf, N, n_steps, nf_per_step, t0, dt,
 
 
 # ----------------------------------------------------------------------------
+# resumable segment engine (continuous-batching substrate — repro.serve)
+# ----------------------------------------------------------------------------
+
+class ResumableEngine:
+    """Fixed-shape slot stepper: ONE compiled program per (body, widths).
+
+    Wraps a per-lane resume body (`repro.core.solvers.erk_resume_body` /
+    `repro.core.sde.sde_resume_body`) in a bounded while segment over a
+    B-wide carry whose per-lane constants (p, tf / n_steps, lane, ...) live
+    IN the carry.  `step_segment(carry, refill_mask, refill)` first merges
+    refill columns into the carry — a full-width ``jnp.where`` over the
+    trailing lane axis, so the jitted program is independent of WHICH slots
+    refill — then advances every active lane by at most `segment_steps`
+    attempts.  Applying the body to a done lane is an exact no-op (dt = 0 /
+    write-masked), so mixed-progress slots cost nothing but the lane; the
+    serve layer harvests done lanes between segments and refills their slots
+    from the request queue without ever recompiling.
+    """
+
+    def __init__(self, init_fn, body_fn, segment_steps: int = 64):
+        self.segment_steps = int(segment_steps)
+        K = jnp.asarray(self.segment_steps, jnp.int32)
+
+        def cond(c):
+            return (c["iters"] < K) & jnp.any(~c["done"])
+
+        def _segment(carry, refill_mask, refill):
+            merged = {}
+            for k, old in carry.items():
+                if k == "iters":
+                    # segment-local bound; per-request budgets are enforced
+                    # host-side from naccept + nreject at harvest
+                    merged[k] = jnp.asarray(0, jnp.int32)
+                    continue
+                m = refill_mask[None, :] if jnp.ndim(old) == 2 else refill_mask
+                merged[k] = jnp.where(m, refill[k], old)
+            return jax.lax.while_loop(cond, body_fn, merged)
+
+        self._fresh = jax.jit(init_fn)
+        self._segment = jax.jit(_segment)
+
+    def fresh(self, *args):
+        """Build a full-width carry (every column a fresh lane).  Used both
+        for the initial pool state and — masked through `step_segment` — to
+        stage refill columns: non-refilled columns are computed on filler
+        values and discarded by the merge."""
+        return self._fresh(*args)
+
+    def step_segment(self, carry, refill_mask, refill):
+        """Merge `refill` columns where `refill_mask` is set, then run one
+        bounded segment.  `refill_mask` all-False (with `refill=carry`) is a
+        pure advance."""
+        return self._segment(carry, refill_mask, refill)
+
+
+def make_resumable_engine(spec: MethodSpec, prob, *, adaptive=None,
+                          rtol=1e-6, atol=1e-6, event=None, seed=0,
+                          m_noise=None, segment_steps: int = 64):
+    """Build the (init, body) pair for a resumable method and wrap it in a
+    `ResumableEngine`.
+
+    erk:  ``engine.fresh(u0, p, t0, tf, dt0)`` — u0 (n, B), p (k, B), rest
+          scalars or (B,).  The body is `solve_adaptive`'s own loop body
+          (shared `_make_adaptive_body`) with p/tf carry-resident.
+    sde (fixed-dt): ``engine.fresh(u0, p, t0, dt, n_steps, lane)`` — per-lane
+          step counts and GLOBAL lane indices; noise replays the same
+          (seed; step, lane, row) Threefry counters as the fresh kernels.
+
+    Raises ValueError for non-resumable methods (`MethodSpec.resumable` is
+    False — e.g. rosenbrock's lazy-W refresh gates are batch-reduced
+    predicates that couple lanes): the serve layer runs those as coalesced
+    one-shot batches instead (`repro.serve.slots.BatchPool`).
+    """
+    if not spec.resumable:
+        raise ValueError(
+            f"method {spec.name!r} declares resumable=False; serve it via "
+            "coalesced one-shot batches (repro.serve.slots.BatchPool)")
+    if spec.family == "sde":
+        from .sde import sde_resume_body, sde_resume_init
+        if adaptive:
+            raise ValueError(
+                "adaptive SDE stepping is not slot-resumable (Brownian-tree "
+                "left-endpoint state is dt-path dependent); fixed-dt only")
+        if m_noise is None:
+            m_noise = prob.noise_dim()
+        body = sde_resume_body(prob.f, prob.g, spec.name, prob.noise,
+                               m_noise, seed, event=event)
+        return ResumableEngine(sde_resume_init, body, segment_steps)
+    if spec.family == "erk":
+        from .solvers import erk_resume_body, erk_resume_init
+        tab = spec.tableau
+        if adaptive is None:
+            adaptive = spec.adaptive
+        opts = AdaptiveOptions(rtol=rtol, atol=atol, adaptive=adaptive)
+        body = erk_resume_body(prob.f, tab, opts, event=event)
+        init = partial(erk_resume_init, prob.f, tab)
+        return ResumableEngine(init, body, segment_steps)
+    raise ValueError(f"no resumable engine for family {spec.family!r}")
+
+
+# ----------------------------------------------------------------------------
 # front door
 # ----------------------------------------------------------------------------
 

@@ -87,6 +87,19 @@ class MethodSpec:
                declare False and the front door rejects `sensitivity=` up
                front.  The derived `sensitivity` property lists the modes.
     stiff:     suitable for stiff problems (implicit/semi-implicit).
+    resumable: the method's engine exposes the per-lane segment carry
+               (`repro.core.ensemble.make_resumable_engine`) that the
+               continuous-batching service (`repro.serve`) slots lanes in and
+               out of: every per-lane quantity (state, t, dt, controller
+               memory, RNG counters) lives in the carry, and applying the
+               loop body to a retired lane is an exact no-op — so a slot can
+               be recycled mid-stream, bitwise-identically to a fresh solve.
+               True for erk (fixed + adaptive) and for sde fixed-dt
+               stepping.  False for rosenbrock: the lazy-W freshness gates
+               are psum-reduced BATCH predicates (`lax.cond` on
+               any-lane-stale), which couples lanes across the slot axis —
+               the service runs non-resumable methods as coalesced one-shot
+               batches instead.
     noise:     supported SDEProblem.noise kinds (sde only).
     aliases:   alternative lookup names (paper-facing spellings).
 
@@ -120,6 +133,7 @@ class MethodSpec:
     adaptive: bool = True
     events: bool = True
     stiff: bool = False
+    resumable: bool = False
     w_reuse: bool = False
     data_rhs: bool = True
     differentiable: bool = True
@@ -184,7 +198,8 @@ def get_method(alg: Any) -> MethodSpec:
         return alg
     if isinstance(alg, Tableau):
         return MethodSpec(name=alg.name, family="erk", order=alg.order,
-                          tableau=alg, adaptive=bool((alg.btilde != 0).any()))
+                          tableau=alg, adaptive=bool((alg.btilde != 0).any()),
+                          resumable=True)
     if isinstance(alg, RosenbrockTableau):
         return MethodSpec(name=alg.name, family="rosenbrock", order=alg.order,
                           rtableau=alg, stiff=True,
@@ -276,7 +291,7 @@ def _register_builtins():
     for tab in TABLEAUS.values():
         register_method(MethodSpec(
             name=tab.name, family="erk", order=tab.order, tableau=tab,
-            adaptive=bool((tab.btilde != 0).any()),
+            adaptive=bool((tab.btilde != 0).any()), resumable=True,
             aliases=paper_alias.get(tab.name, ())))
 
     # Rosenbrock stiff family: every tableau in ROSENBROCK_TABLEAUS reaches
@@ -301,17 +316,18 @@ def _register_builtins():
                       platen_w2_step)
     register_method(MethodSpec(
         name="em", family="sde", order=0.5, stepper=em_step, adaptive=True,
-        embedded=SDE_EMBEDDED["em"],
+        embedded=SDE_EMBEDDED["em"], resumable=True,
         noise=("diagonal", "general"), aliases=("gpuem", "euler_maruyama")))
     register_method(MethodSpec(
         name="platen_w2", family="sde", order=2.0, stepper=platen_w2_step,
-        adaptive=True, noise=("diagonal",), aliases=("siea", "gpusiea")))
+        adaptive=True, resumable=True,
+        noise=("diagonal",), aliases=("siea", "gpusiea")))
     register_method(MethodSpec(
         name="heun_strat", family="sde", order=0.5, stepper=heun_strat_step,
-        adaptive=True, noise=("diagonal", "general")))
+        adaptive=True, resumable=True, noise=("diagonal", "general")))
     register_method(MethodSpec(
         name="milstein", family="sde", order=1.0, stepper=milstein_step,
-        adaptive=True, embedded=SDE_EMBEDDED["milstein"],
+        adaptive=True, embedded=SDE_EMBEDDED["milstein"], resumable=True,
         noise=("diagonal",)))
 
 

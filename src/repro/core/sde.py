@@ -307,6 +307,92 @@ def sde_step_save_event(stepper, f, g, noise: str, ev: Event, u, us, estate,
     return u, us, estate
 
 
+def sde_resume_init(u0, p, t0, dt, n_steps, lane):
+    """Fresh per-lane resume carry for the fixed-dt SDE loop (lanes mode).
+
+    u0 (n, B); p (k, B); t0/dt scalars or (B,); n_steps scalar or (B,) int32
+    per-lane step counts; lane scalar or (B,) uint32 GLOBAL lane indices —
+    the counter-RNG stream key.  The stream key travels WITH the carry, so a
+    recycled slot keeps its request's noise stream: `sde_resume_body` draws
+    step k of lane g from counter_normals_threefry(seed, k, g, row) exactly
+    like `repro.kernels.em.ref.ref_solve` does, making slot recycling
+    bitwise-invisible.
+    """
+    dtype = u0.dtype
+    cshape = (u0.shape[-1],)
+    tv = jnp.broadcast_to(jnp.asarray(t0, dtype), cshape).astype(dtype)
+    dtv = jnp.broadcast_to(jnp.asarray(dt, dtype), cshape).astype(dtype)
+    return dict(
+        u=u0, p=p,
+        k=jnp.zeros(cshape, jnp.int32),
+        n_steps=jnp.broadcast_to(jnp.asarray(n_steps, jnp.int32), cshape),
+        t0=tv, dt=dtv,
+        lane=jnp.broadcast_to(jnp.asarray(lane, jnp.uint32), cshape),
+        done=jnp.zeros(cshape, bool),
+        t_out=tv,
+        naccept=jnp.zeros(cshape, jnp.int32),
+        nf=jnp.zeros(cshape, jnp.int32),
+        status=jnp.zeros(cshape, jnp.int32),
+        event_t=jnp.full(cshape, jnp.inf, dtype),
+        event_count=jnp.zeros(cshape, jnp.int32),
+        iters=jnp.asarray(0, jnp.int32),
+    )
+
+
+def sde_resume_body(f, g, method: str, noise: str, m_noise: int, seed,
+                    event: Optional[Event] = None):
+    """Per-lane resumable fixed-dt SDE step body over the carry from
+    `sde_resume_init` — the ops of `sde_step_and_save` (or
+    `sde_step_save_event`) with per-lane (k, t0, dt, n_steps, lane) instead
+    of shared scalars, and no snapshot buffer (serving returns final states).
+    Done lanes are write-masked, so mixed-progress slots are exact no-ops;
+    active lanes realize elementwise the SAME expressions as the fresh loop
+    body on the same (seed; step, lane, row) counters — bitwise recycling.
+    """
+    stepper = SDE_STEPPERS[method]
+    nfps = sde_nf_per_step(method)
+
+    def body(c):
+        from repro.kernels.rng import counter_normals_threefry
+        u, p = c["u"], c["p"]
+        dtype = u.dtype
+        B = u.shape[-1]
+        active = ~c["done"]
+        k, dtv = c["k"], c["dt"]
+        t = c["t0"] + k * dtv
+        lane = jnp.broadcast_to(c["lane"][None, :], (m_noise, B))
+        rows = jax.lax.broadcasted_iota(jnp.uint32, (m_noise, B), 0)
+        z = counter_normals_threefry(seed, k, lane, rows, dtype)
+        u_new = stepper(f, g, u, p, t, dtv, z * jnp.sqrt(dtv), noise)
+        if event is not None:
+            def interp_fn(theta):
+                return linear_interp(u, u_new, theta, lanes=True)
+
+            u_next, t_next, ev_t, ev_n, term = handle_event(
+                event, interp_fn, u, u_new, p, t, dtv, t + dtv, active,
+                c["event_t"], c["event_count"], lanes=True)
+        else:
+            u_next = u_new
+            t_next = t + dtv
+            ev_t, ev_n = c["event_t"], c["event_count"]
+            term = jnp.zeros((B,), bool)
+        u_out = jnp.where(active[None], u_next, u)
+        t_out = jnp.where(term, t_next,
+                          jnp.where(active, t + dtv, c["t_out"]))
+        k_new = k + active.astype(jnp.int32)
+        done = c["done"] | term | (k_new >= c["n_steps"])
+        return dict(
+            u=u_out, p=p, k=k_new, n_steps=c["n_steps"], t0=c["t0"], dt=dtv,
+            lane=c["lane"], done=done, t_out=t_out,
+            naccept=c["naccept"] + active.astype(jnp.int32),
+            nf=c["nf"] + active.astype(jnp.int32) * nfps,
+            status=c["status"], event_t=ev_t, event_count=ev_n,
+            iters=c["iters"] + 1,
+        )
+
+    return body
+
+
 def sde_solve_fixed(prob: SDEProblem, u0, p, t0, dt, n_steps: int, key,
                     method: str = "em", save_every: int = 1,
                     noise_table: Optional[Array] = None,

@@ -250,63 +250,23 @@ def _grid_save(f, tab, us, saveat, u_old, u_new, ks, p, t_old, dt_step,
         return jnp.where(cross_e, vals, us)
 
 
-def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
-                   saveat: Optional[Array] = None,
-                   opts: AdaptiveOptions = AdaptiveOptions(),
-                   event: Optional[Event] = None,
-                   lanes: bool = False):
-    """Adaptive (or fixed-accept) integration with optional events.
-
-    lanes=False, u0 (n,)   : per-trajectory (scalar control).
-    lanes=False, u0 (N, n) : EnsembleGPUArray lock-step semantics (scalar
-                             control, ensemble-wide norm).
-    lanes=True,  u0 (n, B) : per-lane control — EnsembleGPUKernel structure.
-    """
-    dtype = u0.dtype
-    ctrl = opts.controller or PIController.for_order(tab.embedded_order)
-    cshape = (u0.shape[-1],) if lanes else ()
-    axes = (0 if lanes else None) if opts.norm_axes == "auto" else opts.norm_axes
-
-    t0 = jnp.asarray(t0, dtype)
-    tf = jnp.asarray(tf, dtype)
-    tv = jnp.broadcast_to(t0, cshape).astype(dtype)
-    dtv = jnp.broadcast_to(jnp.asarray(dt0, dtype), cshape).astype(dtype)
-
-    if saveat is None:
-        saveat = jnp.asarray([tf], dtype)
-    saveat = jnp.asarray(saveat, dtype)
-    S = saveat.shape[0]
-    save_grid = opts.save == "grid"
-    us0 = jnp.zeros((S,) + u0.shape, dtype)
-    # prefill save points at/before t0 with u0
-    pre = (saveat <= t0).reshape((S,) + (1,) * u0.ndim)
-    us0 = jnp.where(pre, u0[None], us0)
-
-    k0 = f(u0, p, tv)
-    zero_c = jnp.zeros(cshape, dtype)
-    carry0 = dict(
-        t=tv, u=u0, dt=dtv, k1=k0,
-        enorm_prev=jnp.ones(cshape, dtype),
-        done=jnp.zeros(cshape, bool),
-        us=us0,
-        naccept=jnp.zeros(cshape, jnp.int32),
-        nreject=jnp.zeros(cshape, jnp.int32),
-        nf=jnp.ones(cshape, jnp.int32),
-        status=jnp.zeros(cshape, jnp.int32),
-        iters=jnp.asarray(0, jnp.int32),
-        event_t=jnp.full(cshape, jnp.inf, dtype),
-        event_count=jnp.zeros(cshape, jnp.int32),
-    )
-
-    def cond(c):
-        return (c["iters"] < opts.max_iters) & jnp.any(~c["done"])
-
-    bounded = opts.bounded_steps is not None
+def _make_adaptive_body(f, tab: Tableau, opts: AdaptiveOptions, ctrl, event,
+                        lanes: bool, dtype, cshape, axes, saveat, save_grid,
+                        bounded, p=None, tf=None):
+    """The adaptive loop body, shared by `solve_adaptive` (p/tf closed over)
+    and the resumable segment engine (`erk_resume_body`: p/tf read from the
+    carry, so every per-lane constant travels WITH the lane and a slot can be
+    refilled with a different request's problem without recompiling).  In
+    closure mode the emitted expressions are identical to the historical
+    inline body — bitwise-stable refactor."""
+    per_lane_consts = p is None
 
     def body(c):
+        p_ = c["p"] if per_lane_consts else p
+        tf_ = c["tf"] if per_lane_consts else tf
         t, u, dt, k1 = c["t"], c["u"], c["dt"], c["k1"]
         active = ~c["done"]
-        remaining = tf - t
+        remaining = tf_ - t
         dt_step = jnp.minimum(dt, remaining)
         # done lanes step at dt = 0: the stage cascade is an exact no-op on
         # them (any value is output-invariant — every write is accept-masked —
@@ -314,7 +274,7 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
         # candidates, which poisons the reverse pass via 0 * inf cotangents)
         dt_step = jnp.where(active, dt_step, jnp.asarray(0.0, dtype))
 
-        u_cand, err, ks = rk_step(f, tab, u, p, t, dt_step, k1)
+        u_cand, err, ks = rk_step(f, tab, u, p_, t, dt_step, k1)
 
         if opts.adaptive:
             enorm = hairer_norm(err, u, u_cand, opts.atol, opts.rtol, axes=axes)
@@ -348,17 +308,17 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
             # transposes an f evaluation at an off-trajectory (possibly
             # overflowed) rejected candidate.
             dt_step = jnp.where(accept, dt_step, jnp.asarray(0.0, dtype))
-            u_cand, err, ks = rk_step(f, tab, u, p, t, dt_step, k1)
+            u_cand, err, ks = rk_step(f, tab, u, p_, t, dt_step, k1)
         t_new = jnp.where(accept, t + dt_step, t)
 
         # ---- events: detect/locate/apply via the shared machinery ----------
         if event is not None:
             def interp_fn(theta):
-                return interp_step(f, tab, u, u_cand, ks, p, t, dt_step,
+                return interp_step(f, tab, u, u_cand, ks, p_, t, dt_step,
                                    theta, lanes=lanes)
 
             u_next, t_new, ev_t, ev_n, term = handle_event(
-                event, interp_fn, u, u_cand, p, t, dt_step, t_new, accept,
+                event, interp_fn, u, u_cand, p_, t, dt_step, t_new, accept,
                 c["event_t"], c["event_count"], lanes=lanes)
         else:
             u_next = u_cand
@@ -372,20 +332,20 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
             k1_new = jnp.where(acc_e, ks[-1], k1)
             nf_inc = jnp.where(active, tab.stages - 1, 0)
         else:
-            k1_new = jnp.where(acc_e, f(u_new, p, t_new), k1)
+            k1_new = jnp.where(acc_e, f(u_new, p_, t_new), k1)
             nf_inc = jnp.where(active, tab.stages, 0)
 
         # ---- dense save -----------------------------------------------------
         if save_grid:
             def do_save(us):
-                return _grid_save(f, tab, us, saveat, u, u_cand, ks, p, t,
+                return _grid_save(f, tab, us, saveat, u, u_cand, ks, p_, t,
                                   dt_step, t_new, accept)
 
             any_cross = jnp.any(
                 accept & (jnp.max(saveat) > (t.min() if lanes else t)))
             us = jax.lax.cond(any_cross, do_save, lambda x: x, c["us"])
         else:
-            us = c["us"]
+            us = c.get("us")
 
         # dt pinned at the controller floor and still rejecting: retrying the
         # identical step is a deterministic live-lock — terminate the lane
@@ -395,19 +355,81 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
         statusv = jnp.where(hopeless,
                             jnp.asarray(STATUS_DTMIN_EXHAUSTED, jnp.int32),
                             c["status"])
-        eps_end = 1e-7 * jnp.maximum(jnp.abs(tf), 1.0)
-        done = c["done"] | (t_new >= tf - eps_end) | term | hopeless
+        eps_end = 1e-7 * jnp.maximum(jnp.abs(tf_), 1.0)
+        done = c["done"] | (t_new >= tf_ - eps_end) | term | hopeless
 
-        return dict(
+        out = dict(
             t=t_new, u=u_new, dt=dt_next, k1=k1_new,
-            enorm_prev=enorm_prev, done=done, us=us,
+            enorm_prev=enorm_prev, done=done,
             naccept=c["naccept"] + accept.astype(jnp.int32),
             nreject=c["nreject"] + (active & ~accept).astype(jnp.int32),
             nf=c["nf"] + nf_inc.astype(jnp.int32),
             status=statusv, iters=c["iters"] + 1,
             event_t=ev_t, event_count=ev_n,
         )
+        if us is not None:
+            out["us"] = us
+        if per_lane_consts:
+            out["p"], out["tf"] = c["p"], c["tf"]
+        return out
 
+    return body
+
+
+def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
+                   saveat: Optional[Array] = None,
+                   opts: AdaptiveOptions = AdaptiveOptions(),
+                   event: Optional[Event] = None,
+                   lanes: bool = False):
+    """Adaptive (or fixed-accept) integration with optional events.
+
+    lanes=False, u0 (n,)   : per-trajectory (scalar control).
+    lanes=False, u0 (N, n) : EnsembleGPUArray lock-step semantics (scalar
+                             control, ensemble-wide norm).
+    lanes=True,  u0 (n, B) : per-lane control — EnsembleGPUKernel structure.
+    """
+    dtype = u0.dtype
+    ctrl = opts.controller or PIController.for_order(tab.embedded_order)
+    cshape = (u0.shape[-1],) if lanes else ()
+    axes = (0 if lanes else None) if opts.norm_axes == "auto" else opts.norm_axes
+
+    t0 = jnp.asarray(t0, dtype)
+    tf = jnp.asarray(tf, dtype)
+    tv = jnp.broadcast_to(t0, cshape).astype(dtype)
+    dtv = jnp.broadcast_to(jnp.asarray(dt0, dtype), cshape).astype(dtype)
+
+    if saveat is None:
+        saveat = jnp.asarray([tf], dtype)
+    saveat = jnp.asarray(saveat, dtype)
+    S = saveat.shape[0]
+    save_grid = opts.save == "grid"
+    us0 = jnp.zeros((S,) + u0.shape, dtype)
+    # prefill save points at/before t0 with u0
+    pre = (saveat <= t0).reshape((S,) + (1,) * u0.ndim)
+    us0 = jnp.where(pre, u0[None], us0)
+
+    k0 = f(u0, p, tv)
+    carry0 = dict(
+        t=tv, u=u0, dt=dtv, k1=k0,
+        enorm_prev=jnp.ones(cshape, dtype),
+        done=jnp.zeros(cshape, bool),
+        us=us0,
+        naccept=jnp.zeros(cshape, jnp.int32),
+        nreject=jnp.zeros(cshape, jnp.int32),
+        nf=jnp.ones(cshape, jnp.int32),
+        status=jnp.zeros(cshape, jnp.int32),
+        iters=jnp.asarray(0, jnp.int32),
+        event_t=jnp.full(cshape, jnp.inf, dtype),
+        event_count=jnp.zeros(cshape, jnp.int32),
+    )
+
+    def cond(c):
+        return (c["iters"] < opts.max_iters) & jnp.any(~c["done"])
+
+    bounded = opts.bounded_steps is not None
+    body = _make_adaptive_body(f, tab, opts, ctrl, event, lanes, dtype,
+                               cshape, axes, saveat, save_grid, bounded,
+                               p=p, tf=tf)
     out = solver_loop(cond, body, carry0, bounded_steps=opts.bounded_steps,
                       checkpoint_every=opts.checkpoint_every)
     status = jnp.where(out["status"] > 0, out["status"],
@@ -418,6 +440,65 @@ def solve_adaptive(f, tab: Tableau, u0, p, t0, tf, dt0,
     if event is not None:
         return res, dict(event_t=out["event_t"], event_count=out["event_count"])
     return res
+
+
+# ----------------------------------------------------------------------------
+# resumable per-lane carry (the serving engine's substrate)
+# ----------------------------------------------------------------------------
+
+def erk_resume_init(f, tab: Tableau, u0, p, t0, tf, dt0):
+    """Fresh per-lane resume carry — lanes mode only: u0 (n, B), p (k, B),
+    t0/tf/dt0 scalars or (B,).
+
+    Field-for-field identical to `solve_adaptive`'s initial carry minus the
+    dense save buffer, plus carry-resident p/tf: a lane stepped to completion
+    by `erk_resume_body` realizes the exact accept/step sequence of a fresh
+    `solve_adaptive(..., lanes=True)` on the same column — bitwise (the loop
+    body is the same shared `_make_adaptive_body`; per-lane control never
+    couples lanes outside no-op iterations).
+    """
+    dtype = u0.dtype
+    cshape = (u0.shape[-1],)
+    tv = jnp.broadcast_to(jnp.asarray(t0, dtype), cshape).astype(dtype)
+    tfv = jnp.broadcast_to(jnp.asarray(tf, dtype), cshape).astype(dtype)
+    dtv = jnp.broadcast_to(jnp.asarray(dt0, dtype), cshape).astype(dtype)
+    k0 = f(u0, p, tv)
+    return dict(
+        t=tv, u=u0, dt=dtv, k1=k0,
+        enorm_prev=jnp.ones(cshape, dtype),
+        done=jnp.zeros(cshape, bool),
+        naccept=jnp.zeros(cshape, jnp.int32),
+        nreject=jnp.zeros(cshape, jnp.int32),
+        nf=jnp.ones(cshape, jnp.int32),
+        status=jnp.zeros(cshape, jnp.int32),
+        iters=jnp.asarray(0, jnp.int32),
+        event_t=jnp.full(cshape, jnp.inf, dtype),
+        event_count=jnp.zeros(cshape, jnp.int32),
+        p=p, tf=tfv,
+    )
+
+
+def erk_resume_body(f, tab: Tableau, opts: AdaptiveOptions = AdaptiveOptions(),
+                    event: Optional[Event] = None):
+    """Build the per-lane resumable step body (lanes mode) over the carry from
+    `erk_resume_init`: the exact `solve_adaptive` loop body with p/tf read
+    from the carry instead of closed over, so ONE compiled body serves every
+    request with this (method, n, dtype) signature — slot refill never
+    recompiles.  Applying it to a done lane is an exact no-op (dt_step = 0,
+    every write accept/active-masked), so mixed-progress slots are safe.
+    No dense save buffer: serving returns final states + stats.
+    """
+    ctrl = opts.controller or PIController.for_order(tab.embedded_order)
+    bounded = opts.bounded_steps is not None
+
+    def body(c):
+        dtype = c["u"].dtype
+        cshape = (c["u"].shape[-1],)
+        inner = _make_adaptive_body(f, tab, opts, ctrl, event, True, dtype,
+                                    cshape, 0, None, False, bounded)
+        return inner(c)
+
+    return body
 
 
 # ----------------------------------------------------------------------------

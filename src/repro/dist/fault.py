@@ -7,14 +7,16 @@ training loop.  `WorkQueue` is the ensemble-tile analogue of a straggler-
 tolerant scheduler: tiles of the trajectory axis are leased to workers and
 become reassignable when a lease times out (a dead worker never wedges the
 sweep — the same tile-local-termination property the fused kernel has on
-device, at the job level).
+device, at the job level).  It is also the request scheduler behind
+`repro.serve`: requests are `push()`-ed as work items, pool pumps `claim()`
+them under lease, and a pump that dies mid-request simply lets the lease
+expire so the next pump retries the request.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
-
-from repro.checkpoint import ckpt as ckpt_lib
 
 
 class TrainSupervisor:
@@ -26,11 +28,13 @@ class TrainSupervisor:
         self.save_every = int(save_every)
         self.async_save = async_save
         self._pending = None
+        self._last_saved: Optional[int] = None
 
     def resume_or_init(self, init_fn: Callable[[], Any], like_tree: Any
                        ) -> Tuple[int, Any, Dict]:
         """Restore the newest checkpoint into `like_tree`'s structure, or call
         `init_fn` for a fresh start. Returns (step, state, extra)."""
+        from repro.checkpoint import ckpt as ckpt_lib
         latest = ckpt_lib.restore_latest(self.ckpt_dir, like_tree)
         if latest is None:
             return 0, init_fn(), {}
@@ -39,12 +43,36 @@ class TrainSupervisor:
 
     def maybe_save(self, step: int, state: Any,
                    extra: Optional[Dict] = None) -> bool:
-        """Checkpoint when `step` lands on the save_every grid."""
-        if step % self.save_every != 0:
+        """Checkpoint when `step` lands on the save_every grid.
+
+        Step 0 is skipped: `0 % save_every == 0` used to write a pointless
+        checkpoint of the exact init state every run (and, worse, a restart
+        would then "resume" from step 0 instead of calling init_fn fresh).
+        The final, possibly off-grid state is the loop's responsibility —
+        call `finalize(step, state)` at loop exit.
+        """
+        if step == 0 or step % self.save_every != 0:
             return False
+        return self._save(step, state, extra)
+
+    def finalize(self, step: int, state: Any,
+                 extra: Optional[Dict] = None) -> bool:
+        """Checkpoint the loop-exit state (even off the save_every grid) and
+        join any in-flight async write.  No-op when `step` was already saved
+        by `maybe_save` (exit step on the grid)."""
+        if step == self._last_saved or step == 0:
+            self.flush()
+            return False
+        saved = self._save(step, state, extra)
+        self.flush()
+        return saved
+
+    def _save(self, step: int, state: Any, extra: Optional[Dict]) -> bool:
+        from repro.checkpoint import ckpt as ckpt_lib
         self.flush()
         self._pending = ckpt_lib.save(self.ckpt_dir, step, state, extra=extra,
                                       async_write=self.async_save)
+        self._last_saved = step
         return True
 
     def flush(self):
@@ -60,31 +88,87 @@ class WorkQueue:
     `n_items` units are split into `tile`-sized work units. `claim()` leases
     the first tile that is unfinished and either unclaimed or past its lease
     `timeout` (seconds) — a crashed/straggling worker's tile is simply handed
-    to the next claimer. `complete(idx)` retires a tile.
+    to the next claimer.
+
+    Concurrency contract (this is what makes the queue safe as the
+    `repro.serve` scheduler):
+
+    * every method takes an internal `threading.Lock`, so claims from
+      concurrent pump threads never hand the same lease out twice;
+    * `claim()` returns ``(idx, span, token)`` where `token` is the lease
+      *generation* for that tile — re-leasing an expired tile bumps the
+      generation, so a timed-out straggler that wakes up late and calls
+      `complete(idx, token)` with its stale token is a no-op instead of
+      retiring work that a live worker re-claimed (and may be mid-flight
+      on, or may have claimed a *different attempt* of).
+    * `push(payload)` appends a work item dynamically (request arrival).
     """
 
-    def __init__(self, n_items: int, tile: int, timeout: float = 60.0):
+    def __init__(self, n_items: int = 0, tile: int = 1,
+                 timeout: float = 60.0):
         self.tiles: List[Tuple[int, int]] = [
             (lo, min(lo + tile, n_items)) for lo in range(0, n_items, tile)]
         self.timeout = float(timeout)
         self._done = [False] * len(self.tiles)
         self._leased_at: List[Optional[float]] = [None] * len(self.tiles)
+        self._gen = [0] * len(self.tiles)
+        self._lock = threading.Lock()
 
-    def claim(self) -> Optional[Tuple[int, Tuple[int, int]]]:
+    def push(self, payload: Any) -> int:
+        """Append one work item (any payload; tile spans are just the
+        original payload shape). Returns its index."""
+        with self._lock:
+            self.tiles.append(payload)
+            self._done.append(False)
+            self._leased_at.append(None)
+            self._gen.append(0)
+            return len(self.tiles) - 1
+
+    def claim(self) -> Optional[Tuple[int, Any, int]]:
+        """Lease the first available item: (idx, payload, lease token)."""
         now = time.monotonic()
-        for idx, done in enumerate(self._done):
-            if done:
-                continue
-            leased = self._leased_at[idx]
-            if leased is None or now - leased >= self.timeout:
-                self._leased_at[idx] = now
-                return idx, self.tiles[idx]
+        with self._lock:
+            for idx, done in enumerate(self._done):
+                if done:
+                    continue
+                leased = self._leased_at[idx]
+                if leased is None or now - leased >= self.timeout:
+                    self._leased_at[idx] = now
+                    self._gen[idx] += 1
+                    return idx, self.tiles[idx], self._gen[idx]
         return None
 
-    def complete(self, idx: int):
-        self._done[idx] = True
-        self._leased_at[idx] = None
+    def complete(self, idx: int, token: int) -> bool:
+        """Retire item `idx` iff `token` is its *current* lease generation.
+
+        Returns True when the completion was accepted; False for a stale
+        token (the lease expired and the item was re-leased — the caller's
+        result must be discarded, the live claimer owns the item now)."""
+        with self._lock:
+            if self._done[idx]:
+                return False
+            if token != self._gen[idx]:
+                return False
+            self._done[idx] = True
+            self._leased_at[idx] = None
+            return True
+
+    def release(self, idx: int, token: int) -> bool:
+        """Voluntarily return a leased item to the pool (still unfinished).
+        Stale tokens are ignored, like `complete`."""
+        with self._lock:
+            if self._done[idx] or token != self._gen[idx]:
+                return False
+            self._leased_at[idx] = None
+            return True
 
     @property
     def finished(self) -> bool:
-        return all(self._done)
+        with self._lock:
+            return all(self._done)
+
+    @property
+    def pending(self) -> int:
+        """Items not yet retired (leased or not)."""
+        with self._lock:
+            return sum(1 for d in self._done if not d)

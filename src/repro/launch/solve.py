@@ -50,7 +50,7 @@ def main():
                 claim = q.claim()
                 if claim is None:
                     break
-                idx, (start, size) = claim
+                idx, (start, size), tok = claim
                 u0s, ps = ep.materialize()
                 sub = EnsembleProblem(ep.prob, size,
                                       u0s=u0s[start:start + size],
@@ -60,7 +60,7 @@ def main():
                                      t0=0.0, tf=1.0, save_every=1000,
                                      lane_tile=args.lane_tile)
                 outs[start:start + size] = np.asarray(res.u_final)
-                q.complete(idx)
+                q.complete(idx, tok)
             u_final = outs
         else:
             res = solve_ensemble(ep, mesh=mesh, ensemble=args.ensemble,

@@ -1,0 +1,13 @@
+"""Continuous-batching ensemble service (docs/architecture.md, "Serving").
+
+Async submit/poll serving of DE ensemble solves over fixed-shape resumable
+slots: finished lanes retire early and are refilled from the request queue
+without recompilation, so heterogeneous small requests share one compiled
+program at full lane occupancy.
+"""
+from .service import (Backpressure, EnsembleService, ServeResult,
+                      SolveRequest, Ticket)
+from .slots import BatchPool, SlotPool
+
+__all__ = ["Backpressure", "EnsembleService", "ServeResult", "SolveRequest",
+           "Ticket", "BatchPool", "SlotPool"]

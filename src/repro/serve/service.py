@@ -1,0 +1,317 @@
+"""The serving front end: async submit/poll over the slot pools.
+
+`EnsembleService` is a single-process continuous-batching server for DE
+ensembles (the "solver as a service" shape of the paper's throughput story):
+
+* **submit** is non-blocking: it validates the request, assigns a GLOBAL
+  `lane_offset` (the counter-RNG stream base — results are bitwise those of a
+  fresh `solve_ensemble_local(..., seed=service.seed, lane_offset=<assigned>)`),
+  pushes the request onto the hardened `repro.dist.fault.WorkQueue` (leases +
+  generation tokens: a pump that dies mid-request loses its lease and the
+  request is re-served), and returns a `Ticket`.
+* **coalescing**: requests are routed to pools by capability key.  Resumable
+  methods (erk, fixed-dt sde) share a `SlotPool` per
+  (problem, method, n, n_params, dtype, adaptive, rtol, atol, event) — time
+  spans, step sizes and step counts ride IN the carry, so heterogeneous
+  requests fill the same compiled slots.  Non-resumable methods coalesce into
+  one-shot `BatchPool` solves keyed on the full solver signature.
+* **pump/drain** advance the pools: `pump()` runs one scheduling round
+  (admit staged requests, one bounded segment per busy slot pool, one batch
+  per staged batch pool); `drain()` pumps until quiet.  `start()` runs the
+  pump loop on a background thread for true submit-from-anywhere serving.
+* **backpressure**: `submit` raises `Backpressure` once `max_pending`
+  requests are in flight — callers retry after polling tickets.
+* **accounting**: per-tenant nf/njac/nfact and lane totals, folded from the
+  same per-lane kernel stats rows every engine already reports.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.methods import get_method
+from repro.dist.fault import WorkQueue
+
+
+class Backpressure(RuntimeError):
+    """Raised by submit() when the service is at max_pending requests."""
+
+
+@dataclass
+class ServeResult:
+    """Final-state result of one served request (serving has no dense-output
+    path: snapshots belong to offline solves — see docs/architecture.md)."""
+    u_final: np.ndarray      # (N, n)
+    t_final: np.ndarray      # (N,)
+    naccept: np.ndarray      # (N,)
+    nreject: np.ndarray      # (N,)
+    nf: int
+    njac: int
+    nfact: int
+    status: int              # max over lanes (0 ok, 1 budget, 2 dtmin)
+    event_t: np.ndarray      # (N,) located event times (inf = no event)
+    event_count: np.ndarray  # (N,)
+
+
+@dataclass
+class SolveRequest:
+    """One ensemble solve in flight.  Internal to the service."""
+    prob: Any
+    alg: str
+    u0s: np.ndarray
+    ps: np.ndarray
+    t0: float
+    tf: float
+    dt0: float
+    n_steps: Optional[int]
+    adaptive: Optional[bool]
+    rtol: float
+    atol: float
+    max_iters: int
+    event: Any
+    tenant: str
+    lane_offset: int
+    n_lanes: int
+    njac: int = 0
+    nfact: int = 0
+    _rows: dict = field(default_factory=dict)
+    _wq_lease: Optional[tuple] = None
+
+    def record_row(self, row: int, res: dict) -> bool:
+        """Store one finished lane; True when the request is complete."""
+        self._rows[row] = res
+        return len(self._rows) == self.n_lanes
+
+    def assemble(self) -> ServeResult:
+        rows = [self._rows[i] for i in range(self.n_lanes)]
+        return ServeResult(
+            u_final=np.stack([r["u_final"] for r in rows]),
+            t_final=np.asarray([r["t_final"] for r in rows]),
+            naccept=np.asarray([r["naccept"] for r in rows], np.int64),
+            nreject=np.asarray([r["nreject"] for r in rows], np.int64),
+            nf=int(sum(r["nf"] for r in rows)),
+            njac=self.njac, nfact=self.nfact,
+            status=max(r["status"] for r in rows),
+            event_t=np.asarray([r["event_t"] for r in rows]),
+            event_count=np.asarray([r["event_count"] for r in rows],
+                                   np.int64))
+
+
+class Ticket:
+    """Async handle returned by submit(): poll `done`, read `result`."""
+
+    def __init__(self, req: SolveRequest):
+        self._req = req
+        self._event = threading.Event()
+        self.result: Optional[ServeResult] = None
+        self.submitted_at = time.monotonic()
+        self.completed_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the request completes (background-thread serving)."""
+        return self._event.wait(timeout)
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    def _complete(self, result: ServeResult) -> None:
+        self.result = result
+        self.completed_at = time.monotonic()
+        self._event.set()
+
+
+class EnsembleService:
+    """Continuous-batching DE ensemble server (single device, many tenants).
+
+    seed          — the service-global RNG seed: every SDE request draws the
+                    (seed; step, global lane, row) Threefry stream at its
+                    assigned lane_offset, so any served result can be
+                    reproduced offline bitwise.
+    max_pending   — in-flight request cap; submit raises Backpressure beyond.
+    slot_width    — lanes per SlotPool (fixed compiled width; multiples of 4
+                    keep XLA codegen width-compatible with the fresh kernel
+                    paths — see docs/architecture.md).
+    segment_steps — solver attempts per pump segment: the
+                    retire-latency / dispatch-overhead knob.
+    """
+
+    def __init__(self, seed: int = 0, max_pending: int = 64,
+                 slot_width: int = 8, segment_steps: int = 64,
+                 queue_timeout: float = 300.0):
+        self.seed = int(seed)
+        self.max_pending = int(max_pending)
+        self.slot_width = int(slot_width)
+        self.segment_steps = int(segment_steps)
+        self._wq = WorkQueue(timeout=queue_timeout)
+        self._pools: Dict[tuple, Any] = {}
+        self._tickets: Dict[int, Ticket] = {}   # id(req) -> ticket
+        self._lane_counter = 0
+        self._pending = 0
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.accounting: Dict[str, Dict[str, int]] = {}
+
+    # -- submission -----------------------------------------------------------
+
+    def submit(self, eprob, alg: str = "tsit5", *, tenant: str = "default",
+               t0=None, tf=None, dt0: float = 1e-2,
+               n_steps: Optional[int] = None, adaptive: Optional[bool] = None,
+               rtol: float = 1e-6, atol: float = 1e-6,
+               max_iters: int = 100_000, event=None,
+               ensemble: str = "kernel", backend: str = "xla") -> Ticket:
+        """Enqueue one ensemble solve; returns immediately with a Ticket.
+
+        eprob: `EnsembleProblem` (u0s/ps materialized host-side).  Defaults
+        mirror `solve_ensemble_local`; fixed-dt SDE requests take
+        n_steps (default round((tf-t0)/dt0)).
+        """
+        with self._lock:
+            if self._pending >= self.max_pending:
+                raise Backpressure(
+                    f"{self._pending} requests in flight (max_pending="
+                    f"{self.max_pending}); poll tickets and retry")
+            self._pending += 1
+        spec = get_method(alg)
+        prob = eprob.prob
+        u0s, ps = (np.asarray(a) for a in eprob.materialize())
+        t0 = float(prob.tspan[0] if t0 is None else t0)
+        tf = float(prob.tspan[1] if tf is None else tf)
+        if adaptive is None:
+            adaptive = spec.adaptive if spec.family != "sde" else False
+        if spec.family == "sde" and not adaptive and n_steps is None:
+            n_steps = int(round((tf - t0) / dt0))
+        with self._lock:
+            lane_offset = self._lane_counter
+            self._lane_counter += u0s.shape[0]
+        req = SolveRequest(
+            prob=prob, alg=spec.name, u0s=u0s, ps=ps, t0=t0, tf=tf,
+            dt0=float(dt0), n_steps=n_steps, adaptive=adaptive,
+            rtol=float(rtol), atol=float(atol), max_iters=int(max_iters),
+            event=event, tenant=tenant, lane_offset=lane_offset,
+            n_lanes=u0s.shape[0])
+        ticket = Ticket(req)
+        self._tickets[id(req)] = ticket
+        self._wq.push(req)
+        return ticket
+
+    # -- routing --------------------------------------------------------------
+
+    def _resumable(self, spec, req) -> bool:
+        if not spec.resumable:
+            return False
+        if spec.family == "sde" and req.adaptive:
+            return False  # Brownian-tree state is dt-path dependent
+        return True
+
+    def _pool_for(self, req) -> Any:
+        from .slots import BatchPool, SlotPool
+        spec = get_method(req.alg)
+        dtype = req.u0s.dtype
+        if self._resumable(spec, req):
+            key = ("slot", id(req.prob), spec.name, req.u0s.shape[1],
+                   req.ps.shape[1], dtype.str, bool(req.adaptive),
+                   req.rtol, req.atol, id(req.event) if req.event else None)
+            if key not in self._pools:
+                self._pools[key] = SlotPool(
+                    spec, req.prob, n=req.u0s.shape[1],
+                    n_params=req.ps.shape[1], dtype=dtype,
+                    width=self.slot_width, segment_steps=self.segment_steps,
+                    adaptive=req.adaptive, rtol=req.rtol, atol=req.atol,
+                    event=req.event, seed=self.seed,
+                    on_complete=self._finish)
+            return self._pools[key]
+        # full-signature coalescing; adaptive SDE keys on lane_offset too
+        # (globally indexed Brownian streams must not be re-based)
+        key = ("batch", id(req.prob), spec.name, req.u0s.shape[1],
+               req.ps.shape[1], dtype.str, req.t0, req.tf, req.dt0,
+               req.n_steps, bool(req.adaptive), req.rtol, req.atol,
+               req.max_iters, id(req.event) if req.event else None,
+               req.lane_offset if spec.family == "sde" else None)
+        if key not in self._pools:
+            kw = dict(ensemble="kernel", backend="xla", t0=req.t0, tf=req.tf,
+                      dt0=req.dt0, rtol=req.rtol, atol=req.atol,
+                      max_iters=req.max_iters, event=req.event)
+            if spec.family == "sde":
+                kw.update(adaptive=True, seed=self.seed,
+                          lane_offset=req.lane_offset)
+            self._pools[key] = BatchPool(spec, req.prob, solve_kwargs=kw,
+                                         on_complete=self._finish)
+        return self._pools[key]
+
+    # -- completion -----------------------------------------------------------
+
+    def _finish(self, req: SolveRequest) -> None:
+        result = req.assemble()
+        acct = self.accounting.setdefault(
+            req.tenant, dict(requests=0, lanes=0, nf=0, njac=0, nfact=0))
+        acct["requests"] += 1
+        acct["lanes"] += req.n_lanes
+        acct["nf"] += result.nf
+        acct["njac"] += result.njac
+        acct["nfact"] += result.nfact
+        if req._wq_lease is not None:
+            idx, tok = req._wq_lease
+            self._wq.complete(idx, tok)
+        with self._lock:
+            self._pending -= 1
+        self._tickets.pop(id(req))._complete(result)
+
+    # -- scheduling -----------------------------------------------------------
+
+    def pump(self) -> bool:
+        """One scheduling round; True if any pool still has or did work."""
+        while (claim := self._wq.claim()) is not None:
+            idx, req, tok = claim
+            req._wq_lease = (idx, tok)
+            self._pool_for(req).admit(req)
+        worked = False
+        for pool in list(self._pools.values()):
+            worked = pool.pump() or worked
+        return worked or any(p.busy for p in self._pools.values()) \
+            or not self._wq.finished
+
+    def drain(self) -> None:
+        """Pump until every submitted request has completed."""
+        while self.pump():
+            pass
+
+    def poll(self, ticket: Ticket) -> Optional[ServeResult]:
+        """Non-blocking result check (pump once if serving inline)."""
+        if not ticket.done and self._thread is None:
+            self.pump()
+        return ticket.result
+
+    # -- background serving ---------------------------------------------------
+
+    def start(self) -> None:
+        """Serve on a background thread: submit from anywhere, wait() tickets."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if not self.pump():
+                    time.sleep(0.002)
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

@@ -1,0 +1,239 @@
+"""Slot pools — the execution layer of the continuous-batching service.
+
+Two pool kinds, one per capability class (`MethodSpec.resumable`):
+
+`SlotPool` (resumable methods: erk, fixed-dt sde)
+    B fixed-shape lane slots stepped by ONE compiled resumable program
+    (`repro.core.ensemble.ResumableEngine`).  Each slot holds one lane of one
+    request; per-lane constants (p, tf / n_steps, lane index) live in the
+    carry, so a retired slot is refilled with a DIFFERENT request's lane via
+    a full-width masked merge — no recompilation, ever.  Progress happens in
+    bounded segments; between segments the pool harvests done lanes, enforces
+    per-request attempt budgets, and admits staged lanes into free slots.
+    Lane results are bitwise-identical to a fresh
+    `solve_ensemble_local(..., ensemble="kernel", backend="xla")` of the same
+    request (same loop body, per-lane control, counter-RNG streams keyed by
+    GLOBAL lane index).
+
+`BatchPool` (non-resumable methods: rosenbrock, adaptive sde)
+    Requests sharing the FULL solver signature are concatenated and solved in
+    one `solve_ensemble_local` call per pump.  Rosenbrock's lazy-W refresh
+    gates are batch-reduced predicates (they couple lanes), so its lanes
+    cannot retire early — coalescing into one batch is the right serving
+    shape there.  Adaptive SDE additionally keys on the request's
+    `lane_offset` (its Brownian streams are globally indexed), so those
+    requests ride the same machinery uncoalesced.  The solve returns
+    ensemble-total nf/njac/nfact; they are attributed to requests
+    proportionally to per-lane attempt counts (documented estimate — the
+    engines do not track per-lane RHS totals on these paths).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core.ensemble import make_resumable_engine, solve_ensemble_local
+from repro.core.problem import EnsembleProblem
+
+
+def _finalize_status(status: int, done: bool) -> int:
+    # mirror the front door: carried status wins; else 0 if done, 1 if not
+    return int(status) if status > 0 else (0 if done else 1)
+
+
+class SlotPool:
+    """Continuous batching over B fixed slots of one resumable engine."""
+
+    def __init__(self, spec, prob, *, n: int, n_params: int, dtype,
+                 width: int = 8, segment_steps: int = 64, adaptive=None,
+                 rtol: float = 1e-6, atol: float = 1e-6, event=None,
+                 seed: int = 0,
+                 on_complete: Optional[Callable] = None):
+        self.family = spec.family
+        self.B = int(width)
+        self.n = int(n)
+        self.dtype = np.dtype(dtype)
+        self.on_complete = on_complete
+        self.engine = make_resumable_engine(
+            spec, prob, adaptive=adaptive, rtol=rtol, atol=atol, event=event,
+            seed=seed, segment_steps=segment_steps)
+        B = self.B
+        # persistent host-side staging buffers (full width; non-refilled
+        # columns carry stale-but-finite filler values that the masked merge
+        # discards).  Fillers retire in one iteration: tf == t0 (erk) /
+        # n_steps == 0 (sde), so untouched columns never cost segment work.
+        self._stage_u0 = np.ones((n, B), self.dtype)
+        self._stage_p = np.ones((n_params, B), self.dtype)
+        self._stage_t0 = np.zeros(B, self.dtype)
+        if self.family == "sde":
+            self._stage_dt = np.ones(B, self.dtype)
+            self._stage_nsteps = np.zeros(B, np.int32)
+            self._stage_lane = np.zeros(B, np.uint32)
+        else:
+            self._stage_tf = np.zeros(B, self.dtype)
+            self._stage_dt0 = np.ones(B, self.dtype)
+        self.slots = [None] * B          # slot -> (request, row) | None
+        self.staged = deque()            # lanes awaiting a free slot
+        self.carry = None
+        self._scrub = set()              # budget-evicted slots to force-done
+
+    # -- request admission ----------------------------------------------------
+
+    def admit(self, req) -> None:
+        for row in range(req.n_lanes):
+            self.staged.append((req, row))
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.staged) or any(s is not None for s in self.slots)
+
+    # -- one scheduling round -------------------------------------------------
+
+    def _stage_lane_cols(self, slot: int, req, row: int) -> None:
+        self._stage_u0[:, slot] = req.u0s[row]
+        self._stage_p[:, slot] = req.ps[row]
+        self._stage_t0[slot] = req.t0
+        if self.family == "sde":
+            self._stage_dt[slot] = req.dt0
+            self._stage_nsteps[slot] = req.n_steps
+            self._stage_lane[slot] = req.lane_offset + row
+        else:
+            self._stage_tf[slot] = req.tf
+            self._stage_dt0[slot] = req.dt0
+
+    def _stage_filler(self, slot: int) -> None:
+        self._stage_t0[slot] = 0.0
+        if self.family == "sde":
+            self._stage_nsteps[slot] = 0
+        else:
+            self._stage_tf[slot] = 0.0
+
+    def _fresh(self):
+        if self.family == "sde":
+            return self.engine.fresh(self._stage_u0, self._stage_p,
+                                     self._stage_t0, self._stage_dt,
+                                     self._stage_nsteps, self._stage_lane)
+        return self.engine.fresh(self._stage_u0, self._stage_p,
+                                 self._stage_t0, self._stage_tf,
+                                 self._stage_dt0)
+
+    def pump(self) -> bool:
+        """Refill free slots from the staged queue, advance one segment,
+        harvest retired lanes.  Returns True if the pool did work."""
+        if not self.busy:
+            return False
+        mask = np.zeros(self.B, bool)
+        for slot in sorted(self._scrub):
+            if self.slots[slot] is None and not self.staged:
+                self._stage_filler(slot)
+                mask[slot] = True
+        self._scrub.clear()
+        for slot in range(self.B):
+            if self.slots[slot] is None and self.staged:
+                req, row = self.staged.popleft()
+                self.slots[slot] = (req, row)
+                self._stage_lane_cols(slot, req, row)
+                mask[slot] = True
+        refill = self._fresh() if mask.any() or self.carry is None \
+            else self.carry
+        if self.carry is None:
+            self.carry = refill
+            mask = np.zeros(self.B, bool)
+            refill = self.carry
+        self.carry = self.engine.step_segment(self.carry, mask, refill)
+        self._harvest()
+        return True
+
+    def _harvest(self) -> None:
+        h = jax.device_get(self.carry)
+        for slot in range(self.B):
+            if self.slots[slot] is None:
+                continue
+            req, row = self.slots[slot]
+            done = bool(h["done"][slot])
+            attempts = int(h["naccept"][slot]) + int(h.get(
+                "nreject", np.zeros(self.B, np.int32))[slot])
+            if not done and attempts < req.max_iters:
+                continue
+            row_res = dict(
+                u_final=np.asarray(h["u"][:, slot]),
+                t_final=float(h["t_out"][slot] if "t_out" in h
+                              else h["t"][slot]),
+                naccept=int(h["naccept"][slot]),
+                nreject=int(h["nreject"][slot]) if "nreject" in h else 0,
+                nf=int(h["nf"][slot]),
+                status=_finalize_status(int(h["status"][slot]), done),
+                event_t=float(h["event_t"][slot]),
+                event_count=int(h["event_count"][slot]),
+            )
+            finished = req.record_row(row, row_res)
+            self.slots[slot] = None
+            if not done:
+                # over-budget lane: free the slot now, force-retire the
+                # carry column next pump so it stops consuming segment work
+                self._scrub.add(slot)
+            if finished and self.on_complete is not None:
+                self.on_complete(req)
+
+
+class BatchPool:
+    """Coalesced one-shot batches for non-resumable methods."""
+
+    def __init__(self, spec, prob, *, solve_kwargs: dict,
+                 on_complete: Optional[Callable] = None):
+        self.spec = spec
+        self.prob = prob
+        self.solve_kwargs = dict(solve_kwargs)
+        self.on_complete = on_complete
+        self.staged = []
+
+    def admit(self, req) -> None:
+        self.staged.append(req)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.staged)
+
+    def pump(self) -> bool:
+        if not self.staged:
+            return False
+        reqs, self.staged = self.staged, []
+        u0s = np.concatenate([r.u0s for r in reqs], axis=0)
+        ps = np.concatenate([r.ps for r in reqs], axis=0)
+        ep = EnsembleProblem(self.prob, u0s.shape[0], u0s=u0s, ps=ps)
+        res = solve_ensemble_local(ep, alg=self.spec.name,
+                                   **self.solve_kwargs)
+        naccept = np.broadcast_to(np.asarray(res.naccept), (u0s.shape[0],))
+        nreject = np.broadcast_to(np.asarray(res.nreject), (u0s.shape[0],))
+        attempts = naccept.astype(np.int64) + nreject.astype(np.int64)
+        total_att = max(int(attempts.sum()), 1)
+        u_final = np.asarray(res.u_final)
+        t_final = np.broadcast_to(np.asarray(res.t_final), (u0s.shape[0],))
+        status = int(np.max(np.asarray(res.status)))
+        nf, njac, nfact = (int(np.asarray(v)) for v in
+                           (res.nf, res.njac, res.nfact))
+        off = 0
+        for req in reqs:
+            k = req.n_lanes
+            sl = slice(off, off + k)
+            # ensemble-total counters attributed by attempt share (estimate)
+            share = int(attempts[sl].sum()) / total_att
+            for row in range(k):
+                req.record_row(row, dict(
+                    u_final=u_final[off + row],
+                    t_final=float(t_final[off + row]),
+                    naccept=int(naccept[off + row]),
+                    nreject=int(nreject[off + row]),
+                    nf=int(round(nf * share / k)),
+                    status=status,
+                    event_t=float("inf"), event_count=0,
+                ))
+            req.njac = int(round(njac * share))
+            req.nfact = int(round(nfact * share))
+            off += k
+            if self.on_complete is not None:
+                self.on_complete(req)
+        return True

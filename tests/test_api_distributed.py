@@ -34,3 +34,35 @@ def test_solve_ensemble_requires_divisibility():
     r = solve_ensemble(ep, mesh=mesh, ensemble="kernel", adaptive=False,
                        dt0=1e-3, t0=0.0, tf=1.0, save_every=1000, lane_tile=4)
     assert r.u_final.shape == (7, 3)
+
+
+def test_ensemble_moments_f32_large_mean_regression():
+    """Centered two-pass variance: the old one-pass `E[X2] - mean**2` form
+    cancels catastrophically in f32 when mean >> std (a GBM ensemble at
+    large drift) — it lost every correct digit and could even come back
+    negative.  Bar: match an f64 numpy reference on the same samples."""
+    from repro.configs.de_problems import gbm_problem
+    from repro.core import EnsembleProblem, solve_ensemble_local
+
+    # GBM at large drift: mean e^{r*tf} ~ 8e2, std/mean ~ v*sqrt(tf) ~ 1e-3
+    prob = gbm_problem(r=6.7, v=0.001, dtype=jnp.float32)
+    N = 4096
+    ep = EnsembleProblem(prob, N,
+                         u0s=np.full((N, 3), 1.0, np.float32),
+                         ps=np.tile(np.asarray([6.7, 0.001], np.float32),
+                                    (N, 1)))
+    res = solve_ensemble_local(ep, alg="em", ensemble="kernel", backend="xla",
+                               t0=0.0, tf=1.0, dt0=1e-2, n_steps=100,
+                               save_every=100, seed=11)
+    us = res.u_final                                   # (N, 1) f32, mean>>std
+    ref_mean = np.asarray(us, np.float64).mean(axis=0)
+    ref_var = np.asarray(us, np.float64).var(axis=0)
+    assert float(ref_mean[0]) / np.sqrt(float(ref_var[0])) > 300.0
+
+    for mesh, axes in ((None, None), (make_local_mesh(), ("data",))):
+        mean, var = ensemble_moments(us, mesh=mesh, shard_axes=axes)
+        assert np.all(np.asarray(var) >= 0.0)
+        np.testing.assert_allclose(np.asarray(mean, np.float64), ref_mean,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(var, np.float64), ref_var,
+                                   rtol=5e-2)

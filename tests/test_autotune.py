@@ -7,6 +7,7 @@ test tunes into a pytest tmpdir cache (never ~/.cache), and the round-trip
 test asserts the second resolve is a PURE cache hit — zero timing calls.
 """
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -282,3 +283,62 @@ def test_cold_cache_under_jit_falls_back(cache, monkeypatch,
                                backend=at.DEFAULT_STRATEGY[1],
                                t0=0.0, tf=0.5, dt0=1e-2).u_final
     assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# concurrent writers (the serve/mesh multi-process tuning scenario)
+# ---------------------------------------------------------------------------
+
+_WRITER_SCRIPT = r"""
+import os, sys, time
+from repro.core import autotune as at
+
+path, key, order = sys.argv[1], sys.argv[2], sys.argv[3]
+sdir = os.path.dirname(path)
+
+def wait_for(*names, timeout=60.0):
+    t0 = time.monotonic()
+    while not all(os.path.exists(os.path.join(sdir, n)) for n in names):
+        if time.monotonic() - t0 > timeout:
+            sys.exit(3)
+        time.sleep(0.01)
+
+# classic lost-update shape: BOTH processes read the (empty) file, then each
+# adds its own key and replaces.  The barrier files make the interleaving
+# deterministic: loads strictly before either save, saves strictly ordered.
+entries = dict(at._load_entries(path))
+entries[key] = {"strategy": "kernel", "backend": "xla", "lane_tile": None,
+                "jax": "test", "tuned_at_N": 1, "timings": {}}
+open(os.path.join(sdir, "ready_" + key), "w").close()
+wait_for("ready_cfgA", "ready_cfgB")
+if order == "second":
+    wait_for("saved_first")
+at._save_entries(path, entries)
+if order == "first":
+    open(os.path.join(sdir, "saved_first"), "w").close()
+"""
+
+
+def test_concurrent_writers_merge_not_last_wins(tmp_path):
+    """Two processes tune different configs; the later writer must MERGE,
+    not clobber — both entries survive in the JSON."""
+    import subprocess
+    import sys
+
+    path = str(tmp_path / "autotune.json")
+    src = os.path.join(os.path.dirname(at.__file__), "..", "..")
+    env = {**os.environ,
+           "PYTHONPATH": os.path.abspath(src)
+           + os.pathsep + os.environ.get("PYTHONPATH", "")}
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _WRITER_SCRIPT, path, key, order], env=env)
+        for key, order in (("cfgA", "first"), ("cfgB", "second"))]
+    for p in procs:
+        assert p.wait(timeout=300) == 0
+    with open(path) as fh:
+        data = json.load(fh)
+    assert set(data["entries"]) == {"cfgA", "cfgB"}, (
+        "last writer dropped the concurrent entry")
+    # a fresh in-process load (cold memory layer) sees the union too
+    at.clear_memory_cache()
+    assert set(at._load_entries(path)) == {"cfgA", "cfgB"}

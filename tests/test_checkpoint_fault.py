@@ -109,15 +109,57 @@ def test_data_determinism_and_cursor():
     pipe.close()
 
 
+def test_supervisor_skips_step_zero(tmp_path):
+    """0 % save_every == 0 used to checkpoint the untouched init state."""
+    sup = TrainSupervisor(str(tmp_path), save_every=2)
+    assert not sup.maybe_save(0, {"w": jnp.zeros(2)})
+    assert ckpt_lib.available_steps(str(tmp_path)) == []
+    assert sup.maybe_save(2, {"w": jnp.ones(2)})
+    assert ckpt_lib.available_steps(str(tmp_path)) == [2]
+
+
+def test_supervisor_finalize_offgrid(tmp_path):
+    """Loop exit off the save_every grid still persists the final state."""
+    sup = TrainSupervisor(str(tmp_path), save_every=10, async_save=True)
+    state = {"w": jnp.zeros(3)}
+    for s in range(1, 8):   # never hits the grid
+        state = {"w": state["w"] + 1}
+        assert not sup.maybe_save(s, state)
+    assert sup.finalize(7, state, {"cursor": 7})
+    step, out, extra = ckpt_lib.restore_latest(str(tmp_path), state)
+    assert step == 7 and extra["cursor"] == 7
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.full(3, 7.0))
+    # finalize on an already-saved grid step is a no-op (no duplicate write)
+    sup2 = TrainSupervisor(str(tmp_path), save_every=7)
+    sup2.maybe_save(14, state)
+    assert not sup2.finalize(14, state)
+    assert ckpt_lib.available_steps(str(tmp_path)) == [7, 14]
+
+
 def test_work_queue_straggler_reassignment():
     q = WorkQueue(n_items=100, tile=30, timeout=0.0)  # immediate timeout
     a = q.claim()
     assert a is not None
     b = q.claim()  # timeout=0 => the same tile is reassignable immediately
     assert b[0] == a[0]
-    q.complete(a[0])
+    # the straggler's token went stale the moment the tile was re-leased
+    assert not q.complete(a[0], a[2])
+    assert q.complete(b[0], b[2])
     c = q.claim()
     assert c[0] != a[0]
-    for idx in range(len(q.tiles)):
-        q.complete(idx)
+    while (nxt := q.claim()) is not None:
+        q.complete(nxt[0], nxt[2])
+    q.complete(c[0], c[2])
+    assert q.finished
+
+
+def test_work_queue_push_dynamic():
+    q = WorkQueue(timeout=60.0)
+    assert q.claim() is None
+    i = q.push(("req", 7))
+    idx, payload, tok = q.claim()
+    assert idx == i and payload == ("req", 7)
+    # a live lease is not reassignable before timeout
+    assert q.claim() is None
+    assert q.complete(idx, tok)
     assert q.finished

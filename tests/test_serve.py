@@ -1,0 +1,277 @@
+"""Continuous-batching service (repro.serve): bitwise slot recycling + API.
+
+The serving bar: a request solved in RECYCLED slots — admitted mid-stream
+while other requests are in flight, at its own counter-RNG lane_offset — must
+return results bitwise-identical to a fresh
+`solve_ensemble_local(..., ensemble="kernel", backend="xla")` of the same
+request.  Widths are multiples of 4 throughout (pool width 8, requests of 4,
+fresh references at lane_tile=4): XLA codegen is width-sensitive at the ulp
+level, and multiple-of-4 widths are the measured bitwise-compatible set
+(docs/architecture.md).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.de_problems import gbm_problem, lorenz_ensemble
+from repro.core import EnsembleProblem, solve_ensemble_local
+from repro.core.events import Event
+from repro.core.methods import get_method
+from repro.serve import Backpressure, EnsembleService
+
+F32 = jnp.float32
+
+
+def _lorenz_requests():
+    ep = lorenz_ensemble(12, dtype=F32)
+    u0s, ps = (np.asarray(a) for a in ep.materialize())
+    subs = [EnsembleProblem(ep.prob, 4, u0s=u0s[4 * i:4 * i + 4],
+                            ps=ps[4 * i:4 * i + 4]) for i in range(3)]
+    return ep.prob, subs
+
+
+def _fresh_erk(sub, tf):
+    return solve_ensemble_local(sub, alg="tsit5", ensemble="kernel",
+                                backend="xla", t0=0.0, tf=tf, dt0=1e-2,
+                                rtol=1e-6, atol=1e-6, lane_tile=4)
+
+
+# ---------------------------------------------------------------------------
+# the recycling bar: ODE
+# ---------------------------------------------------------------------------
+
+def test_ode_recycled_slot_bitwise():
+    """A (short) retires early; C refills A's slots while B (long) is
+    mid-flight.  All three must equal their fresh solves bitwise."""
+    prob, (sa, sb, sc) = _lorenz_requests()
+    svc = EnsembleService(slot_width=8, segment_steps=20)
+    ta = svc.submit(sa, alg="tsit5", tf=0.5, dt0=1e-2)
+    tb = svc.submit(sb, alg="tsit5", tf=2.0, dt0=1e-2)
+    while not ta.done:
+        svc.pump()
+    assert not tb.done, "B must still be mid-flight when C is admitted"
+    tc = svc.submit(sc, alg="tsit5", tf=1.5, dt0=1e-2)
+    svc.drain()
+
+    for tkt, sub, tf in ((ta, sa, 0.5), (tb, sb, 2.0), (tc, sc, 1.5)):
+        ref = _fresh_erk(sub, tf)
+        assert np.array_equal(tkt.result.u_final, np.asarray(ref.u_final))
+        assert np.array_equal(tkt.result.naccept,
+                              np.asarray(ref.naccept).astype(np.int64))
+        assert tkt.result.nf == int(ref.nf)
+        assert tkt.result.status == 0
+
+    # the whole run shared ONE compiled segment program (no recompiles)
+    pool = next(iter(svc._pools.values()))
+    assert pool.engine._segment._cache_size() == 1
+
+
+def test_ode_event_recycled_bitwise():
+    """Terminal events through the serving path.  The recycling invariant is
+    asserted bitwise: a request solved in RECYCLED slots (after another
+    request retired from them) equals the same request served alone in a
+    fresh service.  Against the offline kernel path, event results agree to
+    analytic accuracy but not always bitwise — closure constants (p, tf)
+    constant-fold into the fused event-bisection code, while the resumable
+    carry keeps them as runtime arrays, and XLA may fuse the two differently
+    at the ulp level (the non-event ERK and all SDE paths are bitwise)."""
+    from repro.core.problem import ODEProblem
+
+    def mk():
+        return ODEProblem(lambda u, p, t: -p[0] * u, jnp.asarray([1.0], F32),
+                          jnp.asarray([1.0], F32), (0.0, 3.0))
+
+    lams = np.linspace(0.5, 2.0, 8, dtype=np.float32)
+    ev = Event(condition=lambda u, p, t: u[0] - 0.5, terminal=True,
+               direction=-1)
+    prob = mk()
+    sa = EnsembleProblem(prob, 4, ps=lams[:4, None])
+    sb = EnsembleProblem(prob, 4, ps=lams[4:, None])
+    svc = EnsembleService(slot_width=4, segment_steps=16)
+    ta = svc.submit(sa, alg="tsit5", t0=0.0, tf=3.0, dt0=1e-3, event=ev)
+    while not ta.done:
+        svc.pump()
+    tb = svc.submit(sb, alg="tsit5", t0=0.0, tf=3.0, dt0=1e-3, event=ev)
+    svc.drain()
+
+    # recycling is a bitwise no-op: B in A's recycled slots == B served alone
+    svc2 = EnsembleService(slot_width=4, segment_steps=16)
+    tb2 = svc2.submit(EnsembleProblem(mk(), 4, ps=lams[4:, None]),
+                      alg="tsit5", t0=0.0, tf=3.0, dt0=1e-3, event=ev)
+    svc2.drain()
+    assert np.array_equal(tb.result.u_final, tb2.result.u_final)
+    assert np.array_equal(tb.result.t_final, tb2.result.t_final)
+    assert np.array_equal(tb.result.event_t, tb2.result.event_t)
+    assert np.array_equal(tb.result.naccept, tb2.result.naccept)
+
+    # and both requests locate the analytic event time ln2/lam
+    for tkt, sl in ((ta, slice(0, 4)), (tb, slice(4, 8))):
+        ref = solve_ensemble_local(
+            EnsembleProblem(mk(), 4, ps=lams[sl, None]), alg="tsit5",
+            ensemble="kernel", backend="xla", t0=0.0, tf=3.0, dt0=1e-3,
+            event=ev, lane_tile=4)
+        np.testing.assert_allclose(tkt.result.u_final,
+                                   np.asarray(ref.u_final), rtol=1e-6)
+        np.testing.assert_allclose(tkt.result.event_t,
+                                   np.log(2.0) / lams[sl], rtol=1e-4)
+        assert np.all(tkt.result.event_count == 1)
+
+
+# ---------------------------------------------------------------------------
+# the recycling bar: SDE (counter-RNG stream keyed by GLOBAL lane index)
+# ---------------------------------------------------------------------------
+
+def _gbm_sub(N=4):
+    prob = gbm_problem(dtype=F32)
+    u0 = np.full((N, 3), 1.0, np.float32)
+    p = np.tile(np.asarray([1.5, 0.1], np.float32), (N, 1))
+    return EnsembleProblem(prob, N, u0s=u0, ps=p)
+
+
+def _fresh_sde(sub, n_steps, offset, seed, event=None):
+    return solve_ensemble_local(sub, alg="em", ensemble="kernel",
+                                backend="xla", t0=0.0, tf=n_steps * 1e-2,
+                                dt0=1e-2, n_steps=n_steps,
+                                save_every=n_steps, seed=seed,
+                                lane_offset=offset, event=event)
+
+
+def test_sde_recycled_slot_bitwise():
+    """Recycled SDE slots keep their request's Threefry stream: results
+    equal a fresh solve at the service-assigned lane_offset, bitwise."""
+    svc = EnsembleService(seed=13, slot_width=8, segment_steps=16)
+    sa, sb, sc = _gbm_sub(), _gbm_sub(), _gbm_sub()
+    ta = svc.submit(sa, alg="em", t0=0.0, tf=0.32, dt0=1e-2, n_steps=32)
+    tb = svc.submit(sb, alg="em", t0=0.0, tf=2.56, dt0=1e-2, n_steps=256)
+    while not ta.done:
+        svc.pump()
+    assert not tb.done
+    tc = svc.submit(sc, alg="em", t0=0.0, tf=1.28, dt0=1e-2, n_steps=128)
+    svc.drain()
+    for tkt, sub, n_steps in ((ta, sa, 32), (tb, sb, 256), (tc, sc, 128)):
+        ref = _fresh_sde(sub, n_steps, tkt._req.lane_offset, 13)
+        assert np.array_equal(tkt.result.u_final, np.asarray(ref.u_final))
+        assert tkt.result.nf == int(ref.nf)
+    assert ta._req.lane_offset != tc._req.lane_offset
+
+
+def test_sde_event_recycled_bitwise():
+    prob = gbm_problem(dtype=F32)
+    ev = Event(condition=lambda u, p, t: u[0] - 1.3, terminal=True,
+               direction=1)
+    svc = EnsembleService(seed=3, slot_width=8, segment_steps=16)
+    sa, sb = _gbm_sub(), _gbm_sub()
+    ta = svc.submit(sa, alg="em", t0=0.0, tf=0.32, dt0=1e-2, n_steps=32,
+                    event=ev)
+    while not ta.done:
+        svc.pump()
+    tb = svc.submit(sb, alg="em", t0=0.0, tf=2.56, dt0=1e-2, n_steps=256,
+                    event=ev)
+    svc.drain()
+    for tkt, sub, n_steps in ((ta, sa, 32), (tb, sb, 256)):
+        ref = _fresh_sde(sub, n_steps, tkt._req.lane_offset, 3, event=ev)
+        assert np.array_equal(tkt.result.u_final, np.asarray(ref.u_final))
+        assert np.array_equal(tkt.result.t_final, np.asarray(ref.t_final))
+
+
+# ---------------------------------------------------------------------------
+# service behavior: coalescing, accounting, backpressure, budgets, batches
+# ---------------------------------------------------------------------------
+
+def test_heterogeneous_requests_share_one_pool_and_program():
+    prob, subs = _lorenz_requests()
+    svc = EnsembleService(slot_width=8, segment_steps=32)
+    tkts = [svc.submit(s, alg="tsit5", tf=tf, dt0=1e-2)
+            for s, tf in zip(subs, (0.4, 0.9, 1.3))]
+    svc.drain()
+    assert all(t.done for t in tkts)
+    assert len(svc._pools) == 1          # one coalesce key
+    pool = next(iter(svc._pools.values()))
+    assert pool.engine._segment._cache_size() == 1
+
+
+def test_per_tenant_accounting():
+    prob, subs = _lorenz_requests()
+    svc = EnsembleService(slot_width=8)
+    ta = svc.submit(subs[0], alg="tsit5", tf=0.5, tenant="alice")
+    tb = svc.submit(subs[1], alg="tsit5", tf=0.5, tenant="bob")
+    tc = svc.submit(subs[2], alg="tsit5", tf=0.5, tenant="alice")
+    svc.drain()
+    acct = svc.accounting
+    assert acct["alice"]["requests"] == 2 and acct["bob"]["requests"] == 1
+    assert acct["alice"]["lanes"] == 8 and acct["bob"]["lanes"] == 4
+    assert acct["alice"]["nf"] == ta.result.nf + tc.result.nf
+    assert acct["bob"]["nf"] == tb.result.nf
+
+
+def test_backpressure_and_release():
+    prob, subs = _lorenz_requests()
+    svc = EnsembleService(slot_width=8, max_pending=2)
+    svc.submit(subs[0], alg="tsit5", tf=0.3)
+    svc.submit(subs[1], alg="tsit5", tf=0.3)
+    with pytest.raises(Backpressure):
+        svc.submit(subs[2], alg="tsit5", tf=0.3)
+    svc.drain()
+    t3 = svc.submit(subs[2], alg="tsit5", tf=0.3)   # capacity freed
+    svc.drain()
+    assert t3.done and t3.result.status == 0
+
+
+def test_attempt_budget_evicts_lane():
+    """A lane that exhausts its per-request attempt budget is force-retired
+    with status 1 and its slot is reusable (the front door's max_iters
+    contract, enforced host-side at harvest)."""
+    prob, subs = _lorenz_requests()
+    svc = EnsembleService(slot_width=8, segment_steps=16)
+    t1 = svc.submit(subs[0], alg="tsit5", tf=50.0, dt0=1e-2, max_iters=40)
+    svc.drain()
+    assert t1.done and t1.result.status == 1
+    t2 = svc.submit(subs[1], alg="tsit5", tf=0.5, dt0=1e-2)
+    svc.drain()
+    ref = _fresh_erk(subs[1], 0.5)
+    assert np.array_equal(t2.result.u_final, np.asarray(ref.u_final))
+
+
+def test_batch_pool_coalesces_rosenbrock():
+    from repro.configs.de_problems import rober_problem
+    rp = rober_problem(dtype=jnp.float64)
+    u0 = np.tile(np.asarray([1.0, 0.0, 0.0]), (4, 1))
+    p = np.tile(np.asarray([0.04, 3e7, 1e4]), (4, 1))
+    svc = EnsembleService()
+    kw = dict(alg="rosenbrock23", t0=0.0, tf=1.0, dt0=1e-6, rtol=1e-5,
+              atol=1e-8)
+    ta = svc.submit(EnsembleProblem(rp, 4, u0s=u0, ps=p), tenant="a", **kw)
+    tb = svc.submit(EnsembleProblem(rp, 4, u0s=u0, ps=p), tenant="b", **kw)
+    svc.drain()
+    assert len(svc._pools) == 1          # same full signature -> one batch
+    assert ta.done and tb.done
+    ep = EnsembleProblem(rp, 8, u0s=np.tile(u0, (2, 1)),
+                         ps=np.tile(p, (2, 1)))
+    ref = solve_ensemble_local(ep, ensemble="kernel", backend="xla", **kw)
+    got = np.concatenate([ta.result.u_final, tb.result.u_final])
+    np.testing.assert_allclose(got, np.asarray(ref.u_final), rtol=1e-6)
+    assert svc.accounting["a"]["njac"] > 0
+    # total work is attributed, not duplicated (±1 from share rounding)
+    total = svc.accounting["a"]["njac"] + svc.accounting["b"]["njac"]
+    assert abs(total - int(ref.njac)) <= 1
+
+
+def test_background_thread_serving():
+    prob, subs = _lorenz_requests()
+    svc = EnsembleService(slot_width=8, segment_steps=32)
+    svc.start()
+    try:
+        tkts = [svc.submit(s, alg="tsit5", tf=0.5) for s in subs]
+        for t in tkts:
+            assert t.wait(timeout=120.0)
+    finally:
+        svc.stop()
+    ref = _fresh_erk(subs[0], 0.5)
+    assert np.array_equal(tkts[0].result.u_final, np.asarray(ref.u_final))
+    assert all(t.latency is not None and t.latency >= 0 for t in tkts)
+
+
+def test_resumable_capability_flags():
+    assert get_method("tsit5").resumable
+    assert get_method("em").resumable
+    assert not get_method("rosenbrock23").resumable

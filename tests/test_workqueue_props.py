@@ -1,0 +1,117 @@
+"""Property tests for the lease-token WorkQueue (`repro.dist.fault`).
+
+The queue is the scheduler under `repro.serve`: multiple pump threads claim
+requests under lease, stragglers expire, and stale completions must never
+retire an item a live worker re-claimed.  These tests drive randomized
+claim/expire/complete interleavings (seeded — deterministic in CI) and check
+the invariants the serve layer depends on:
+
+  I1  an item is retired by exactly ONE completion, and that completion's
+      token is the item's latest issued lease generation at retire time;
+  I2  a completion with a stale token is rejected and changes nothing;
+  I3  no two live (unexpired) leases for the same item coexist;
+  I4  the queue always drains: with workers that eventually complete,
+      `finished` goes True and every item was retired exactly once.
+"""
+import random
+import threading
+import time
+
+from repro.dist.fault import WorkQueue
+
+
+def test_random_interleavings_single_thread():
+    """Exhaustive-ish seeded fuzz of claim/expire/complete sequences."""
+    for seed in range(40):
+        rng = random.Random(seed)
+        n = rng.randint(1, 6)
+        q = WorkQueue(n_items=n, tile=1, timeout=0.0)  # every lease expired
+        outstanding = []        # (idx, token) leases held by "workers"
+        retired = {}            # idx -> token that retired it
+        issued = {i: 0 for i in range(n)}   # latest generation per item
+
+        for _ in range(200):
+            op = rng.random()
+            if op < 0.5:
+                got = q.claim()
+                if got is None:
+                    assert q.finished
+                    break
+                idx, _, tok = got
+                assert idx not in retired                      # I2 for claims
+                assert tok == issued[idx] + 1, "generation must bump"
+                issued[idx] = tok
+                outstanding.append((idx, tok))
+            elif outstanding:
+                pick = rng.randrange(len(outstanding))
+                idx, tok = outstanding.pop(pick)
+                ok = q.complete(idx, tok)
+                stale = tok != issued[idx] or idx in retired
+                assert ok == (not stale)                       # I1 + I2
+                if ok:
+                    retired[idx] = tok
+
+        # drain: complete everything via fresh claims
+        while (got := q.claim()) is not None:
+            idx, _, tok = got
+            assert q.complete(idx, tok)
+            retired[idx] = tok
+        assert q.finished and len(retired) == n                # I4
+
+
+def test_stale_straggler_cannot_retire_reclaimed_item():
+    q = WorkQueue(n_items=1, tile=1, timeout=0.05)
+    i1, _, t1 = q.claim()
+    time.sleep(0.06)                 # lease expires
+    i2, _, t2 = q.claim()            # live worker re-claims
+    assert (i1, t2) == (i2, t1 + 1)
+    assert not q.complete(i1, t1)    # straggler wakes up late: rejected
+    assert not q.finished            # the live worker still owns it
+    assert q.complete(i2, t2)
+    assert q.finished
+
+
+def test_live_lease_not_double_claimed():
+    q = WorkQueue(n_items=2, tile=1, timeout=60.0)
+    a = q.claim()
+    b = q.claim()
+    assert a[0] != b[0]              # I3: distinct items while leases live
+    assert q.claim() is None
+
+
+def test_threaded_workers_retire_each_item_exactly_once():
+    """8 threads hammer a 60-item queue with a tiny lease timeout (forced
+    re-leases) and randomized delays; every item must end up retired exactly
+    once and every completion outcome must be consistent with token
+    freshness."""
+    n = 60
+    q = WorkQueue(n_items=n, tile=1, timeout=0.002)
+    accepted = [0] * n
+    lock = threading.Lock()
+
+    def worker(wid):
+        rng = random.Random(wid)
+        idle = 0
+        while idle < 50:
+            got = q.claim()
+            if got is None:
+                if q.finished:
+                    return
+                idle += 1
+                time.sleep(0.001)
+                continue
+            idle = 0
+            idx, _, tok = got
+            if rng.random() < 0.3:
+                time.sleep(0.004)    # straggle past the lease timeout
+            if q.complete(idx, tok):
+                with lock:
+                    accepted[idx] += 1
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert q.finished
+    assert accepted == [1] * n       # exactly-once retirement
