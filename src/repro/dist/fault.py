@@ -101,41 +101,66 @@ class WorkQueue:
       `complete(idx, token)` with its stale token is a no-op instead of
       retiring work that a live worker re-claimed (and may be mid-flight
       on, or may have claimed a *different attempt* of).
-    * `push(payload)` appends a work item dynamically (request arrival).
+    * `push(payload)` appends a work item dynamically (request arrival);
+    * `renew(idx, token)` refreshes a live lease's clock — a worker actively
+      solving an item keeps calling it so in-flight work is never re-leased
+      just because it outlasts `timeout`;
+    * retired items are garbage-collected: the done prefix is dropped from
+      the internal lists (indices stay valid — they are global, offset by an
+      internal base) and retired payloads are released immediately, so a
+      long-running service neither retains every request ever served nor
+      scans the full history on each `claim()`.
     """
 
     def __init__(self, n_items: int = 0, tile: int = 1,
                  timeout: float = 60.0):
-        self.tiles: List[Tuple[int, int]] = [
+        self.tiles: List[Any] = [
             (lo, min(lo + tile, n_items)) for lo in range(0, n_items, tile)]
         self.timeout = float(timeout)
         self._done = [False] * len(self.tiles)
         self._leased_at: List[Optional[float]] = [None] * len(self.tiles)
         self._gen = [0] * len(self.tiles)
+        self._base = 0                      # global index of tiles[0]
+        self._n_pushed = len(self.tiles)
+        self._n_done = 0
         self._lock = threading.Lock()
 
     def push(self, payload: Any) -> int:
         """Append one work item (any payload; tile spans are just the
-        original payload shape). Returns its index."""
+        original payload shape). Returns its (global) index."""
         with self._lock:
             self.tiles.append(payload)
             self._done.append(False)
             self._leased_at.append(None)
             self._gen.append(0)
-            return len(self.tiles) - 1
+            self._n_pushed += 1
+            return self._base + len(self.tiles) - 1
+
+    def _compact_locked(self) -> None:
+        # drop the retired prefix; global indices stay valid via _base
+        k = 0
+        while k < len(self._done) and self._done[k]:
+            k += 1
+        if k:
+            del self.tiles[:k]
+            del self._done[:k]
+            del self._leased_at[:k]
+            del self._gen[:k]
+            self._base += k
 
     def claim(self) -> Optional[Tuple[int, Any, int]]:
         """Lease the first available item: (idx, payload, lease token)."""
         now = time.monotonic()
         with self._lock:
-            for idx, done in enumerate(self._done):
+            self._compact_locked()
+            for off, done in enumerate(self._done):
                 if done:
                     continue
-                leased = self._leased_at[idx]
+                leased = self._leased_at[off]
                 if leased is None or now - leased >= self.timeout:
-                    self._leased_at[idx] = now
-                    self._gen[idx] += 1
-                    return idx, self.tiles[idx], self._gen[idx]
+                    self._leased_at[off] = now
+                    self._gen[off] += 1
+                    return self._base + off, self.tiles[off], self._gen[off]
         return None
 
     def complete(self, idx: int, token: int) -> bool:
@@ -145,30 +170,47 @@ class WorkQueue:
         token (the lease expired and the item was re-leased — the caller's
         result must be discarded, the live claimer owns the item now)."""
         with self._lock:
-            if self._done[idx]:
+            off = idx - self._base
+            if off < 0 or off >= len(self._done) or self._done[off]:
                 return False
-            if token != self._gen[idx]:
+            if token != self._gen[off]:
                 return False
-            self._done[idx] = True
-            self._leased_at[idx] = None
+            self._done[off] = True
+            self._leased_at[off] = None
+            self.tiles[off] = None          # release the payload now
+            self._n_done += 1
             return True
 
     def release(self, idx: int, token: int) -> bool:
         """Voluntarily return a leased item to the pool (still unfinished).
         Stale tokens are ignored, like `complete`."""
         with self._lock:
-            if self._done[idx] or token != self._gen[idx]:
+            off = idx - self._base
+            if off < 0 or off >= len(self._done) or self._done[off] \
+                    or token != self._gen[off]:
                 return False
-            self._leased_at[idx] = None
+            self._leased_at[off] = None
+            return True
+
+    def renew(self, idx: int, token: int) -> bool:
+        """Refresh a live lease's clock (worker still actively on the item),
+        so in-flight work outlasting `timeout` is not handed to another
+        claimer.  Stale tokens are ignored, like `complete`."""
+        with self._lock:
+            off = idx - self._base
+            if off < 0 or off >= len(self._done) or self._done[off] \
+                    or token != self._gen[off]:
+                return False
+            self._leased_at[off] = time.monotonic()
             return True
 
     @property
     def finished(self) -> bool:
         with self._lock:
-            return all(self._done)
+            return self._n_done == self._n_pushed
 
     @property
     def pending(self) -> int:
         """Items not yet retired (leased or not)."""
         with self._lock:
-            return sum(1 for d in self._done if not d)
+            return self._n_pushed - self._n_done

@@ -156,9 +156,11 @@ class EnsembleService:
         self._wq = WorkQueue(timeout=queue_timeout)
         self._pools: Dict[tuple, Any] = {}
         self._tickets: Dict[int, Ticket] = {}   # id(req) -> ticket
+        self._inflight: Dict[int, SolveRequest] = {}  # admitted, not finished
         self._lane_counter = 0
         self._pending = 0
         self._lock = threading.Lock()
+        self._pump_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self.accounting: Dict[str, Dict[str, int]] = {}
@@ -176,13 +178,11 @@ class EnsembleService:
         eprob: `EnsembleProblem` (u0s/ps materialized host-side).  Defaults
         mirror `solve_ensemble_local`; fixed-dt SDE requests take
         n_steps (default round((tf-t0)/dt0)).
+
+        Validation (unknown method, materialization failure) happens BEFORE
+        the request occupies a pending slot, so rejected submits never eat
+        service capacity.
         """
-        with self._lock:
-            if self._pending >= self.max_pending:
-                raise Backpressure(
-                    f"{self._pending} requests in flight (max_pending="
-                    f"{self.max_pending}); poll tickets and retry")
-            self._pending += 1
         spec = get_method(alg)
         prob = eprob.prob
         u0s, ps = (np.asarray(a) for a in eprob.materialize())
@@ -193,6 +193,11 @@ class EnsembleService:
         if spec.family == "sde" and not adaptive and n_steps is None:
             n_steps = int(round((tf - t0) / dt0))
         with self._lock:
+            if self._pending >= self.max_pending:
+                raise Backpressure(
+                    f"{self._pending} requests in flight (max_pending="
+                    f"{self.max_pending}); poll tickets and retry")
+            self._pending += 1
             lane_offset = self._lane_counter
             self._lane_counter += u0s.shape[0]
         req = SolveRequest(
@@ -202,7 +207,8 @@ class EnsembleService:
             event=event, tenant=tenant, lane_offset=lane_offset,
             n_lanes=u0s.shape[0])
         ticket = Ticket(req)
-        self._tickets[id(req)] = ticket
+        with self._lock:
+            self._tickets[id(req)] = ticket
         self._wq.push(req)
         return ticket
 
@@ -241,7 +247,8 @@ class EnsembleService:
                req.lane_offset if spec.family == "sde" else None)
         if key not in self._pools:
             kw = dict(ensemble="kernel", backend="xla", t0=req.t0, tf=req.tf,
-                      dt0=req.dt0, rtol=req.rtol, atol=req.atol,
+                      dt0=req.dt0, n_steps=req.n_steps,
+                      adaptive=req.adaptive, rtol=req.rtol, atol=req.atol,
                       max_iters=req.max_iters, event=req.event)
             if spec.family == "sde":
                 kw.update(adaptive=True, seed=self.seed,
@@ -253,6 +260,15 @@ class EnsembleService:
     # -- completion -----------------------------------------------------------
 
     def _finish(self, req: SolveRequest) -> None:
+        # idempotent: a duplicate completion (defensive — e.g. a re-admitted
+        # request under a mis-set queue_timeout) must not double-account,
+        # double-decrement _pending, or KeyError the pump thread
+        with self._lock:
+            ticket = self._tickets.pop(id(req), None)
+            if ticket is None:
+                return
+            self._inflight.pop(id(req), None)
+            self._pending -= 1
         result = req.assemble()
         acct = self.accounting.setdefault(
             req.tenant, dict(requests=0, lanes=0, nf=0, njac=0, nfact=0))
@@ -264,21 +280,46 @@ class EnsembleService:
         if req._wq_lease is not None:
             idx, tok = req._wq_lease
             self._wq.complete(idx, tok)
-        with self._lock:
-            self._pending -= 1
-        self._tickets.pop(id(req))._complete(result)
+        ticket._complete(result)
 
     # -- scheduling -----------------------------------------------------------
 
     def pump(self) -> bool:
-        """One scheduling round; True if any pool still has or did work."""
+        """One scheduling round; True if any pool still has or did work.
+
+        Serialized: a concurrent caller (inline poll racing the background
+        thread) waits for the round in progress instead of double-advancing
+        the pools."""
+        with self._pump_lock:
+            return self._pump_locked()
+
+    def _pump_locked(self) -> bool:
+        # keep in-flight leases alive: a request being actively solved must
+        # not expire (and get re-admitted) just because its solve outlasts
+        # queue_timeout
+        for req in list(self._inflight.values()):
+            if req._wq_lease is not None:
+                self._wq.renew(*req._wq_lease)
+        seen = set()
         while (claim := self._wq.claim()) is not None:
             idx, req, tok = claim
             req._wq_lease = (idx, tok)
-            self._pool_for(req).admit(req)
+            if id(req) not in self._inflight:
+                self._inflight[id(req)] = req
+                self._pool_for(req).admit(req)
+            elif idx in seen:
+                # queue_timeout shorter than this claim loop: every claim
+                # re-leases the same in-flight item — stop; the token stored
+                # above is already the freshest generation
+                break
+            seen.add(idx)
         worked = False
-        for pool in list(self._pools.values()):
+        for key, pool in list(self._pools.items()):
             worked = pool.pump() or worked
+            if key[0] == "batch" and not pool.busy:
+                # batch pools are one-shot; drop them so per-request keys
+                # (adaptive-SDE lane_offset) don't accumulate forever
+                del self._pools[key]
         return worked or any(p.busy for p in self._pools.values()) \
             or not self._wq.finished
 

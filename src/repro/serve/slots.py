@@ -126,17 +126,21 @@ class SlotPool:
         if not self.busy:
             return False
         mask = np.zeros(self.B, bool)
-        for slot in sorted(self._scrub):
-            if self.slots[slot] is None and not self.staged:
-                self._stage_filler(slot)
-                mask[slot] = True
-        self._scrub.clear()
         for slot in range(self.B):
-            if self.slots[slot] is None and self.staged:
+            if self.slots[slot] is not None:
+                continue
+            if self.staged:
                 req, row = self.staged.popleft()
                 self.slots[slot] = (req, row)
                 self._stage_lane_cols(slot, req, row)
                 mask[slot] = True
+            elif slot in self._scrub:
+                # budget-evicted column with no refill available this round:
+                # stage a one-iteration filler so the never-done carry column
+                # stops consuming full segments
+                self._stage_filler(slot)
+                mask[slot] = True
+            self._scrub.discard(slot)
         refill = self._fresh() if mask.any() or self.carry is None \
             else self.carry
         if self.carry is None:
@@ -212,7 +216,9 @@ class BatchPool:
         total_att = max(int(attempts.sum()), 1)
         u_final = np.asarray(res.u_final)
         t_final = np.broadcast_to(np.asarray(res.t_final), (u0s.shape[0],))
-        status = int(np.max(np.asarray(res.status)))
+        # per-lane when the engine reports it: one tenant's failing lane must
+        # not mark the whole coalesced batch failed
+        status_rows = np.broadcast_to(np.asarray(res.status), (u0s.shape[0],))
         nf, njac, nfact = (int(np.asarray(v)) for v in
                            (res.nf, res.njac, res.nfact))
         off = 0
@@ -228,7 +234,7 @@ class BatchPool:
                     naccept=int(naccept[off + row]),
                     nreject=int(nreject[off + row]),
                     nf=int(round(nf * share / k)),
-                    status=status,
+                    status=int(status_rows[off + row]),
                     event_t=float("inf"), event_count=0,
                 ))
             req.njac = int(round(njac * share))

@@ -232,19 +232,28 @@ def test_attempt_budget_evicts_lane():
     assert np.array_equal(t2.result.u_final, np.asarray(ref.u_final))
 
 
-def test_batch_pool_coalesces_rosenbrock():
+def test_batch_pool_coalesces_rosenbrock(monkeypatch):
     from repro.configs.de_problems import rober_problem
+    from repro.serve import slots as slots_mod
     rp = rober_problem(dtype=jnp.float64)
     u0 = np.tile(np.asarray([1.0, 0.0, 0.0]), (4, 1))
     p = np.tile(np.asarray([0.04, 3e7, 1e4]), (4, 1))
     svc = EnsembleService()
     kw = dict(alg="rosenbrock23", t0=0.0, tf=1.0, dt0=1e-6, rtol=1e-5,
               atol=1e-8)
+    solves = []
+    orig_solve = slots_mod.solve_ensemble_local
+    monkeypatch.setattr(
+        slots_mod, "solve_ensemble_local",
+        lambda ep, **k: (solves.append(ep.n_trajectories),
+                         orig_solve(ep, **k))[1])
     ta = svc.submit(EnsembleProblem(rp, 4, u0s=u0, ps=p), tenant="a", **kw)
     tb = svc.submit(EnsembleProblem(rp, 4, u0s=u0, ps=p), tenant="b", **kw)
     svc.drain()
-    assert len(svc._pools) == 1          # same full signature -> one batch
+    assert solves == [8]                 # same full signature -> one batch
     assert ta.done and tb.done
+    # one-shot batch pools are dropped after their solve (no per-key leak)
+    assert not any(k[0] == "batch" for k in svc._pools)
     ep = EnsembleProblem(rp, 8, u0s=np.tile(u0, (2, 1)),
                          ps=np.tile(p, (2, 1)))
     ref = solve_ensemble_local(ep, ensemble="kernel", backend="xla", **kw)
@@ -254,6 +263,100 @@ def test_batch_pool_coalesces_rosenbrock():
     # total work is attributed, not duplicated (±1 from share rounding)
     total = svc.accounting["a"]["njac"] + svc.accounting["b"]["njac"]
     assert abs(total - int(ref.njac)) <= 1
+
+
+def test_inflight_request_survives_lease_timeout():
+    """A request whose solve outlasts queue_timeout must NOT be re-admitted
+    by later pumps: exactly one completion, accounting counts it once, and
+    _pending returns to 0 (regression: duplicated lanes + KeyError in
+    _finish + negative _pending)."""
+    prob, subs = _lorenz_requests()
+    # queue_timeout far below the first pump's compile time: every claim
+    # round sees the in-flight lease as expired
+    svc = EnsembleService(slot_width=8, segment_steps=8, queue_timeout=1e-9)
+    t1 = svc.submit(subs[0], alg="tsit5", tf=1.0, dt0=1e-2)
+    svc.drain()
+    assert t1.done and t1.result.status == 0
+    assert svc.accounting["default"]["requests"] == 1
+    assert svc.accounting["default"]["lanes"] == 4
+    assert svc._pending == 0 and not svc._inflight
+    ref = _fresh_erk(subs[0], 1.0)
+    assert np.array_equal(t1.result.u_final, np.asarray(ref.u_final))
+    assert t1.result.nf == int(ref.nf)
+
+
+def test_rejected_submit_does_not_consume_capacity():
+    """Validation failures must not leak pending slots (regression: repeated
+    bad submits wedged the service into permanent Backpressure)."""
+    prob, subs = _lorenz_requests()
+    svc = EnsembleService(slot_width=8, max_pending=2)
+    for _ in range(4):
+        with pytest.raises(KeyError):
+            svc.submit(subs[0], alg="no-such-method")
+    assert svc._pending == 0
+    ta = svc.submit(subs[0], alg="tsit5", tf=0.3)
+    tb = svc.submit(subs[1], alg="tsit5", tf=0.3)
+    svc.drain()
+    assert ta.done and tb.done
+
+
+def test_batch_pool_status_is_per_lane(monkeypatch):
+    """One tenant's failing lane must not mark coalesced tenants failed."""
+    from types import SimpleNamespace
+    from repro.serve import slots as slots_mod
+    from repro.serve.service import SolveRequest
+
+    def fake_solve(ep, **kw):
+        n = ep.n_trajectories
+        return SimpleNamespace(
+            u_final=np.zeros((n, 3)), t_final=np.ones(n),
+            naccept=np.full(n, 10), nreject=np.zeros(n),
+            nf=np.asarray(60), njac=np.asarray(20), nfact=np.asarray(20),
+            status=np.asarray([0, 0, 2, 2]))   # only tenant b's lanes fail
+    monkeypatch.setattr(slots_mod, "solve_ensemble_local", fake_solve)
+
+    done = []
+    pool = slots_mod.BatchPool(
+        get_method("rosenbrock23"), object(), solve_kwargs={},
+        on_complete=done.append)
+
+    def req(tenant):
+        return SolveRequest(
+            prob=None, alg="rosenbrock23", u0s=np.zeros((2, 3)),
+            ps=np.zeros((2, 1)), t0=0.0, tf=1.0, dt0=1e-3, n_steps=None,
+            adaptive=True, rtol=1e-6, atol=1e-6, max_iters=100,
+            event=None, tenant=tenant, lane_offset=0, n_lanes=2)
+    ra, rb = req("a"), req("b")
+    pool.admit(ra)
+    pool.admit(rb)
+    assert pool.pump()
+    assert [r.tenant for r in done] == ["a", "b"]
+    assert ra.assemble().status == 0       # a is NOT poisoned by b's lanes
+    assert rb.assemble().status == 2
+
+
+def test_filler_staged_when_scrubbed_slots_exceed_refills():
+    """Budget-evicted carry columns must be force-retired even when fewer
+    staged lanes than scrubbed slots arrive (regression: the leftover column
+    ran full segments forever)."""
+    import jax as _jax
+    ep = lorenz_ensemble(8, dtype=F32)
+    u0s, ps = (np.asarray(a) for a in ep.materialize())
+    big = EnsembleProblem(ep.prob, 8, u0s=u0s, ps=ps)
+    small = EnsembleProblem(ep.prob, 4, u0s=u0s[:4], ps=ps[:4])
+    svc = EnsembleService(slot_width=8, segment_steps=16)
+    t1 = svc.submit(big, alg="tsit5", tf=50.0, dt0=1e-2, max_iters=40)
+    svc.drain()
+    assert t1.done and t1.result.status == 1   # all 8 lanes evicted
+    t2 = svc.submit(small, alg="tsit5", tf=0.5, dt0=1e-2)
+    svc.drain()
+    assert t2.done and t2.result.status == 0
+    pool = next(iter(svc._pools.values()))
+    h = _jax.device_get(pool.carry)
+    # 4 slots were refilled by t2, the other 4 got fillers: every carry
+    # column is retired, none keeps consuming segment work
+    assert bool(np.all(h["done"]))
+    assert not pool._scrub
 
 
 def test_background_thread_serving():

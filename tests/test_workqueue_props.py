@@ -79,6 +79,51 @@ def test_live_lease_not_double_claimed():
     assert q.claim() is None
 
 
+def test_renew_keeps_inflight_lease_alive():
+    """An actively-renewed lease never expires: a worker solving past the
+    timeout keeps its item, and its original token still completes."""
+    q = WorkQueue(n_items=1, tile=1, timeout=0.05)
+    idx, _, tok = q.claim()
+    for _ in range(3):
+        time.sleep(0.03)
+        assert q.renew(idx, tok)
+        assert q.claim() is None         # never re-leased while renewed
+    assert q.complete(idx, tok)
+    assert q.finished
+    # stale/retired renews are rejected without side effects
+    assert not q.renew(idx, tok)
+
+
+def test_retired_prefix_is_compacted_and_payloads_released():
+    """Completed items are garbage-collected (payload freed, done prefix
+    dropped) while indices stay valid and late stale calls are no-ops."""
+    q = WorkQueue(timeout=60.0)
+    idxs = [q.push(f"req-{i}") for i in range(50)]
+    assert idxs == list(range(50))
+    leases = {}
+    for _ in range(50):
+        idx, payload, tok = q.claim()
+        assert payload == f"req-{idx}"
+        leases[idx] = tok
+    for idx in idxs[:49]:
+        assert q.complete(idx, leases[idx])
+    q.claim()                            # triggers prefix compaction
+    assert len(q._done) <= 2             # history dropped, not retained
+    assert q.pending == 1 and not q.finished
+    # retired-and-compacted indices reject late completes/releases/renews
+    assert not q.complete(idxs[0], leases[idxs[0]])
+    assert not q.release(idxs[0], leases[idxs[0]])
+    assert not q.renew(idxs[0], leases[idxs[0]])
+    # the survivor's global index still works, and new pushes stay global
+    new_idx = q.push("req-50")
+    assert new_idx == 50
+    assert q.complete(idxs[-1], leases[idxs[-1]])
+    i, p, t = q.claim()
+    assert (i, p) == (50, "req-50")
+    assert q.complete(i, t)
+    assert q.finished and q.pending == 0
+
+
 def test_threaded_workers_retire_each_item_exactly_once():
     """8 threads hammer a 60-item queue with a tiny lease timeout (forced
     re-leases) and randomized delays; every item must end up retired exactly
