@@ -1,0 +1,98 @@
+"""Elastic-supervisor weak scaling: problems/sec vs shard count, with and
+without injected failures (docs/architecture.md "Elasticity & fault
+tolerance").
+
+Workload: a Lorenz parameter sweep at a FIXED lane count per shard (weak
+scaling — shard counts 1/2/4 solve 8/16/32 lanes), driven end to end by
+`ElasticSupervisor`: bounded segments, a snapshot every epoch, re-shard on
+failure.  Each shard count is measured twice:
+
+  * clean        — no failures injected.
+  * one_failure  — a `ChaosMonkey`-scheduled shard kill at epoch 2: the dead
+    shard's tiles roll back to the epoch-1 snapshot and replay on the
+    survivors.
+
+The figure of merit is the throughput ratio one_failure/clean at the same
+shard count (bar: >= 0.8x) — the price of a failure is bounded by one
+snapshot interval of replay for the dead shard's tiles, NOT a run restart.
+Compilation is excluded (an untimed warmup run per supervisor; `run()` is
+re-runnable and reuses the compiled engine), so the ratio measures rollback
++ re-shard + replay overhead only.  Timings are single-core CPU (the
+*structural* claim, not TPU deployment); each variant reports the best of
+`REPEATS` runs.
+
+Writes results/BENCH_elastic.json (sections: weak_scaling, summary).
+"""
+from __future__ import annotations
+
+import tempfile
+
+import jax.numpy as jnp
+
+RATIO_BAR = 0.8
+LANES_PER_SHARD = 8
+SHARD_COUNTS = (1, 2, 4)
+REPEATS = 2
+
+
+def _timed_run(sup, make_chaos=None):
+    """Best wall seconds over REPEATS re-runs of one supervisor.  A fresh
+    monkey per repeat — schedule entries fire once by design."""
+    best = None
+    for _ in range(REPEATS):
+        sup.chaos = None if make_chaos is None else make_chaos()
+        res = sup.run()
+        assert (res.status == 0).all(), "bench run must finish every lane"
+        if make_chaos is not None:
+            assert len(res.report["failures"]) == 1, res.report["failures"]
+        wall = res.report["wall_s"]
+        best = wall if best is None else min(best, wall)
+    return best
+
+
+def main() -> None:
+    from repro.configs.de_problems import lorenz_ensemble
+    from repro.dist.chaos import ChaosMonkey
+    from repro.dist.elastic import ElasticSupervisor
+
+    from .common import HEADER, row, update_results_json
+
+    print(HEADER)
+    rows = []
+    for k in SHARD_COUNTS:
+        n = LANES_PER_SHARD * k
+        ep = lorenz_ensemble(n, dtype=jnp.float32)
+        sup = ElasticSupervisor(
+            ep, "tsit5",
+            ckpt_dir=tempfile.mkdtemp(prefix="bench_elastic_"),
+            n_shards=k, tile_width=4, segment_steps=32, snapshot_every=1,
+            t0=0.0, tf=2.0, dt0=1e-2, rtol=1e-6, atol=1e-6,
+            backoff_base=0.0)
+        sup.run()                    # untimed warmup absorbs compilation
+        t_clean = _timed_run(sup)
+        # one scheduled kill at epoch 2 — after the first snapshot exists
+        t_kill = _timed_run(
+            sup, lambda: ChaosMonkey(schedule=[(2, 0, "kill")]))
+        pps_clean = n / t_clean
+        pps_kill = n / t_kill
+        ratio = pps_kill / pps_clean
+        rows.append(dict(
+            n_shards=k, n_lanes=n,
+            clean=dict(wall_s=t_clean, problems_per_s=pps_clean),
+            one_failure=dict(wall_s=t_kill, problems_per_s=pps_kill),
+            ratio=ratio, bar=RATIO_BAR, meets_bar=bool(ratio >= RATIO_BAR)))
+        print(row(f"elastic/shards{k}/clean", t_clean / n,
+                  f"{pps_clean:.1f} problems_per_s"))
+        print(row(f"elastic/shards{k}/one_failure", t_kill / n,
+                  f"{pps_kill:.1f} problems_per_s ratio={ratio:.2f}"))
+    path = "results/BENCH_elastic.json"
+    update_results_json(path, "weak_scaling", rows)
+    min_ratio = min(r["ratio"] for r in rows)
+    update_results_json(path, "summary", dict(
+        lanes_per_shard=LANES_PER_SHARD, shard_counts=list(SHARD_COUNTS),
+        repeats=REPEATS, min_failure_ratio=min_ratio, bar=RATIO_BAR,
+        meets_bar=bool(min_ratio >= RATIO_BAR)))
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,7 @@ MODULES = [
     ("fig11", "benchmarks.bench_fig11_crn"),
     ("texture", "benchmarks.bench_texture_interp"),
     ("serving", "benchmarks.bench_serving"),
+    ("elastic", "benchmarks.bench_elastic"),
 ]
 
 

@@ -5,14 +5,23 @@ Layout: <dir>/step_<N>/
   meta.json        — treedef repr, step, data cursor, rng key, mesh shape
 
 Fault-tolerance contract (DESIGN.md §5):
-  * save is atomic (write to tmp dir, rename) — a crash mid-save never
-    corrupts the latest checkpoint;
+  * save is atomic (write to a uniquely-named tmp dir, fsync the payload,
+    then publish with one rename) — a crash mid-save never corrupts the
+    latest checkpoint; a crash between writing and publishing leaves an
+    invisible tmp dir and `restore_latest` falls back to the previous
+    complete step (tested under SIGKILL in tests/test_checkpoint_fault.py);
   * `restore_latest` finds the newest complete step — restart-after-failure
     is just rerunning the launcher;
   * arrays are saved UNSHARDED (host-gathered), so restore may apply ANY new
-    sharding/mesh — elastic rescale (tested in tests/test_checkpoint.py);
+    sharding/mesh — elastic rescale (tests/test_checkpoint.py) and
+    re-sharding onto a different shard count after a failure
+    (repro.dist.elastic);
   * async mode snapshots to host memory synchronously (cheap) and writes to
     disk on a background thread (training continues).
+
+This module is the ONE checkpoint writer in the repo: `dist/fault.py`'s
+`TrainSupervisor` and `dist/elastic.py`'s snapshot loop both delegate here
+rather than carrying their own (corruptible) save paths.
 """
 from __future__ import annotations
 
@@ -20,12 +29,31 @@ import json
 import os
 import shutil
 import threading
+import uuid
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
 Array = Any
+
+# Test/chaos injection point (see repro.dist.chaos.install_ckpt_write_crash):
+# called as _crash_hook(stage_name, tmp_dir) at "arrays" (payload written),
+# "meta"/"pre_rename" (tmp complete, publish pending).  None in production.
+_crash_hook = None
+
+
+def _stage(name: str, tmp_dir: str) -> None:
+    if _crash_hook is not None:
+        _crash_hook(name, tmp_dir)
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten_with_names(tree):
@@ -43,16 +71,38 @@ def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
             "treedef": str(treedef), "extra": extra or {}}
 
     def write():
-        tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+        # unique tmp name: concurrent/crashed writers of the same step can
+        # never interleave inside one tmp dir
+        tmp = os.path.join(
+            ckpt_dir, f".tmp_step_{step}_{os.getpid()}_{uuid.uuid4().hex[:8]}")
         final = os.path.join(ckpt_dir, f"step_{step}")
         os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{f"leaf_{i}": a for i, a in enumerate(host)})
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        with open(arrays_path, "wb") as fh:
+            np.savez(fh, **{f"leaf_{i}": a for i, a in enumerate(host)})
+            fh.flush()
+            os.fsync(fh.fileno())
+        _stage("arrays", tmp)
+        meta_path = os.path.join(tmp, "meta.json")
+        with open(meta_path, "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _stage("meta", tmp)
         if os.path.exists(final):
-            shutil.rmtree(final)
+            # swap, don't rmtree-then-rename: a crash between the two renames
+            # hides step N but the OLDER steps stay restorable (the previous
+            # scheme had a window where step N was deleted and its
+            # replacement not yet published, with nothing in between)
+            old = os.path.join(
+                ckpt_dir, f".old_step_{step}_{uuid.uuid4().hex[:8]}")
+            os.rename(final, old)
+        else:
+            old = None
+        _stage("pre_rename", tmp)
         os.rename(tmp, final)
+        if old is not None:
+            shutil.rmtree(old, ignore_errors=True)
 
     if async_write:
         t = threading.Thread(target=write)
@@ -67,10 +117,30 @@ def available_steps(ckpt_dir: str):
         return []
     steps = []
     for d in os.listdir(ckpt_dir):
-        if d.startswith("step_") and os.path.exists(
-                os.path.join(ckpt_dir, d, "meta.json")):
-            steps.append(int(d.split("_")[1]))
+        if not d.startswith("step_"):
+            continue
+        try:
+            step = int(d.split("_", 1)[1])
+        except ValueError:          # foreign/garbage entry — not a checkpoint
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, d, "meta.json")):
+            steps.append(step)
     return sorted(steps)
+
+
+def prune(ckpt_dir: str, keep: int = 2) -> None:
+    """Drop all but the newest `keep` complete steps, plus any stale tmp/old
+    dirs left behind by crashed writers (their unique names make them dead
+    the moment their writer is)."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = available_steps(ckpt_dir)
+    drop = steps[:-keep] if keep > 0 else steps
+    for s in drop:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    for d in os.listdir(ckpt_dir):
+        if d.startswith(".tmp_step_") or d.startswith(".old_step_"):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def restore(ckpt_dir: str, step: int, like_tree, shardings=None):

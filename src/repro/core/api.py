@@ -174,6 +174,38 @@ def solve_ensemble(eprob: EnsembleProblem, mesh: Optional[Mesh] = None,
     return fn(u0s, ps, *dleaves)
 
 
+def solve_ensemble_elastic(eprob: EnsembleProblem, alg="tsit5", *,
+                           ckpt_dir: str, n_shards: int = 2,
+                           resume: bool = False, chaos=None, **kw):
+    """Fault-tolerant segmented ensemble solve — the elastic face of the
+    front door.
+
+    Wraps `repro.dist.elastic.ElasticSupervisor`: the run advances in
+    bounded segments with periodic host-gathered carry snapshots through
+    the atomic checkpoint layer, survives shard loss by re-sharding the
+    unfinished tiles over the survivors (degradation ladder down to a
+    single host, then a partial result with per-lane
+    ``status == STATUS_SHARD_LOST``), and ``resume=True`` restores the
+    newest snapshot — onto ANY `n_shards`, in the same process or a
+    relaunched one.  A killed-and-resumed run is bitwise identical to an
+    uninterrupted one (see the module docstring for the contract, and
+    tests/test_elastic.py for the SIGKILL proof).
+
+    Returns `repro.dist.elastic.ElasticResult` (host numpy per-lane finals
+    + a fault-history report), not a device `EnsembleResult` — elasticity
+    is a host-side supervision loop by construction.
+
+    Keyword args beyond the supervisor's (tile_width, segment_steps,
+    snapshot_every, max_failures, backoff_*, ...) mirror
+    `solve_ensemble_local` (t0, tf, dt0, n_steps, adaptive, rtol, atol,
+    event, seed, lane_offset, max_iters, ...).
+    """
+    from repro.dist.elastic import ElasticSupervisor
+    sup = ElasticSupervisor(eprob, alg, ckpt_dir=ckpt_dir,
+                            n_shards=n_shards, chaos=chaos, **kw)
+    return sup.run(resume=resume)
+
+
 def ensemble_moments(us: Array, mesh: Optional[Mesh] = None,
                      shard_axes: Optional[Sequence[str]] = None):
     """Mean/variance over the (possibly sharded) trajectory axis — the SDE

@@ -902,6 +902,34 @@ class ResumableEngine:
         pure advance."""
         return self._segment(carry, refill_mask, refill)
 
+    def export_carry(self, carry):
+        """Host-gather a carry for snapshotting (see `export_resume_carry`)."""
+        return export_resume_carry(carry)
+
+    def import_carry(self, host_carry):
+        """Re-device a host carry exported by `export_carry`."""
+        return import_resume_carry(host_carry)
+
+
+def export_resume_carry(carry) -> dict:
+    """Host-gather a resumable carry into plain numpy (dtype-preserving).
+
+    The carry is the COMPLETE per-lane solver state — u, t, dt, counters,
+    per-lane constants (p, tf / n_steps, lane index), done/status flags —
+    so an exported carry is a restart point: re-devicing it and continuing
+    with the same engine replays exactly the remaining body applications.
+    This is what `repro.dist.elastic` snapshots through `checkpoint/ckpt.py`
+    (host-gathered, so restore may re-shard onto any new mesh shape).
+    """
+    host = jax.device_get(carry)
+    return {k: np.asarray(v) for k, v in host.items()}
+
+
+def import_resume_carry(host_carry: dict):
+    """Inverse of `export_resume_carry`: numpy host carry -> device arrays.
+    Dtypes are preserved verbatim (bitwise-resume depends on it)."""
+    return {k: jnp.asarray(v) for k, v in host_carry.items()}
+
 
 def make_resumable_engine(spec: MethodSpec, prob, *, adaptive=None,
                           rtol=1e-6, atol=1e-6, event=None, seed=0,

@@ -1,5 +1,6 @@
-# Distributed-training support: gradient compression/bucketing collectives
-# and fault-tolerance (checkpoint supervision, straggler work queues).
-from . import collectives, fault
+# Distributed-training support: gradient compression/bucketing collectives,
+# fault-tolerance (checkpoint supervision, straggler work queues), the
+# elastic ensemble-run supervisor and its chaos fault-injection harness.
+from . import chaos, collectives, elastic, fault
 
-__all__ = ["collectives", "fault"]
+__all__ = ["chaos", "collectives", "elastic", "fault"]

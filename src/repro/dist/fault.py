@@ -19,8 +19,28 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
+def _mix_unit(seed: int, idx: int, n: int) -> float:
+    """Deterministic uniform in [0, 1) from (seed, item index, reclaim
+    count) — splitmix64-style integer mixing, stable across processes."""
+    x = (seed * 0x9E3779B97F4A7C15 + idx * 0xBF58476D1CE4E5B9
+         + n * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    x ^= x >> 31
+    return x / 2.0 ** 64
+
+
 class TrainSupervisor:
-    """Periodic-checkpoint + resume-from-latest supervision for a train loop."""
+    """Periodic-checkpoint + resume-from-latest supervision for a train loop.
+
+    There is deliberately no checkpoint writer here: `_save` delegates to
+    `repro.checkpoint.ckpt.save` — the repo's single atomic
+    tmp-dir-fsync-rename path — so a crash mid-save can never corrupt this
+    supervisor's latest checkpoint either (crash-mid-save coverage for both
+    sync and async write modes lives in tests/test_checkpoint_fault.py).
+    """
 
     def __init__(self, ckpt_dir: str, save_every: int = 1000,
                  async_save: bool = False):
@@ -109,21 +129,57 @@ class WorkQueue:
       the internal lists (indices stay valid — they are global, offset by an
       internal base) and retired payloads are released immediately, so a
       long-running service neither retains every request ever served nor
-      scans the full history on each `claim()`.
+      scans the full history on each `claim()`;
+    * expiry-reclaim backs off: the FIRST expiry of a lease reclaims at the
+      base `timeout`, but every further expiry of the SAME item multiplies
+      its effective lease timeout by `backoff_factor` (capped at
+      `backoff_max_mult` × base) plus a deterministic per-(item, attempt)
+      jitter of up to `backoff_jitter` × the backed-off timeout — so a dead
+      worker's items don't thrash between survivors under tiny timeouts,
+      and a thundering herd of claimers doesn't resynchronize on the same
+      expiry instant.  A voluntary `release` resets the item's backoff (the
+      worker was alive; nothing expired), as does a successful re-lease
+      followed by `complete`.  ``timeout == 0`` stays immediate at every
+      attempt (0 × anything = 0) — the serve layer's "every lease already
+      expired" test mode keeps working.
+
+    `clock` is injectable (defaults to `time.monotonic`) so backoff
+    schedules are testable without sleeping (tests/test_workqueue_props.py).
     """
 
     def __init__(self, n_items: int = 0, tile: int = 1,
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, *, backoff_factor: float = 2.0,
+                 backoff_max_mult: float = 8.0, backoff_jitter: float = 0.25,
+                 jitter_seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
         self.tiles: List[Any] = [
             (lo, min(lo + tile, n_items)) for lo in range(0, n_items, tile)]
         self.timeout = float(timeout)
+        self.backoff_factor = float(backoff_factor)
+        self.backoff_max_mult = float(backoff_max_mult)
+        self.backoff_jitter = float(backoff_jitter)
+        self._jitter_seed = int(jitter_seed)
+        self._clock = clock
         self._done = [False] * len(self.tiles)
         self._leased_at: List[Optional[float]] = [None] * len(self.tiles)
         self._gen = [0] * len(self.tiles)
+        self._expiries = [0] * len(self.tiles)   # expiry-reclaims per item
         self._base = 0                      # global index of tiles[0]
         self._n_pushed = len(self.tiles)
         self._n_done = 0
         self._lock = threading.Lock()
+
+    def _lease_timeout_locked(self, off: int) -> float:
+        """Effective lease timeout for item `off`'s CURRENT lease: base
+        timeout, exponentially backed off by prior expiry-reclaims, with
+        deterministic jitter keyed on (item, attempt)."""
+        n = self._expiries[off]
+        if n == 0:
+            return self.timeout
+        mult = min(self.backoff_factor ** n, self.backoff_max_mult)
+        jit = self.backoff_jitter * _mix_unit(
+            self._jitter_seed, self._base + off, n)
+        return self.timeout * mult * (1.0 + jit)
 
     def push(self, payload: Any) -> int:
         """Append one work item (any payload; tile spans are just the
@@ -133,6 +189,7 @@ class WorkQueue:
             self._done.append(False)
             self._leased_at.append(None)
             self._gen.append(0)
+            self._expiries.append(0)
             self._n_pushed += 1
             return self._base + len(self.tiles) - 1
 
@@ -146,18 +203,29 @@ class WorkQueue:
             del self._done[:k]
             del self._leased_at[:k]
             del self._gen[:k]
+            del self._expiries[:k]
             self._base += k
 
     def claim(self) -> Optional[Tuple[int, Any, int]]:
-        """Lease the first available item: (idx, payload, lease token)."""
-        now = time.monotonic()
+        """Lease the first available item: (idx, payload, lease token).
+
+        An unclaimed item leases immediately.  A leased item is reclaimable
+        only once its CURRENT lease has outlived its effective timeout —
+        base `timeout` on the first expiry, jittered-exponentially larger on
+        each subsequent expiry of the same item (see class docstring)."""
+        now = self._clock()
         with self._lock:
             self._compact_locked()
             for off, done in enumerate(self._done):
                 if done:
                     continue
                 leased = self._leased_at[off]
-                if leased is None or now - leased >= self.timeout:
+                if leased is None:
+                    self._leased_at[off] = now
+                    self._gen[off] += 1
+                    return self._base + off, self.tiles[off], self._gen[off]
+                if now - leased >= self._lease_timeout_locked(off):
+                    self._expiries[off] += 1
                     self._leased_at[off] = now
                     self._gen[off] += 1
                     return self._base + off, self.tiles[off], self._gen[off]
@@ -183,13 +251,16 @@ class WorkQueue:
 
     def release(self, idx: int, token: int) -> bool:
         """Voluntarily return a leased item to the pool (still unfinished).
-        Stale tokens are ignored, like `complete`."""
+        Stale tokens are ignored, like `complete`.  Resets the item's
+        expiry backoff: the worker proved alive, so the next lease runs on
+        the base timeout again."""
         with self._lock:
             off = idx - self._base
             if off < 0 or off >= len(self._done) or self._done[off] \
                     or token != self._gen[off]:
                 return False
             self._leased_at[off] = None
+            self._expiries[off] = 0
             return True
 
     def renew(self, idx: int, token: int) -> bool:
@@ -201,7 +272,7 @@ class WorkQueue:
             if off < 0 or off >= len(self._done) or self._done[off] \
                     or token != self._gen[off]:
                 return False
-            self._leased_at[off] = time.monotonic()
+            self._leased_at[off] = self._clock()
             return True
 
     @property

@@ -22,7 +22,15 @@ ensembles (the "solver as a service" shape of the paper's throughput story):
 * **backpressure**: `submit` raises `Backpressure` once `max_pending`
   requests are in flight — callers retry after polling tickets.
 * **accounting**: per-tenant nf/njac/nfact and lane totals, folded from the
-  same per-lane kernel stats rows every engine already reports.
+  same per-lane kernel stats rows every engine already reports — plus a
+  `failures` counter and `last_error` string per tenant, so an operator can
+  tell degraded-but-serving (failures climbing, requests still completing)
+  from healthy without scraping logs.
+* **failure isolation**: a pool pump that raises (bad RHS, trace-time error)
+  marks the affected requests failed-once and retries them on later pumps;
+  past `max_request_retries` the request is failed PERMANENTLY — its ticket
+  gets `error` set (result stays None), capacity is released, and the other
+  tenants' requests keep serving.
 """
 from __future__ import annotations
 
@@ -78,6 +86,7 @@ class SolveRequest:
     n_lanes: int
     njac: int = 0
     nfact: int = 0
+    failures: int = 0        # pump exceptions that hit this request
     _rows: dict = field(default_factory=dict)
     _wq_lease: Optional[tuple] = None
 
@@ -108,6 +117,7 @@ class Ticket:
         self._req = req
         self._event = threading.Event()
         self.result: Optional[ServeResult] = None
+        self.error: Optional[str] = None
         self.submitted_at = time.monotonic()
         self.completed_at: Optional[float] = None
 
@@ -130,6 +140,13 @@ class Ticket:
         self.completed_at = time.monotonic()
         self._event.set()
 
+    def _fail(self, error: str) -> None:
+        """Permanent failure: `done` goes True with `result` None and
+        `error` holding the last pump exception."""
+        self.error = error
+        self.completed_at = time.monotonic()
+        self._event.set()
+
 
 class EnsembleService:
     """Continuous-batching DE ensemble server (single device, many tenants).
@@ -148,11 +165,12 @@ class EnsembleService:
 
     def __init__(self, seed: int = 0, max_pending: int = 64,
                  slot_width: int = 8, segment_steps: int = 64,
-                 queue_timeout: float = 300.0):
+                 queue_timeout: float = 300.0, max_request_retries: int = 2):
         self.seed = int(seed)
         self.max_pending = int(max_pending)
         self.slot_width = int(slot_width)
         self.segment_steps = int(segment_steps)
+        self.max_request_retries = int(max_request_retries)
         self._wq = WorkQueue(timeout=queue_timeout)
         self._pools: Dict[tuple, Any] = {}
         self._tickets: Dict[int, Ticket] = {}   # id(req) -> ticket
@@ -163,7 +181,12 @@ class EnsembleService:
         self._pump_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self.accounting: Dict[str, Dict[str, int]] = {}
+        self.accounting: Dict[str, Dict[str, Any]] = {}
+
+    def _acct(self, tenant: str) -> Dict[str, Any]:
+        return self.accounting.setdefault(
+            tenant, dict(requests=0, lanes=0, nf=0, njac=0, nfact=0,
+                         failures=0, last_error=None))
 
     # -- submission -----------------------------------------------------------
 
@@ -270,8 +293,7 @@ class EnsembleService:
             self._inflight.pop(id(req), None)
             self._pending -= 1
         result = req.assemble()
-        acct = self.accounting.setdefault(
-            req.tenant, dict(requests=0, lanes=0, nf=0, njac=0, nfact=0))
+        acct = self._acct(req.tenant)
         acct["requests"] += 1
         acct["lanes"] += req.n_lanes
         acct["nf"] += result.nf
@@ -281,6 +303,36 @@ class EnsembleService:
             idx, tok = req._wq_lease
             self._wq.complete(idx, tok)
         ticket._complete(result)
+
+    def _fail_request(self, req: SolveRequest, error: str) -> None:
+        """Permanently fail a request (retry budget exhausted): release its
+        capacity and lease, set the ticket's error.  Idempotent like
+        `_finish`."""
+        with self._lock:
+            ticket = self._tickets.pop(id(req), None)
+            if ticket is None:
+                return
+            self._inflight.pop(id(req), None)
+            self._pending -= 1
+        if req._wq_lease is not None:
+            idx, tok = req._wq_lease
+            self._wq.complete(idx, tok)
+        ticket._fail(error)
+
+    def _record_pool_failure(self, pool, exc: Exception) -> None:
+        """A pool pump raised: charge the failure to every affected tenant,
+        then retry or permanently fail the affected requests."""
+        error = f"{type(exc).__name__}: {exc}"
+        reqs = pool.inflight_requests()
+        for req in reqs:
+            req.failures += 1
+            acct = self._acct(req.tenant)
+            acct["failures"] += 1
+            acct["last_error"] = error
+        for req in reqs:
+            if req.failures > self.max_request_retries:
+                pool.evict(req)
+                self._fail_request(req, error)
 
     # -- scheduling -----------------------------------------------------------
 
@@ -315,7 +367,11 @@ class EnsembleService:
             seen.add(idx)
         worked = False
         for key, pool in list(self._pools.items()):
-            worked = pool.pump() or worked
+            try:
+                worked = pool.pump() or worked
+            except Exception as exc:     # degraded, not down: other pools
+                self._record_pool_failure(pool, exc)   # keep serving
+                worked = True
             if key[0] == "batch" and not pool.busy:
                 # batch pools are one-shot; drop them so per-request keys
                 # (adaptive-SDE lane_offset) don't accumulate forever

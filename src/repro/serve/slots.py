@@ -90,6 +90,30 @@ class SlotPool:
     def busy(self) -> bool:
         return bool(self.staged) or any(s is not None for s in self.slots)
 
+    def inflight_requests(self) -> list:
+        """Distinct requests with lanes in slots or staged (failure
+        attribution — see EnsembleService._record_pool_failure)."""
+        seen, out = set(), []
+        for entry in list(self.slots) + list(self.staged):
+            if entry is None:
+                continue
+            req = entry[0]
+            if id(req) not in seen:
+                seen.add(id(req))
+                out.append(req)
+        return out
+
+    def evict(self, req) -> None:
+        """Drop every lane of `req` from the pool (permanent failure):
+        staged lanes vanish, occupied slots are freed and scheduled for a
+        filler scrub so their carry columns stop costing segment work."""
+        self.staged = deque(e for e in self.staged if e[0] is not req)
+        for slot in range(self.B):
+            if self.slots[slot] is not None and self.slots[slot][0] is req:
+                self.slots[slot] = None
+                if self.carry is not None:
+                    self._scrub.add(slot)
+
     # -- one scheduling round -------------------------------------------------
 
     def _stage_lane_cols(self, slot: int, req, row: int) -> None:
@@ -201,15 +225,24 @@ class BatchPool:
     def busy(self) -> bool:
         return bool(self.staged)
 
+    def inflight_requests(self) -> list:
+        return list(self.staged)
+
+    def evict(self, req) -> None:
+        self.staged = [r for r in self.staged if r is not req]
+
     def pump(self) -> bool:
         if not self.staged:
             return False
-        reqs, self.staged = self.staged, []
+        # staged is cleared only after the solve succeeds: a pump exception
+        # leaves the batch intact for the service's retry/fail ladder
+        reqs = list(self.staged)
         u0s = np.concatenate([r.u0s for r in reqs], axis=0)
         ps = np.concatenate([r.ps for r in reqs], axis=0)
         ep = EnsembleProblem(self.prob, u0s.shape[0], u0s=u0s, ps=ps)
         res = solve_ensemble_local(ep, alg=self.spec.name,
                                    **self.solve_kwargs)
+        self.staged = []
         naccept = np.broadcast_to(np.asarray(res.naccept), (u0s.shape[0],))
         nreject = np.broadcast_to(np.asarray(res.nreject), (u0s.shape[0],))
         attempts = naccept.astype(np.int64) + nreject.astype(np.int64)

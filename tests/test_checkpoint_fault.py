@@ -163,3 +163,92 @@ def test_work_queue_push_dynamic():
     assert q.claim() is None
     assert q.complete(idx, tok)
     assert q.finished
+
+
+# ---------------------------------------------------------------------------
+# crash-mid-save atomicity: SIGKILL a real writer at each stage of `save`
+# ---------------------------------------------------------------------------
+
+CRASH_SCRIPT = r"""
+import sys
+import jax.numpy as jnp
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.dist.chaos import install_ckpt_write_crash
+
+ckpt_dir, stage, mode, tear = sys.argv[1:5]
+tree = {"w": jnp.arange(6.0), "s": jnp.asarray(1)}
+ckpt_lib.save(ckpt_dir, 1, tree, extra={"tag": "clean"})
+if stage == "pre_rename":
+    # publish step 2 once, so the crash lands mid same-step OVERWRITE —
+    # after the predecessor was renamed aside, before the replacement landed
+    ckpt_lib.save(ckpt_dir, 2, {"w": jnp.full(6, 2.0), "s": jnp.asarray(2)},
+                  extra={"tag": "first"})
+install_ckpt_write_crash(stage=stage, tear_arrays=(tear == "tear"))
+bad = {"w": jnp.full(6, 9.0), "s": jnp.asarray(9)}
+h = ckpt_lib.save(ckpt_dir, 2, bad, extra={"tag": "doomed"},
+                  async_write=(mode == "async"))
+if h is not None:
+    h.join()
+print("SURVIVED")
+"""
+
+
+def _crash_save(ckpt_dir, stage, mode, tear="no"):
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-c", CRASH_SCRIPT, ckpt_dir, stage, mode, tear],
+        capture_output=True, text=True, timeout=300, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _assert_previous_step_survives(ckpt_dir, out):
+    assert out.returncode == -9, (out.returncode, out.stdout,
+                                  out.stderr[-2000:])
+    assert "SURVIVED" not in out.stdout
+    assert ckpt_lib.available_steps(ckpt_dir) == [1]
+    like = {"w": np.zeros(6), "s": np.asarray(0)}
+    step, tree, extra = ckpt_lib.restore_latest(ckpt_dir, like)
+    assert step == 1 and extra["tag"] == "clean"
+    np.testing.assert_array_equal(np.asarray(tree["w"]), np.arange(6.0))
+    # the dead writer's debris is uniquely named and prunable
+    ckpt_lib.prune(ckpt_dir, keep=2)
+    assert all(not d.startswith((".tmp_step_", ".old_step_"))
+               for d in os.listdir(ckpt_dir))
+    assert ckpt_lib.available_steps(ckpt_dir) == [1]
+
+
+def test_crash_mid_save_sync_modes(tmp_path):
+    """SIGKILL the writer process at every save stage (sync mode): payload
+    written but unpublished ("arrays"), tmp complete with a TORN arrays file
+    ("meta" + tear), and mid same-step overwrite after the predecessor was
+    moved aside ("pre_rename").  In every case `restore_latest` returns the
+    previous COMPLETE step, bitwise intact."""
+    for stage, tear in (("arrays", "no"), ("meta", "tear"),
+                        ("pre_rename", "no")):
+        d = str(tmp_path / f"{stage}_{tear}")
+        _assert_previous_step_survives(d, _crash_save(d, stage, "sync", tear))
+
+
+def test_crash_mid_save_async_mode(tmp_path):
+    """Same contract in async mode: the background writer thread dies with
+    the process; the host-memory snapshot it was flushing is lost, the
+    previous on-disk step is not."""
+    for stage in ("arrays", "pre_rename"):
+        d = str(tmp_path / stage)
+        _assert_previous_step_survives(d, _crash_save(d, stage, "async"))
+
+
+def test_prune_keeps_newest_and_clears_debris(tmp_path):
+    t = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        ckpt_lib.save(str(tmp_path), s, t)
+    os.makedirs(tmp_path / ".tmp_step_9_123_deadbeef")
+    os.makedirs(tmp_path / ".old_step_3_cafef00d")
+    ckpt_lib.prune(str(tmp_path), keep=2)
+    assert ckpt_lib.available_steps(str(tmp_path)) == [3, 4]
+    assert sorted(os.listdir(tmp_path)) == ["step_3", "step_4"]
+    ckpt_lib.prune(str(tmp_path), keep=0)
+    assert ckpt_lib.available_steps(str(tmp_path)) == []

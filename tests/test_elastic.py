@@ -1,0 +1,320 @@
+"""Elastic fault-tolerant sharded ensembles (repro.dist.elastic).
+
+The acceptance bar: a run interrupted by SIGKILL on one shard, re-sharded
+over a DIFFERENT number of survivors and resumed from the latest snapshot,
+produces trajectories bitwise identical to an uninterrupted run — ODE
+(adaptive tsit5) and SDE (counter-RNG em) both, via a sacrificial
+subprocess.  In-process tests cover the same contract for clean shard loss
+(ShardFailure), one-shot methods (rosenbrock's batch-coupled gates, the
+adaptive-SDE Brownian tree), checkpoint-write crashes, disk resume onto a
+different shard count, and the degradation ladder's partial results.
+
+Everything is float64 (conftest enables x64) with tile_width=4 — the
+measured bitwise-compatible width family (docs/architecture.md); the
+reference is always `solve_ensemble_local(..., ensemble="kernel",
+backend="xla", lane_tile=4)`, the exact program the tiles run.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.de_problems import (gbm_problem, lorenz_ensemble,
+                                       rober_ensemble)
+from repro.core import EnsembleProblem, solve_ensemble_local
+from repro.core.api import solve_ensemble_elastic
+from repro.dist.chaos import ChaosMonkey
+from repro.dist.elastic import STATUS_SHARD_LOST, ElasticSupervisor
+
+F64 = jnp.float64
+
+ODE_KW = dict(tile_width=4, segment_steps=32, t0=0.0, tf=2.0, dt0=1e-2,
+              rtol=1e-6, atol=1e-6, backoff_base=0.0)
+SDE_KW = dict(tile_width=4, segment_steps=64, t0=0.0, tf=1.0, dt0=1.0 / 256,
+              n_steps=256, seed=7, backoff_base=0.0)
+
+
+def _lorenz():
+    return lorenz_ensemble(12, dtype=F64)
+
+
+def _gbm(n=12):
+    return EnsembleProblem(gbm_problem(r=1.5, v=0.2, dtype=F64), n)
+
+
+def _ref_ode(ep):
+    return solve_ensemble_local(ep, alg="tsit5", ensemble="kernel",
+                                backend="xla", t0=0.0, tf=2.0, dt0=1e-2,
+                                rtol=1e-6, atol=1e-6, lane_tile=4)
+
+
+def _ref_sde(ep):
+    return solve_ensemble_local(ep, alg="em", ensemble="kernel",
+                                backend="xla", t0=0.0, tf=1.0, dt0=1.0 / 256,
+                                n_steps=256, seed=7, lane_tile=4)
+
+
+def _assert_bitwise(res, ref):
+    np.testing.assert_array_equal(res.u_final, np.asarray(ref.u_final))
+    np.testing.assert_array_equal(res.t_final, np.asarray(ref.t_final))
+    np.testing.assert_array_equal(res.naccept, np.asarray(ref.naccept))
+    np.testing.assert_array_equal(res.nreject, np.asarray(ref.nreject))
+    assert (res.status == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# clean-run parity: elastic == the front-door kernel solve, bitwise
+# ---------------------------------------------------------------------------
+
+def test_elastic_clean_parity_ode(tmp_path):
+    """No failures injected: the segmented, sharded, snapshotting run is
+    bitwise identical to one `solve_ensemble_local` kernel call — the
+    supervision machinery is invisible in the numbers."""
+    ep = _lorenz()
+    res = solve_ensemble_elastic(ep, "tsit5", ckpt_dir=str(tmp_path),
+                                 n_shards=3, **ODE_KW)
+    ref = _ref_ode(ep)
+    _assert_bitwise(res, ref)
+    assert res.nf == int(np.asarray(ref.nf).sum())
+    assert res.report["mode"] == "segment"
+    assert res.report["snapshots"] >= 1 and res.report["failures"] == []
+
+
+# ---------------------------------------------------------------------------
+# kill a shard in-process (ShardFailure): re-shard, roll back, stay bitwise
+# ---------------------------------------------------------------------------
+
+def test_kill_reshard_bitwise_ode(tmp_path):
+    """Shard 1 dies at epoch 2; its tiles roll back to the epoch-1 snapshot
+    and are re-dealt over the two survivors.  Replayed segments are exact
+    no-ops on already-done lanes and identical programs on live ones, so the
+    final state carries no trace of the failure."""
+    ep = _lorenz()
+    chaos = ChaosMonkey(schedule=[(2, 1, "kill")])
+    sup = ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=3,
+                            chaos=chaos, **ODE_KW)
+    res = sup.run()
+    _assert_bitwise(res, _ref_ode(ep))
+    assert [f["kind"] for f in res.report["failures"]] == ["kill"]
+    assert res.report["reshards"] >= 1
+    assert res.report["restored_tiles"] >= 1
+    assert 1 not in res.report["alive_shards"]
+
+
+def test_kill_reshard_bitwise_sde(tmp_path):
+    """Same bar for the fixed-dt SDE engine: counter-RNG streams are keyed
+    by GLOBAL lane index, so a lane replayed on a different shard redraws
+    exactly the noise increments it would have drawn anywhere."""
+    ep = _gbm()
+    chaos = ChaosMonkey(schedule=[(2, 0, "kill")])
+    sup = ElasticSupervisor(ep, "em", ckpt_dir=str(tmp_path), n_shards=3,
+                            chaos=chaos, **SDE_KW)
+    res = sup.run()
+    _assert_bitwise(res, _ref_sde(ep))
+    assert res.report["failures"] and res.report["reshards"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# one-shot methods: lost shards re-run whole tiles, results identical
+# ---------------------------------------------------------------------------
+
+def test_oneshot_rosenbrock_kill_bitwise(tmp_path):
+    """Rosenbrock's lazy-W gates are batch-coupled, so it runs tiles
+    one-shot.  A kill costs only the in-flight tile; the re-run is the same
+    program over the same lane content — clean and killed runs agree
+    bitwise, dense saves included."""
+    ep = rober_ensemble(8)
+    kw = dict(tile_width=4, segment_steps=32, dt0=1e-6, rtol=1e-6, atol=1e-8,
+              backoff_base=0.0)
+    sup = ElasticSupervisor(ep, "rosenbrock23", ckpt_dir=str(tmp_path / "a"),
+                            n_shards=2, **kw)
+    clean = sup.run()
+    assert clean.report["mode"] == "oneshot"
+    chaos = ChaosMonkey(schedule=[(1, 1, "kill")])
+    sup2 = ElasticSupervisor(ep, "rosenbrock23", ckpt_dir=str(tmp_path / "b"),
+                             n_shards=2, chaos=chaos, **kw)
+    killed = sup2.run()
+    np.testing.assert_array_equal(killed.u_final, clean.u_final)
+    np.testing.assert_array_equal(killed.naccept, clean.naccept)
+    np.testing.assert_array_equal(killed.status, clean.status)
+    assert killed.njac == clean.njac and killed.nfact == clean.nfact
+    assert killed.us is not None and clean.us is not None
+    np.testing.assert_array_equal(killed.us, clean.us)
+    assert killed.report["failures"]
+
+
+def test_oneshot_adaptive_sde_kill_bitwise(tmp_path):
+    """Adaptive SDE (dt-path-dependent Brownian tree) also rides the
+    one-shot path; a killed-and-retried tile re-quantizes onto the same
+    global tree, so killed == clean bitwise."""
+    ep = _gbm(8)
+    kw = dict(tile_width=4, t0=0.0, tf=1.0, dt0=0.05, adaptive=True,
+              rtol=1e-3, atol=1e-5, seed=3, error_est="embedded",
+              backoff_base=0.0)
+    sup = ElasticSupervisor(ep, "em", ckpt_dir=str(tmp_path / "a"),
+                            n_shards=2, **kw)
+    clean = sup.run()
+    assert clean.report["mode"] == "oneshot"
+    chaos = ChaosMonkey(schedule=[(1, 0, "kill")])
+    sup2 = ElasticSupervisor(ep, "em", ckpt_dir=str(tmp_path / "b"),
+                             n_shards=2, chaos=chaos, **kw)
+    killed = sup2.run()
+    np.testing.assert_array_equal(killed.u_final, clean.u_final)
+    np.testing.assert_array_equal(killed.naccept, clean.naccept)
+    assert killed.report["failures"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-write crash: previous snapshot stays the restore point
+# ---------------------------------------------------------------------------
+
+def test_ckpt_crash_skips_one_snapshot_stays_bitwise(tmp_path):
+    """A crash during the epoch-2 snapshot write loses that snapshot only:
+    the atomic layer leaves epoch 1 restorable, the supervisor records the
+    failure and keeps solving — the result is untouched."""
+    ep = _lorenz()
+    chaos = ChaosMonkey(schedule=[(2, -1, "ckpt_crash")])
+    sup = ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=2,
+                            chaos=chaos, **ODE_KW)
+    res = sup.run()
+    _assert_bitwise(res, _ref_ode(ep))
+    assert [f["kind"] for f in res.report["failures"]] == ["ckpt_crash"]
+    assert res.report["snapshots"] == res.report["epochs"] - 1
+
+
+# ---------------------------------------------------------------------------
+# disk resume: restore the newest snapshot onto a DIFFERENT shard count
+# ---------------------------------------------------------------------------
+
+def test_disk_resume_different_shard_count_bitwise(tmp_path):
+    """Snapshots are unsharded (host-gathered full tile carries), so a run
+    stopped after 2 epochs on 3 shards resumes on 2 shards — and the
+    stitched run equals an uninterrupted one bitwise."""
+    ep = _lorenz()
+    part = ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=3,
+                             max_epochs=2, **ODE_KW).run()
+    assert (part.status == 1).any()      # genuinely unfinished mid-run
+    sup2 = ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=2,
+                             **ODE_KW)
+    res = sup2.run(resume=True)
+    assert res.report["resumed_from_epoch"] == 2
+    _assert_bitwise(res, _ref_ode(ep))
+
+
+def test_resume_identity_mismatch_rejected(tmp_path):
+    """Tile width is part of the run identity (XLA codegen is
+    width-sensitive at the ulp level): resuming a B=4 snapshot with B=8
+    must be refused, not silently re-tiled."""
+    ep = _lorenz()
+    ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=2,
+                      max_epochs=1, **ODE_KW).run()
+    bad = dict(ODE_KW, tile_width=8)
+    sup = ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=2,
+                            **bad)
+    with pytest.raises(ValueError, match="tile_width"):
+        sup.run(resume=True)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder: bail past max_failures with a PARTIAL result
+# ---------------------------------------------------------------------------
+
+def test_degradation_ladder_partial_result(tmp_path):
+    """Every epoch kills a shard (p_kill=1): the ladder walks down to a
+    single revived host and, past max_failures, bails to a partial result —
+    unfinished lanes carry STATUS_SHARD_LOST instead of the run hanging or
+    raising."""
+    ep = _lorenz()
+    chaos = ChaosMonkey(seed=1, p_kill=1.0)
+    kw = dict(ODE_KW, segment_steps=8)
+    sup = ElasticSupervisor(ep, "tsit5", ckpt_dir=str(tmp_path), n_shards=2,
+                            max_failures=3, chaos=chaos, **kw)
+    res = sup.run()
+    assert res.report["bailed"]
+    assert res.report["degraded_single_host"]
+    assert res.report["ladder"] and res.report["ladder"][-1] == 1
+    got = set(np.unique(res.status).tolist())
+    assert STATUS_SHARD_LOST in got
+    assert got <= {0, STATUS_SHARD_LOST}
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: SIGKILL a real process mid-run, resume, diff bitwise
+# ---------------------------------------------------------------------------
+
+ELASTIC_SCRIPT = r"""
+import sys
+import numpy as np, jax, jax.numpy as jnp
+jax.config.update("jax_enable_x64", True)
+from repro.configs.de_problems import gbm_problem, lorenz_ensemble
+from repro.core import EnsembleProblem, solve_ensemble_local
+from repro.dist.chaos import ChaosMonkey
+from repro.dist.elastic import ElasticSupervisor
+
+phase, case, ckpt_dir = sys.argv[1], sys.argv[2], sys.argv[3]
+
+if case == "ode":
+    ep = lorenz_ensemble(12, dtype=jnp.float64)
+    alg = "tsit5"
+    kw = dict(tile_width=4, segment_steps=32, t0=0.0, tf=2.0, dt0=1e-2,
+              rtol=1e-6, atol=1e-6, backoff_base=0.0)
+    ref_kw = dict(alg=alg, ensemble="kernel", backend="xla", t0=0.0, tf=2.0,
+                  dt0=1e-2, rtol=1e-6, atol=1e-6, lane_tile=4)
+else:
+    ep = EnsembleProblem(gbm_problem(r=1.5, v=0.2, dtype=jnp.float64), 12)
+    alg = "em"
+    kw = dict(tile_width=4, segment_steps=64, t0=0.0, tf=1.0, dt0=1.0 / 256,
+              n_steps=256, seed=7, backoff_base=0.0)
+    ref_kw = dict(alg=alg, ensemble="kernel", backend="xla", t0=0.0, tf=1.0,
+                  dt0=1.0 / 256, n_steps=256, seed=7, lane_tile=4)
+
+if phase == "kill":
+    # epoch 1 commits + snapshots, then shard 0's first tile of epoch 2
+    # SIGKILLs the whole process — an uncatchable hard kill
+    chaos = ChaosMonkey(schedule=[(2, 0, "sigkill")])
+    sup = ElasticSupervisor(ep, alg, ckpt_dir=ckpt_dir, n_shards=3,
+                            chaos=chaos, **kw)
+    sup.run()
+    print("UNREACHABLE")                 # parent asserts we never got here
+else:
+    sup = ElasticSupervisor(ep, alg, ckpt_dir=ckpt_dir, n_shards=2, **kw)
+    res = sup.run(resume=True)
+    assert res.report["resumed_from_epoch"] >= 1, res.report
+    ref = solve_ensemble_local(ep, **ref_kw)
+    assert np.array_equal(res.u_final, np.asarray(ref.u_final))
+    assert np.array_equal(res.t_final, np.asarray(ref.t_final))
+    assert np.array_equal(res.naccept, np.asarray(ref.naccept))
+    assert np.array_equal(res.nreject, np.asarray(ref.nreject))
+    assert (res.status == 0).all()
+    print("ELASTIC-RESUME-OK")
+"""
+
+
+def _run_phase(phase, case, ckpt_dir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-c", ELASTIC_SCRIPT, phase, case, ckpt_dir],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.mark.parametrize("case", ["ode", "sde"])
+def test_sigkill_resume_bitwise_subprocess(case, tmp_path):
+    """THE acceptance test.  Phase 1: a 3-shard run is SIGKILLed (real
+    signal 9, no cleanup) mid-epoch.  Phase 2: a NEW process resumes the
+    on-disk snapshot onto 2 shards and finishes; the stitched trajectories
+    are bitwise identical to an uninterrupted single-call reference —
+    adaptive ODE and fixed-dt counter-RNG SDE both."""
+    ckpt = str(tmp_path / "ck")
+    kill = _run_phase("kill", case, ckpt)
+    assert kill.returncode == -9, (
+        kill.returncode, kill.stdout, kill.stderr[-2000:])
+    assert "UNREACHABLE" not in kill.stdout
+    assert os.path.isdir(ckpt), "SIGKILL landed before the first snapshot"
+    resume = _run_phase("resume", case, ckpt)
+    assert resume.returncode == 0, resume.stderr[-4000:]
+    assert "ELASTIC-RESUME-OK" in resume.stdout

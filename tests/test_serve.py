@@ -378,3 +378,48 @@ def test_resumable_capability_flags():
     assert get_method("tsit5").resumable
     assert get_method("em").resumable
     assert not get_method("rosenbrock23").resumable
+
+
+# ---------------------------------------------------------------------------
+# failure accounting: degraded-but-serving vs healthy
+# ---------------------------------------------------------------------------
+
+def test_pump_failure_counter_and_last_error_per_tenant():
+    """A request whose RHS raises at trace time must not take the service
+    down: the failure is charged to ITS tenant (`failures` counter +
+    `last_error` in accounting), retried up to max_request_retries, then
+    failed permanently (ticket.error set, result None, capacity released) —
+    while another tenant's healthy request completes normally."""
+    from repro.core.problem import ODEProblem
+
+    def bad_rhs(u, p, t):
+        raise RuntimeError("boom rhs")
+
+    bad_prob = ODEProblem(bad_rhs, jnp.asarray([1.0], F32),
+                          jnp.asarray([1.0], F32), (0.0, 1.0))
+    bad = EnsembleProblem(bad_prob, 4, ps=np.ones((4, 1), np.float32))
+    prob, (sa, *_rest) = _lorenz_requests()
+
+    svc = EnsembleService(slot_width=4, segment_steps=16,
+                          max_request_retries=2)
+    tb = svc.submit(bad, alg="tsit5", tf=1.0, tenant="chaos")
+    th = svc.submit(sa, alg="tsit5", tf=0.5, tenant="steady")
+    svc.drain()
+
+    # failing tenant: retried max_request_retries times, then failed for good
+    assert tb.done and tb.result is None
+    assert "boom rhs" in tb.error
+    chaos = svc.accounting["chaos"]
+    assert chaos["failures"] == 3            # initial attempt + 2 retries
+    assert "boom rhs" in chaos["last_error"]
+    assert chaos["requests"] == 0            # never completed
+
+    # healthy tenant: served, and visibly healthy in accounting
+    assert th.done and th.result is not None and th.result.status == 0
+    ref = _fresh_erk(sa, 0.5)
+    assert np.array_equal(th.result.u_final, np.asarray(ref.u_final))
+    steady = svc.accounting["steady"]
+    assert steady["failures"] == 0 and steady["last_error"] is None
+
+    # capacity was released: the service is drained, not wedged
+    assert svc._pending == 0 and svc._wq.finished

@@ -160,3 +160,119 @@ def test_threaded_workers_retire_each_item_exactly_once():
         t.join()
     assert q.finished
     assert accepted == [1] * n       # exactly-once retirement
+
+
+# ---------------------------------------------------------------------------
+# expiry-reclaim backoff (I5): dead-worker items must not thrash
+# ---------------------------------------------------------------------------
+
+def _clocked_queue(**kw):
+    """Queue on an injected manual clock — backoff schedules without sleep."""
+    t = [0.0]
+    q = WorkQueue(clock=lambda: t[0], **kw)
+    return q, t
+
+
+def test_expiry_reclaim_backs_off_exponentially():
+    """I5: the FIRST expiry reclaims at the base timeout; every further
+    expiry of the same item multiplies its effective lease timeout by
+    backoff_factor, capped at backoff_max_mult x base."""
+    q, t = _clocked_queue(n_items=1, tile=1, timeout=1.0, backoff_factor=2.0,
+                          backoff_max_mult=8.0, backoff_jitter=0.0)
+    assert q.claim() is not None          # fresh lease at t=0
+    t[0] = 0.99
+    assert q.claim() is None              # not yet expired
+    t[0] = 1.0
+    assert q.claim() is not None          # expiry #1: base timeout
+    t[0] += 1.99
+    assert q.claim() is None              # now needs 2x base
+    t[0] += 0.01
+    assert q.claim() is not None          # expiry #2 at 2x
+    t[0] += 3.99
+    assert q.claim() is None              # now needs 4x base
+    t[0] += 0.01
+    assert q.claim() is not None          # expiry #3 at 4x
+    t[0] += 7.99
+    assert q.claim() is None              # 8x base
+    t[0] += 0.01
+    assert q.claim() is not None          # expiry #4 at 8x
+    t[0] += 7.99
+    assert q.claim() is None              # capped: STILL 8x, not 16x
+    t[0] += 0.01
+    got = q.claim()
+    assert got is not None
+    idx, _, tok = got
+    assert q.complete(idx, tok)
+    assert q.finished
+
+
+def test_backoff_jitter_is_bounded_and_deterministic():
+    """Jitter stretches the backed-off timeout by at most backoff_jitter x,
+    never shrinks it, and is a pure function of (seed, item, attempt):
+    two queues replaying the same sequence agree exactly."""
+    waits = []
+    for _ in range(2):
+        q, t = _clocked_queue(n_items=1, tile=1, timeout=1.0,
+                              backoff_factor=2.0, backoff_max_mult=8.0,
+                              backoff_jitter=0.25, jitter_seed=7)
+        assert q.claim() is not None
+        t[0] = 1.0
+        assert q.claim() is not None      # first expiry: base, jitter-free
+        run = []
+        for mult in (2.0, 4.0):
+            lo, hi = mult, mult * 1.25
+            t[0] += lo - 1e-9
+            assert q.claim() is None      # below the un-jittered floor: never
+            lo_probe = t[0]
+            while q.claim() is None:      # scan to the jittered deadline
+                t[0] += mult / 256.0
+            run.append(t[0] - lo_probe)
+            assert t[0] - lo_probe <= hi - lo + mult / 128.0
+        waits.append(run)
+    assert waits[0] == waits[1]           # deterministic across queues
+
+
+def test_release_resets_backoff():
+    """A voluntary release (live worker handing the item back) resets the
+    expiry ladder: the next lease expires at the base timeout again."""
+    q, t = _clocked_queue(n_items=1, tile=1, timeout=1.0, backoff_factor=2.0,
+                          backoff_jitter=0.0)
+    q.claim()
+    t[0] = 1.0
+    q.claim()                             # expiry #1
+    t[0] += 2.0
+    idx, _, tok = q.claim()               # expiry #2 (2x)
+    assert q.release(idx, tok)
+    got = q.claim()                       # immediate: released, not expired
+    assert got is not None
+    idx, _, tok = got
+    t[0] += 0.999
+    assert q.claim() is None
+    t[0] += 0.001
+    assert q.claim() is not None          # base timeout again, not 4x
+    assert not q.complete(idx, tok)       # stale after the re-lease
+
+
+def test_zero_timeout_stays_immediate_under_backoff():
+    """timeout=0 ("every lease already expired" test mode) is unaffected by
+    backoff: 0 x anything = 0, so reclaim stays immediate at every attempt."""
+    q = WorkQueue(n_items=1, tile=1, timeout=0.0)
+    toks = [q.claim()[2] for _ in range(5)]
+    assert toks == [1, 2, 3, 4, 5]
+
+
+def test_lease_expiry_storm_reclaims_all():
+    """`chaos.force_lease_expiry` (mass worker death) makes every live lease
+    reclaimable at once; generation tokens still fence the dead cohort."""
+    from repro.dist.chaos import force_lease_expiry
+    q = WorkQueue(n_items=4, tile=1, timeout=3600.0)
+    dead = [q.claim() for _ in range(4)]
+    assert q.claim() is None              # all leased, nothing expired
+    assert force_lease_expiry(q) == 4
+    live = [q.claim() for _ in range(4)]
+    assert all(c is not None for c in live)
+    for (idx, _, tok) in dead:
+        assert not q.complete(idx, tok)   # dead cohort fenced out
+    for (idx, _, tok) in live:
+        assert q.complete(idx, tok)
+    assert q.finished
